@@ -1,0 +1,25 @@
+"""Paper Eq. 11: Average Execution Time vs system MTBE per strategy, plus the
+advisor's crossover points (which protection level wins where)."""
+from benchmarks.common import emit, timeit
+from repro.core import temporal_model as tm
+from repro.core.policy import advise
+
+
+def main() -> None:
+    p = tm.PAPER_TABLE3["JACOBI"]
+    mtbes = [1, 2, 5, 10, 20, 50, 100, 1000]
+    us = timeit(lambda: [tm.aet_strategy(p, "single_ckpt", m) for m in mtbes],
+                iters=5)
+    for strat in ("baseline", "detection", "multi_ckpt", "single_ckpt"):
+        vals = ";".join(f"{m}h:{tm.aet_strategy(p, strat, m):.2f}"
+                        for m in mtbes)
+        emit(f"aet_curve_{strat}", us, vals)
+    # advisor crossovers
+    picks = []
+    for m in mtbes:
+        picks.append(f"{m}h->{advise(p, m).strategy}")
+    emit("aet_advisor_picks", 0.0, ";".join(picks))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Paper Table 5 + Sec. 4.4: convenience of saving multiple checkpoints —
+when do k+1 rollbacks beat safe-stop+relaunch, and when to start
+checkpointing at all."""
+from benchmarks.common import emit, timeit
+from repro.core import temporal_model as tm
+
+
+def main() -> None:
+    p = tm.PAPER_TABLE3["JACOBI"]
+    us = timeit(lambda: tm.convenience_table(p), iters=5)
+    rows = tm.convenience_table(p)
+    cells = []
+    for r in rows:
+        ks = ";".join(f"k{k}={'NA' if v is None else f'{v:.2f}'}"
+                      for k, v in sorted(r["k"].items()))
+        cells.append(f"X={r['X']:.0%}:det={r['detection']:.2f}|{ks}")
+    emit("table5_convenience", us, " ".join(cells))
+    emit("sec44_thresholds", 0.0,
+         f"no_ckpt_below_X={tm.min_progress_for_checkpointing(p):.4f};"
+         f"k1_worth_above_X={tm.min_progress_for_k(p, 1):.4f};"
+         f"k2_worth_above_X={tm.min_progress_for_k(p, 2):.4f}")
+
+
+if __name__ == "__main__":
+    main()

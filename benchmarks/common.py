@@ -1,0 +1,21 @@
+"""Shared benchmark utilities."""
+import sys
+import time
+from typing import Callable
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

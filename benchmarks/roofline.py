@@ -1,0 +1,73 @@
+"""Roofline report generator: reads artifacts/dryrun/*.json and renders the
+EXPERIMENTS.md §Roofline table (per arch x shape x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS ratio, memory fit)."""
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import emit
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load_cells() -> List[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def markdown_table(cells: List[dict], mesh: str = "single",
+                   flavor: str = "baseline") -> str:
+    rows = ["| arch | shape | fit | micro | compute s | memory s | coll s | "
+            "dominant | useful FLOPs |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("mesh") != mesh or c.get("flavor") != flavor:
+            continue
+        if c.get("status") == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | "
+                        f"skipped | — |")
+            continue
+        if c.get("status") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | "
+                        f"FAILED | — |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | "
+            f"{'Y' if c['memory']['fits_16GiB'] else 'N'} | "
+            f"{c.get('microbatches', 1)} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {c['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    failed = [c for c in cells if c.get("status") == "failed"]
+    emit("roofline_cells", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};failed={len(failed)}")
+    if not ok:
+        return
+    doms = {}
+    for c in ok:
+        doms[c["roofline"]["dominant"]] = doms.get(c["roofline"]["dominant"], 0) + 1
+    emit("roofline_dominant_histogram", 0.0,
+         ";".join(f"{k}:{v}" for k, v in sorted(doms.items())))
+    fits = sum(c["memory"]["fits_16GiB"] for c in ok)
+    emit("roofline_memory_fit", 0.0, f"fits={fits}/{len(ok)}")
+    worst = sorted((c for c in ok if c["mesh"] == "single"),
+                   key=lambda c: c["useful_flops_ratio"])[:3]
+    emit("roofline_worst_useful_ratio", 0.0,
+         ";".join(f"{c['arch']}/{c['shape']}={c['useful_flops_ratio']:.2f}"
+                  for c in worst))
+    print(markdown_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+    table2_*   — Sec. 4.1/4.2 scenario campaign (64 injections)
+    table3_*   — Sec. 4.3 execution-parameter measurement (f_d, t_cs, t_ca...)
+    table4_*   — Sec. 4.3 strategy times (model vs published values)
+    table5_*   — Sec. 4.4 convenience-of-k analysis
+    aet_*      — Sec. 3.4 Eq. 11 AET-vs-MTBE curves + advisor picks
+    fingerprint_* — SEDAR comparison hot-spot throughput
+    roofline_* — dry-run roofline aggregation (deliverable g)
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_strategies",
+    "benchmarks.bench_convenience",
+    "benchmarks.bench_aet",
+    "benchmarks.bench_scenarios",
+    "benchmarks.bench_fingerprint",
+    "benchmarks.bench_overhead",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{modname},0.0,FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

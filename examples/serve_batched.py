@@ -1,0 +1,59 @@
+"""Batched serving with SEDAR dual-replica detection on the decode path.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch recurrentgemma-2b]
+
+Generates greedily from a batch of prompts; with --dual each decode step is
+executed twice and logits fingerprints compared before the token is emitted
+(validate-before-send). With --inject a bit-flip lands on replica 1 mid-
+generation: the server detects it, retries the step and the output stream is
+identical to the clean run.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, TrainConfig, get_config, reduce_for_smoke
+from repro.core.injection import InjectionSpec
+from repro.runtime.serve import SedarServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--dual", action="store_true", default=True)
+    ap.add_argument("--inject", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    rc = RunConfig(model=cfg, train=TrainConfig())
+    spec = None
+    if args.inject:
+        spec = InjectionSpec(leaf_idx=3, flat_idx=9, bit=21,
+                             step=args.prompt_len + 4, replica=1,
+                             target="params")
+    srv = SedarServer(rc, dual=args.dual, inj_spec=spec)
+    params = srv.model.init(jax.random.PRNGKey(0))
+    prompts = {"tokens": jnp.asarray(
+        np.random.RandomState(0).randint(0, min(cfg.vocab_size, 200),
+                                         (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.frontend:
+        prompts["frontend_embeds"] = 0.1 * jnp.ones(
+            (args.batch, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+
+    toks, rep = srv.generate(params, prompts, steps=args.steps)
+    print(f"arch={args.arch} emitted={rep.tokens_emitted} tokens "
+          f"in {rep.wall_s:.2f}s (dual={args.dual})")
+    if rep.detections:
+        print(f"SDC detected at positions {rep.detections}; "
+              f"{rep.retries} step(s) recomputed — output stream clean.")
+    print("first sequence:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""End-to-end driver: train a language model under SEDAR protection, inject a
+real bit-flip mid-run, watch detection + automatic recovery, and verify the
+final state is bit-identical to a fault-free run.
+
+    PYTHONPATH=src python examples/train_with_recovery.py --profile ci
+    PYTHONPATH=src python examples/train_with_recovery.py --profile paper
+
+Profiles:
+    ci     — ~0.5M params, 24 steps (seconds on CPU; used by the harness)
+    paper  — ~100M params, 300 steps (the deliverable-scale run; hours on
+             this CPU container, minutes on real accelerators)
+"""
+import argparse
+import dataclasses
+import shutil
+import time
+
+import numpy as np
+
+from repro.configs import (ModelConfig, RunConfig, SedarConfig, TrainConfig,
+                           get_config, reduce_for_smoke)
+from repro.core.injection import InjectionSpec
+from repro.runtime.train import SedarTrainer
+
+PROFILES = {
+    "ci": dict(
+        model=reduce_for_smoke(get_config("paper-testapp")),
+        train=TrainConfig(global_batch=4, seq_len=16, steps=24,
+                          warmup_steps=4, lr=1e-3),
+        inject_step=9, ckpt=6, validate=6,
+    ),
+    "paper": dict(
+        model=ModelConfig(name="sedar-100m", family="dense", num_layers=12,
+                          d_model=768, num_heads=12, num_kv_heads=4,
+                          head_dim=64, d_ff=3072, vocab_size=32_000,
+                          dtype="float32", param_dtype="float32",
+                          remat="none"),
+        train=TrainConfig(global_batch=8, seq_len=256, steps=300,
+                          warmup_steps=30, lr=3e-4),
+        inject_step=120, ckpt=25, validate=25,
+    ),
+}
+
+
+def run(level: int, profile: dict, workdir: str, inject: bool):
+    shutil.rmtree(workdir, ignore_errors=True)
+    rc = RunConfig(
+        model=profile["model"],
+        train=profile["train"],
+        sedar=SedarConfig(level=level, replication="sequential",
+                          checkpoint_interval=profile["ckpt"],
+                          param_validate_interval=profile["validate"]))
+    spec = None
+    if inject:
+        spec = InjectionSpec(leaf_idx=3, flat_idx=17, bit=21,
+                             step=profile["inject_step"], replica=1,
+                             target="grads")
+    tr = SedarTrainer(rc, workdir, inj_spec=spec)
+    t0 = time.time()
+    _, rep = tr.run(profile["train"].steps)
+    print(f"  [{('faulty' if inject else 'clean')}] {rep.summary()}")
+    for e in rep.detections:
+        print(f"    detection: step={e.step} boundary={e.boundary} "
+              f"effect={e.effect}")
+    for r in rep.recoveries:
+        print(f"    recovery:  {r['kind']} -> ckpt@{r['step']} "
+              f"(rollback #{r['rollbacks']})")
+    return rep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=list(PROFILES), default="ci")
+    ap.add_argument("--level", type=int, default=3, choices=(1, 2, 3))
+    args = ap.parse_args()
+    profile = PROFILES[args.profile]
+    n_params = profile["model"].param_count()
+    print(f"model: {profile['model'].name} ({n_params/1e6:.1f}M params), "
+          f"SEDAR L{args.level}, {profile['train'].steps} steps")
+
+    print("fault-free reference run:")
+    clean = run(args.level, profile, f"/tmp/sedar_ex_clean_{args.profile}",
+                inject=False)
+    print("run with injected bit-flip:")
+    faulty = run(args.level, profile, f"/tmp/sedar_ex_fault_{args.profile}",
+                 inject=True)
+
+    same = np.array_equal(clean.final_state_fp[:, :2],
+                          faulty.final_state_fp[:, :2])
+    print(f"\nfinal-state fingerprints identical to clean run: {same}")
+    if args.level >= 2:
+        assert same, "recovery must reproduce the fault-free trajectory"
+        print("=> SEDAR detected the silent corruption and recovered "
+              "bit-exactly. (paper Secs. 3.2/3.3)")
+
+
+if __name__ == "__main__":
+    main()

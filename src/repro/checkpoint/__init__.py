@@ -1,0 +1,3 @@
+from repro.checkpoint.store import CheckpointStore, Manifest
+
+__all__ = ["CheckpointStore", "Manifest"]

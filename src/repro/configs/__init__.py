@@ -1,0 +1,31 @@
+from repro.configs.base import (
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    SedarConfig,
+    ServeConfig,
+    ShapeSpec,
+    SHAPES,
+    SHAPE_BY_NAME,
+    TrainConfig,
+    reduce_for_smoke,
+    shape_applicable,
+)
+from repro.configs.registry import ASSIGNED_ARCHS, get_config, list_archs
+
+__all__ = [
+    "MeshConfig",
+    "ModelConfig",
+    "RunConfig",
+    "SedarConfig",
+    "ServeConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "SHAPE_BY_NAME",
+    "TrainConfig",
+    "reduce_for_smoke",
+    "shape_applicable",
+    "ASSIGNED_ARCHS",
+    "get_config",
+    "list_archs",
+]

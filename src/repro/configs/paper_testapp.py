@@ -1,0 +1,29 @@
+"""The paper's synthetic test application, adapted.
+
+The paper validates SEDAR on an MPI Master/Worker matrix multiplication
+(C = A x B) with checkpoints cut after every communication phase
+(CK0 / SCATTER / CK1 / BCAST / CK2 / MATMUL / GATHER / CK3 / VALIDATE).
+
+Our analogue is a tiny dense LM whose train step exposes the same boundary
+structure (grad all-reduce == the "send"; optimizer commit == checkpointable
+phase; final param fingerprint == VALIDATE). The scenario campaign in
+core/scenarios.py runs against this config. Additionally, core/scenarios.py
+contains a literal Master/Worker matmul phase machine used to reproduce the
+paper's 64-scenario Table-2 taxonomy exactly.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-testapp",
+    family="dense",
+    num_layers=4,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=1_024,
+    vocab_size=1_024,
+    dtype="float32",
+    param_dtype="float32",
+    remat="none",
+)

@@ -1,0 +1,22 @@
+"""qwen2-0.5b [dense] — arXiv:2407.10671 (hf tier).
+
+24L d_model=896 14H (GQA kv=2, head_dim=64) d_ff=4864 vocab=151936. QKV bias,
+tied embeddings. 14 heads are NOT divisible by TP=16: the sharding resolver
+falls back (head axis replicated, d_ff/d_model sharded) — recorded per artifact.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4_864,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES: Dict[str, str] = {
+    "mistral-large-123b":    "repro.configs.mistral_large_123b",
+    "starcoder2-7b":         "repro.configs.starcoder2_7b",
+    "qwen2-72b":             "repro.configs.qwen2_72b",
+    "qwen2-0.5b":            "repro.configs.qwen2_0_5b",
+    "phi3.5-moe-42b-a6.6b":  "repro.configs.phi35_moe_42b",
+    "dbrx-132b":             "repro.configs.dbrx_132b",
+    "recurrentgemma-2b":     "repro.configs.recurrentgemma_2b",
+    "internvl2-2b":          "repro.configs.internvl2_2b",
+    "seamless-m4t-medium":   "repro.configs.seamless_m4t_medium",
+    "xlstm-125m":            "repro.configs.xlstm_125m",
+    "paper-testapp":         "repro.configs.paper_testapp",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _ARCH_MODULES if k != "paper-testapp"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {', '.join(sorted(_ARCH_MODULES))}"
+        )
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)

@@ -1,0 +1,20 @@
+"""starcoder2-7b [dense] — arXiv:2402.19173 (hf tier).
+
+32L d_model=4608 36H (GQA kv=4, head_dim=128) d_ff=18432 vocab=49152. GQA + RoPE.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4_608,
+    num_heads=36,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18_432,
+    vocab_size=49_152,
+    qkv_bias=True,          # starcoder2 uses bias on linear layers
+    rope_theta=100_000.0,
+    mlp_act="gelu",         # starcoder2 uses a plain GELU MLP (d_ff = 4*d)
+)

@@ -1,0 +1,21 @@
+"""SEDAR core — the paper's contribution as composable JAX modules."""
+from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
+                                  make_pod_comparator, make_pod_injector)
+from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
+                                    pytree_fingerprint, tensor_fingerprint)
+from repro.core.injection import InjectionFlag, InjectionSpec, flip_bit, inject_tree
+from repro.core.policy import Advice, advise
+from repro.core.recovery import (ExternalCounter, MultiCheckpointRecovery,
+                                 RecoveryAction, SafeStop,
+                                 ValidatedCheckpointRecovery, make_recovery)
+from repro.core import scenarios, temporal_model
+
+__all__ = [
+    "DetectionEvent", "SedarSafeStop", "Watchdog", "make_pod_comparator",
+    "make_pod_injector", "fingerprints_equal", "mismatch_report",
+    "pytree_fingerprint", "tensor_fingerprint", "InjectionFlag",
+    "InjectionSpec", "flip_bit", "inject_tree", "Advice", "advise",
+    "ExternalCounter", "MultiCheckpointRecovery", "RecoveryAction",
+    "SafeStop", "ValidatedCheckpointRecovery", "make_recovery",
+    "scenarios", "temporal_model",
+]

@@ -1,0 +1,112 @@
+"""State fingerprinting — SEDAR's comparison primitive.
+
+The paper compares full message buffers between replicated threads (cheap in
+a shared L2). On TPU the replicas are pods, so we compress every tensor into
+a 128-bit fingerprint + 2 diagnostic stats in ONE streaming pass and compare
+only fingerprints across the replica axis (a few hundred bytes over ICI/DCN).
+
+Fingerprint of a tensor (after exact upcast to f32 and bitcast to u32):
+    h1 = sum_i ((x_i XOR (i * C1)) * C2)       mod 2^32  (order-sensitive sum)
+    h2 = sum_i (t XOR (t >> 15)), t = (x_i+i)*C3         (independent mix)
+    s  = sum(x)  (f32)                                   (diagnostic)
+    a  = max(|x|) (f32)                                  (diagnostic)
+
+(Both hashes reduce with modular ADD — XLA lowers add-reductions everywhere
+incl. SPMD partitions; xor-fold reductions are rejected by some backends.)
+
+Both h1 and h2 are associative/commutative reductions over position-mixed
+words, so they vectorize on the VPU, tile cleanly in VMEM (see
+kernels/fingerprint.py for the Pallas version) and are bitwise deterministic.
+A single flipped bit anywhere changes h1 (and almost surely h2).
+
+`pytree_fingerprint` returns a (n_leaves, 4) uint32 array (stats bitcast), so
+replica comparison is a single small array equality.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+C1 = np.uint32(2654435761)   # Knuth multiplicative
+C2 = np.uint32(2246822519)   # xxhash prime
+C3 = np.uint32(3266489917)   # xxhash prime
+
+
+def _to_u32(x) -> jnp.ndarray:
+    """Exact reinterpretation of any dtype as a flat u32 vector."""
+    x = jnp.asarray(x)
+    if x.dtype in (jnp.float64, jnp.int64):  # CPU tests may use 64-bit
+        x = x.astype(jnp.float32) if jnp.issubdtype(x.dtype, jnp.floating) \
+            else x.astype(jnp.int32)
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        x = x.astype(jnp.float32)            # exact upcast
+    if x.dtype == jnp.float32:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    elif x.dtype in (jnp.int32, jnp.uint32):
+        u = x.astype(jnp.uint32)
+    elif x.dtype == jnp.bool_:
+        u = x.astype(jnp.uint32)
+    elif x.dtype in (jnp.int8, jnp.uint8, jnp.int16, jnp.uint16):
+        u = x.astype(jnp.uint32)
+    else:
+        raise TypeError(f"unsupported dtype {x.dtype}")
+    return u.reshape(-1)
+
+
+def tensor_fingerprint(x) -> jnp.ndarray:
+    """-> (4,) uint32: [h1, h2, bits(sum), bits(absmax)]."""
+    u = _to_u32(x)
+    n = u.shape[0]
+    idx = jax.lax.iota(jnp.uint32, n)
+    h1 = jnp.sum((u ^ (idx * C1)) * C2, dtype=jnp.uint32)
+    t2 = (u + idx) * C3
+    h2 = jnp.sum(t2 ^ (t2 >> jnp.uint32(15)), dtype=jnp.uint32)
+    xf = jnp.asarray(x)
+    if jnp.issubdtype(xf.dtype, jnp.floating):
+        xf32 = xf.astype(jnp.float32)
+        s = jnp.sum(xf32)
+        a = jnp.max(jnp.abs(xf32)) if xf.size else jnp.float32(0)
+    else:
+        s = jnp.float32(0)
+        a = jnp.float32(0)
+    sb = jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.uint32)
+    ab = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.uint32)
+    return jnp.stack([h1, h2, sb, ab])
+
+
+def pytree_fingerprint(tree, use_pallas: bool = False) -> jnp.ndarray:
+    """-> (n_leaves, 4) uint32, leaf order = tree_flatten order."""
+    leaves = jax.tree.leaves(tree)
+    if use_pallas:
+        from repro.kernels.ops import fingerprint as fp_kernel
+        fps = [fp_kernel(l) for l in leaves]
+    else:
+        fps = [tensor_fingerprint(l) for l in leaves]
+    return jnp.stack(fps) if fps else jnp.zeros((0, 4), jnp.uint32)
+
+
+def fingerprints_equal(fp_a, fp_b) -> jnp.ndarray:
+    """Exact equality on the hash words (cols 0..1); stats are diagnostics."""
+    return jnp.all(fp_a[..., :2] == fp_b[..., :2])
+
+
+def mismatch_report(tree, fp_a, fp_b):
+    """Host-side: list of (leaf_path, fp_a_row, fp_b_row) that differ."""
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    a = np.asarray(fp_a)
+    b = np.asarray(fp_b)
+    out = []
+    for i, path in enumerate(paths):
+        if not np.array_equal(a[i, :2], b[i, :2]):
+            out.append({
+                "leaf": path,
+                "h_a": [int(a[i, 0]), int(a[i, 1])],
+                "h_b": [int(b[i, 0]), int(b[i, 1])],
+                "sum_a": float(np.frombuffer(a[i, 2].tobytes(), np.float32)[0]),
+                "sum_b": float(np.frombuffer(b[i, 2].tobytes(), np.float32)[0]),
+            })
+    return out

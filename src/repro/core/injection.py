@@ -1,0 +1,132 @@
+"""Controlled fault injection — the paper's workfault generator (Sec. 4.2).
+
+The paper injects a single bit-flip into one of the two replicated threads
+from inside the application code, gated by an external flag file so the
+re-execution after recovery does not re-inject. We reproduce both halves:
+
+  * `inject_bitflip` / `inject_tree`: in-jit, replica-gated, step-gated exact
+    bit flip in a chosen pytree leaf (params / grads / optimizer state).
+  * `InjectionFlag`: the paper's ``injected.txt`` — a host-side flag file
+    *outside* the checkpoint payload, so restarts never re-inject.
+
+Effect classes (paper Sec. 2): TDC (corrupt data that propagates through the
+commit boundary), FSC (corrupt state that only the final/param validation
+sees), LE (corrupt dead data -> no effect), TOE (delay a replica past the
+watchdog timeout). See core/scenarios.py for the scenario campaign.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class InjectionSpec:
+    """Static description of one injection experiment.
+
+    leaf_path: index of the target leaf in tree_flatten order (static).
+    flat_idx : flat element offset within the leaf (dynamic ok).
+    bit      : bit to flip within the element's 32/16-bit pattern.
+    step     : training step at which to inject.
+    replica  : which replica id gets the corruption (the essence of SEDAR
+               detection: the *other* replica stays clean).
+    """
+    leaf_idx: int
+    flat_idx: int
+    bit: int
+    step: int
+    replica: int = 1
+    target: str = "grads"     # grads | params | opt_state  (TDC vs FSC class)
+
+
+def flip_bit(x: jnp.ndarray, flat_idx, bit: int) -> jnp.ndarray:
+    """Flip one bit of one element (exact, dtype-preserving)."""
+    dt = x.dtype
+    shape = x.shape
+    flat = x.reshape(-1)
+    if dt == jnp.float32:
+        u = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+        u = u.at[flat_idx].set(u[flat_idx] ^ jnp.uint32(1 << bit))
+        out = jax.lax.bitcast_convert_type(u, jnp.float32)
+    elif dt == jnp.bfloat16:
+        u = jax.lax.bitcast_convert_type(flat, jnp.uint16)
+        u = u.at[flat_idx].set(u[flat_idx] ^ jnp.uint16(1 << min(bit, 15)))
+        out = jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+    elif dt in (jnp.int32, jnp.uint32):
+        out = flat.at[flat_idx].set(flat[flat_idx] ^ jnp.asarray(1 << bit, dt))
+    else:
+        raise TypeError(f"injection unsupported for {dt}")
+    return out.reshape(shape)
+
+
+def inject_tree(tree, spec: Optional[InjectionSpec], *, step, replica_id,
+                armed=True):
+    """Conditionally corrupt `tree` (in-jit). step/replica_id/armed are traced
+    scalars; spec fields are static. No-op when spec is None.
+
+    `armed` is the dynamic counterpart of the paper's injected.txt: after the
+    first firing the runtime passes armed=0, so re-executions after a
+    rollback do NOT re-inject."""
+    if spec is None:
+        return tree
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    target = leaves[spec.leaf_idx]
+    fire = jnp.logical_and(
+        jnp.asarray(armed, jnp.bool_),
+        jnp.logical_and(jnp.asarray(step) == spec.step,
+                        jnp.asarray(replica_id) == spec.replica))
+    corrupted = flip_bit(target, spec.flat_idx, spec.bit)
+    leaves[spec.leaf_idx] = jnp.where(fire, corrupted, target)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class InjectionFlag:
+    """The paper's ``injected.txt``: an external once-only flag so recovery
+    re-executions do not re-inject (content survives checkpoint rollbacks
+    because it lives OUTSIDE the checkpoint, paper Sec. 4.2)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        if not os.path.exists(path):
+            self._write(0)
+
+    def _write(self, v: int):
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"injected": v}, f)
+
+    def already_injected(self) -> bool:
+        with open(self.path) as f:
+            return json.load(f)["injected"] > 0
+
+    def mark(self):
+        self._write(1)
+
+    def arm_spec(self, spec: Optional[InjectionSpec]) -> Optional[InjectionSpec]:
+        """Returns spec if not yet injected, else None (the paper's
+        'function returns without making a new injection')."""
+        if spec is None or self.already_injected():
+            return None
+        return spec
+
+
+def random_spec(key, tree, *, step: int, replica: int = 1,
+                target: str = "grads") -> InjectionSpec:
+    """Uniformly random single-bit fault over a pytree (for campaigns)."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    sizes = np.array([int(np.prod(l.shape)) for l in leaves], np.int64)
+    probs = sizes / sizes.sum()
+    k1, k2, k3 = jax.random.split(key, 3)
+    leaf = int(jax.random.choice(k1, len(leaves), p=jnp.asarray(probs)))
+    idx = int(jax.random.randint(k2, (), 0, int(sizes[leaf])))
+    nbits = 16 if leaves[leaf].dtype == jnp.bfloat16 else 32
+    bit = int(jax.random.randint(k3, (), 0, nbits))
+    return InjectionSpec(leaf_idx=leaf, flat_idx=idx, bit=bit, step=step,
+                         replica=replica, target=target)

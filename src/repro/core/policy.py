@@ -1,0 +1,67 @@
+"""Protection-strategy advisor (paper Secs. 3.4 + 4.4).
+
+Given measured execution parameters (f_d, t_cs, t_ca, ...) and the system
+MTBE, pick the SEDAR level + checkpoint interval that minimizes the Average
+Execution Time (Eq. 11), and compute the dynamic-protection schedule from the
+Sec.-4.4 analysis ("when to start checkpointing").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core import temporal_model as tm
+
+
+@dataclass
+class Advice:
+    strategy: str                  # detection | multi_ckpt | single_ckpt
+    level: int
+    t_i: float                     # recommended checkpoint interval (hours)
+    aet_hours: Dict[str, float]    # AET per strategy at the chosen t_i
+    start_checkpointing_at: float  # progress fraction X* (Sec. 4.4)
+    keep_two_checkpoints_at: float # X* above which >=2 rollbacks pay off
+    notes: str = ""
+
+
+def advise(p: tm.SedarParams, mtbe_hours: float,
+           X_expected: float = 0.5, k_expected: int = 0) -> Advice:
+    """Pick the minimum-AET strategy.
+
+    X_expected: where faults are typically detected (0.5 if unknown —
+    uniform detection instant, the paper's average-case assumption).
+    k_expected: typical extra rollbacks for L2 (0 when the detection latency
+    is usually inside one interval)."""
+    # tune t_i by Daly for the two checkpointing strategies
+    ti_sys = max(tm.daly_interval(p.t_cs, mtbe_hours), p.t_cs * 4)
+    ti_app = max(tm.daly_interval(p.t_ca + p.T_compA, mtbe_hours),
+                 (p.t_ca + p.T_compA) * 4)
+
+    p_sys = dataclasses.replace(p, t_i=ti_sys, n=None)
+    p_app = dataclasses.replace(p, t_i=ti_app, n=None)
+
+    aets = {
+        "detection": tm.aet_strategy(p, "detection", mtbe_hours, X=X_expected),
+        "multi_ckpt": tm.aet_strategy(p_sys, "multi_ckpt", mtbe_hours,
+                                      k=k_expected),
+        "single_ckpt": tm.aet_strategy(p_app, "single_ckpt", mtbe_hours),
+    }
+    best = min(aets, key=aets.get)
+    level = {"detection": 1, "multi_ckpt": 2, "single_ckpt": 3}[best]
+    t_i = {"detection": 0.0, "multi_ckpt": ti_sys, "single_ckpt": ti_app}[best]
+
+    notes = []
+    if p.T_prog < 4 * max(p.t_cs, p.t_ca):
+        notes.append("short run: checkpointing overhead may dominate "
+                     "(paper: 'if the execution is too short, checkpoints "
+                     "become worthless')")
+    return Advice(
+        strategy=best,
+        level=level,
+        t_i=t_i,
+        aet_hours={k: round(v, 4) for k, v in aets.items()},
+        start_checkpointing_at=tm.min_progress_for_checkpointing(p_sys),
+        keep_two_checkpoints_at=tm.min_progress_for_k(p_sys, 1),
+        notes="; ".join(notes),
+    )

@@ -1,0 +1,218 @@
+"""SEDAR recovery strategies (paper Secs. 3.1-3.3, Algorithms 1 and 2).
+
+  L1  SafeStop                    detection + notification + safe stop
+  L2  MultiCheckpointRecovery     chain of system-level checkpoints, rollback
+                                  until the fault stops re-manifesting (Alg. 1)
+  L3  ValidatedCheckpointRecovery single replica-validated app-level
+                                  checkpoint, at most one rollback (Alg. 2)
+
+System-level (L2) checkpoints snapshot the FULL dual state (both replicas'
+params/opt/step) — exactly like DMTCP snapshotting both threads — so a
+checkpoint taken after a silent corruption still contains the replica
+divergence, and the fault re-manifests after restore (the paper's "dirty
+checkpoint" case, forcing extern_counter to advance). Application-level (L3)
+checkpoints store ONE replica's state, which is safe because it is committed
+only after the replica fingerprints were proven equal.
+
+The rollback counter lives OUTSIDE the checkpoint payload
+(`rollbacks.json`, the paper's failures.txt) so it survives restores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core.detection import DetectionEvent, SedarSafeStop
+
+
+class ExternalCounter:
+    """paper Sec. 4.2: failures.txt — external to the checkpoint storage."""
+
+    def __init__(self, path: str):
+        self.path = path
+        if not os.path.exists(path):
+            self._write(0)
+
+    def _write(self, v: int) -> None:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"count": v}, f)
+
+    def value(self) -> int:
+        with open(self.path) as f:
+            return json.load(f)["count"]
+
+    def increment(self) -> int:
+        v = self.value() + 1
+        self._write(v)
+        return v
+
+    def reset(self) -> None:
+        self._write(0)
+
+
+@dataclass
+class RecoveryAction:
+    kind: str                      # stop | restore | restart_scratch
+    step: Optional[int] = None     # checkpoint version to restore
+    rollbacks: int = 0             # extern_counter value after this detection
+    event: Optional[DetectionEvent] = None
+
+
+# ---------------------------------------------------------------------------
+# L1
+# ---------------------------------------------------------------------------
+
+class SafeStop:
+    """Detection with notification: lead the system to a safe stop, never
+    deliver defective results (paper Sec. 3.1)."""
+
+    level = 1
+
+    def __init__(self, notify: Optional[Callable[[DetectionEvent], None]] = None):
+        self.notify = notify or (lambda e: print(str(e), flush=True))
+
+    def maybe_checkpoint(self, step, dual_state, fingerprints=None) -> bool:
+        return False   # L1 stores no checkpoints
+
+    def on_detection(self, event: DetectionEvent) -> RecoveryAction:
+        self.notify(event)
+        return RecoveryAction(kind="stop", event=event)
+
+
+# ---------------------------------------------------------------------------
+# L2 — Algorithm 1
+# ---------------------------------------------------------------------------
+
+class MultiCheckpointRecovery:
+    """Recovery from a chain of system-level checkpoints (paper Alg. 1).
+
+        extern_counter++                      # on each detection
+        ckpt_no = ckpt_count - extern_counter # 1-based from the end
+        restore(ckpt_no)                      # or restart from scratch
+
+    The chain is never pruned (any checkpoint may be dirty); an optional
+    bounded-chain mode (`max_checkpoints`) exists for storage-limited runs and
+    is recorded as a deviation when used.
+    """
+
+    level = 2
+
+    def __init__(self, store: CheckpointStore, counter_path: str,
+                 checkpoint_interval: int, max_checkpoints: int = 0,
+                 async_: bool = True):
+        self.store = store
+        self.counter = ExternalCounter(counter_path)
+        self.interval = checkpoint_interval
+        self.max_checkpoints = max_checkpoints
+        self.async_ = async_
+
+    def maybe_checkpoint(self, step: int, dual_state, fingerprints=None) -> bool:
+        """Cut a system-level checkpoint right after a validated commit
+        (paper: 'the best moments to take them are when the communications
+        have just been validated')."""
+        if step == 0 or step % self.interval != 0:
+            return False
+        self.store.save(step, dual_state, kind="system", valid=None,
+                        fingerprint=fingerprints, async_=self.async_)
+        if self.max_checkpoints:
+            self.store.gc_keep_last(self.max_checkpoints)
+        return True
+
+    def on_detection(self, event: DetectionEvent) -> RecoveryAction:
+        rollbacks = self.counter.increment()
+        steps = self.store.steps()
+        idx = len(steps) - rollbacks          # ckpt_count - extern_counter
+        if idx < 0:
+            # fault predates the first (remaining) checkpoint: relaunch from
+            # the beginning (paper Fig. 2a, particular case)
+            return RecoveryAction(kind="restart_scratch", rollbacks=rollbacks,
+                                  event=event)
+        return RecoveryAction(kind="restore", step=steps[idx],
+                              rollbacks=rollbacks, event=event)
+
+    def restore(self, action: RecoveryAction, template):
+        return self.store.restore(action.step, template)
+
+
+# ---------------------------------------------------------------------------
+# L3 — Algorithm 2
+# ---------------------------------------------------------------------------
+
+class ValidatedCheckpointRecovery:
+    """Single safe application-level checkpoint (paper Alg. 2).
+
+    At each boundary both replicas' state fingerprints are compared (the same
+    machinery that validates messages). Equal -> the checkpoint is VALID: it
+    is committed and the previous one deleted (exactly one valid checkpoint
+    exists). Different -> the would-be checkpoint is corrupted: nothing is
+    stored and recovery rolls back (at most once) to the previous valid one.
+    """
+
+    level = 3
+
+    def __init__(self, store: CheckpointStore, checkpoint_interval: int,
+                 async_: bool = False):
+        # NB async_=False by default: the validity protocol commits the
+        # previous-version delete only after the new version is durable.
+        self.store = store
+        self.interval = checkpoint_interval
+        self.async_ = async_
+
+    def maybe_checkpoint(self, step: int, dual_state, fingerprints=None,
+                         fp_equal: Optional[bool] = None) -> Optional[DetectionEvent]:
+        """Returns None if no boundary; a DetectionEvent if the checkpoint
+        validation FAILED (corrupted state, paper line 16); otherwise commits.
+
+        `fp_equal` is the replica state-fingerprint comparison computed by the
+        runtime (in-jit); `dual_state` must carry replica 0's state under
+        'r0'. Only r0 is stored (provably equal to r1 when fp_equal)."""
+        if step == 0 or step % self.interval != 0:
+            return None
+        if fp_equal is None:
+            raise ValueError("L3 checkpointing requires the replica "
+                             "state-fingerprint comparison")
+        if not bool(fp_equal):
+            return DetectionEvent(step=step, boundary="ckpt_validate",
+                                  effect="FSC",
+                                  detail={"reason": "app-level checkpoint "
+                                          "hash mismatch (corrupted)"})
+        prev = self.store.latest(valid_only=True)
+        self.store.save(step, dual_state["r0"], kind="app", valid=True,
+                        fingerprint=fingerprints, async_=self.async_)
+        self.store.wait()
+        if prev is not None and prev != step:
+            self.store.delete(prev)   # "the previous can be discarded"
+        return None
+
+    def on_detection(self, event: DetectionEvent) -> RecoveryAction:
+        target = self.store.latest(valid_only=True)
+        if target is None:
+            return RecoveryAction(kind="restart_scratch", rollbacks=1,
+                                  event=event)
+        return RecoveryAction(kind="restore", step=target, rollbacks=1,
+                              event=event)
+
+    def restore(self, action: RecoveryAction, template_single):
+        """Returns the single validated state (callers re-duplicate it into
+        both replicas — valid by construction)."""
+        return self.store.restore(action.step, template_single)
+
+
+def make_recovery(sedar_cfg, workdir: Optional[str] = None):
+    d = workdir or sedar_cfg.checkpoint_dir
+    store = CheckpointStore(os.path.join(d, "checkpoints"))
+    if sedar_cfg.level <= 1:
+        return SafeStop()
+    if sedar_cfg.level == 2:
+        return MultiCheckpointRecovery(
+            store, os.path.join(d, "rollbacks.json"),
+            sedar_cfg.checkpoint_interval, sedar_cfg.max_checkpoints,
+            async_=sedar_cfg.async_checkpoint)
+    return ValidatedCheckpointRecovery(store, sedar_cfg.checkpoint_interval)

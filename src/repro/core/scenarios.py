@@ -1,0 +1,333 @@
+"""The paper's 64-scenario injection campaign (Sec. 4.1, Table 2).
+
+Test application: MPI Master/Worker matrix multiplication C = A x B with a
+checkpoint after every communication:
+
+    CK0 -> SCATTER(A) -> CK1 -> BCAST(B) -> CK2 -> MATMUL -> GATHER(C)
+        -> CK3 -> VALIDATE
+
+We reproduce it literally as a deterministic phase machine in which every
+process is replicated (two replicas, each owning a full copy of its memory),
+messages are fingerprint-validated before being sent (only replica 0's buffer
+is transmitted, and only when both replicas agree), checkpoints snapshot the
+dual memory of all processes (system-level semantics), and recovery follows
+Algorithm 1 with the external rollback counter.
+
+The workfault: 64 scenarios = 8 injection windows (after each of CK0,
+SCATTER, CK1, BCAST, CK2[=during MATMUL], MATMUL, GATHER, CK3) x 2 processes
+(Master, Worker-0) x 4 data (A, B, C, loop index i). For every scenario the
+*predictor* derives (effect, P_det, P_rec, N_roll) from first principles
+(liveness + transmission schedule + checkpoint dirtiness) and the machine
+must observe exactly that — the paper's Table 2 methodology. The paper's
+published scenarios 2, 29, 50, 59 appear verbatim (see tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fingerprint import pytree_fingerprint
+
+EVENTS = ["CK0", "SCATTER", "CK1", "BCAST", "CK2", "MATMUL", "GATHER",
+          "CK3", "VALIDATE"]
+CKPT_EVENTS = {"CK0": 0, "CK1": 2, "CK2": 4, "CK3": 7}
+WINDOWS = EVENTS[:-1]          # injection happens right AFTER this event
+DATA = ["A", "B", "C", "i"]
+PROCESSES = ["M", "W"]
+
+
+@dataclass(frozen=True)
+class Scenario:
+    sid: int
+    window: str            # event after which the flip lands
+    process: str           # M | W (worker 0)
+    datum: str             # A | B | C | i
+
+
+@dataclass
+class Prediction:
+    effect: str            # TDC | FSC | LE | TOE
+    p_det: Optional[str]   # event at which detection fires (None for LE)
+    p_rec: Optional[str]   # checkpoint that finally enables recovery
+    n_roll: int
+
+
+@dataclass
+class Observation:
+    effect: str
+    p_det: Optional[str]
+    p_rec: Optional[str]
+    n_roll: int
+    correct_result: bool
+
+
+def all_scenarios() -> List[Scenario]:
+    out = []
+    sid = 1
+    for window, proc, datum in itertools.product(WINDOWS, PROCESSES, DATA):
+        out.append(Scenario(sid, window, proc, datum))
+        sid += 1
+    assert len(out) == 64
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Predictor (paper Sec. 4.1: every fault's consequence is derivable from the
+# application's communication/liveness structure)
+# ---------------------------------------------------------------------------
+
+def _ckpts_before(event: str) -> List[str]:
+    idx = EVENTS.index(event)
+    return [ck for ck, e in CKPT_EVENTS.items() if e <= idx]
+
+
+def predict(s: Scenario) -> Prediction:
+    w = EVENTS.index(s.window)
+
+    def rolls(det_event: str) -> Tuple[str, int]:
+        """Checkpoints taken in (injection, detection] are dirty; Algorithm 1
+        walks back through them, then one more rollback to a clean one
+        (unless the corrupted datum is overwritten during re-execution before
+        its detector -- handled per-case below)."""
+        det = EVENTS.index(det_event)
+        stored = [ck for ck, e in CKPT_EVENTS.items() if e <= det]
+        dirty = [ck for ck in stored if CKPT_EVENTS[ck] > w]
+        clean = [ck for ck in stored if CKPT_EVENTS[ck] <= w]
+        n = len(dirty) + 1
+        target = clean[-1] if clean else None     # None -> restart from scratch
+        return target, n
+
+    # --- loop index ------------------------------------------------------------
+    if s.datum == "i":
+        if s.window == "CK2":        # during MATMUL: replica recomputes -> delay
+            return Prediction("TOE", "GATHER", "CK2", 1)
+        return Prediction("LE", None, None, 0)   # index dead outside MATMUL
+
+    # --- master ------------------------------------------------------------------
+    if s.process == "M":
+        if s.datum == "A":
+            if w < EVENTS.index("SCATTER"):
+                tgt, n = rolls("SCATTER")
+                return Prediction("TDC", "SCATTER", tgt, n)
+            return Prediction("LE", None, None, 0)    # A(M) dead after send
+        if s.datum == "B":
+            if w < EVENTS.index("BCAST"):
+                tgt, n = rolls("BCAST")
+                return Prediction("TDC", "BCAST", tgt, n)
+            return Prediction("LE", None, None, 0)
+        if s.datum == "C":
+            if w < EVENTS.index("GATHER"):
+                return Prediction("LE", None, None, 0)  # overwritten by GATHER
+            # after GATHER: local-only corruption -> final validation
+            tgt, n = rolls("VALIDATE")
+            return Prediction("FSC", "VALIDATE", tgt, n)
+
+    # --- worker -------------------------------------------------------------------
+    if s.datum == "A":
+        # worker A block lives from SCATTER (receipt) to MATMUL (last use)
+        if w < EVENTS.index("SCATTER"):
+            return Prediction("LE", None, None, 0)    # overwritten at receipt
+        if w < EVENTS.index("MATMUL"):
+            # corrupts C(W) -> caught when C block is sent at GATHER
+            tgt, n = rolls("GATHER")
+            return Prediction("TDC", "GATHER", tgt, n)
+        return Prediction("LE", None, None, 0)        # dead after MATMUL
+    if s.datum == "B":
+        if w < EVENTS.index("BCAST"):
+            return Prediction("LE", None, None, 0)
+        if w < EVENTS.index("MATMUL"):
+            tgt, n = rolls("GATHER")
+            return Prediction("TDC", "GATHER", tgt, n)
+        return Prediction("LE", None, None, 0)
+    # C(W): written by MATMUL, sent at GATHER, dead afterwards
+    if w < EVENTS.index("MATMUL"):
+        return Prediction("LE", None, None, 0)        # overwritten by MATMUL
+    if w < EVENTS.index("GATHER"):
+        tgt, n = rolls("GATHER")
+        return Prediction("TDC", "GATHER", tgt, n)
+    return Prediction("LE", None, None, 0)            # dead after GATHER
+
+
+# ---------------------------------------------------------------------------
+# Phase machine with the real SEDAR mechanics
+# ---------------------------------------------------------------------------
+
+def _fp(x) -> tuple:
+    import jax.numpy as jnp
+    return tuple(np.asarray(pytree_fingerprint(jnp.asarray(x)))[0, :2].tolist())
+
+
+class MatmulTestApp:
+    """Deterministic dual-replica Master/Worker matmul (paper Alg. 3)."""
+
+    def __init__(self, n: int = 8, workers: int = 2, seed: int = 0):
+        assert n % workers == 0
+        self.n = n
+        self.workers = workers
+        rng = np.random.RandomState(seed)
+        self.A0 = rng.randn(n, n).astype(np.float32)
+        self.B0 = rng.randn(n, n).astype(np.float32)
+        self.truth = self.A0 @ self.B0
+
+    # memory layout: mem[replica]["M.A"], mem[replica][f"W{w}.A"], ...
+    def _fresh_memory(self) -> List[Dict[str, np.ndarray]]:
+        mem = []
+        for _ in range(2):
+            m = {"M.A": self.A0.copy(), "M.B": self.B0.copy(),
+                 "M.C": np.zeros((self.n, self.n), np.float32),
+                 "M.i": np.zeros((), np.int32)}
+            rows = self.n // self.workers
+            for w in range(self.workers):
+                m[f"W{w}.A"] = np.zeros((rows, self.n), np.float32)
+                m[f"W{w}.B"] = np.zeros((self.n, self.n), np.float32)
+                m[f"W{w}.C"] = np.zeros((rows, self.n), np.float32)
+                m[f"W{w}.i"] = np.zeros((), np.int32)
+            mem.append(m)
+        return mem
+
+    def run(self, scenario: Optional[Scenario] = None,
+            max_restarts: int = 12) -> Observation:
+        mem = self._fresh_memory()
+        pc = 0
+        injected = False            # the paper's injected.txt
+        rollbacks = 0               # extern_counter (failures.txt)
+        ckpts: List[Tuple[str, int, list]] = []   # (name, pc_after, dual mem)
+        first_det: Optional[str] = None
+        final_rec: Optional[str] = None
+        toe_delayed = False
+        effect_seen = None
+        guard = 0
+
+        def snapshot(name: str):
+            ckpts.append((name, pc + 1,
+                          [{k: v.copy() for k, v in m.items()} for m in mem]))
+
+        def detect(event_name: str, effect: str):
+            nonlocal pc, rollbacks, first_det, final_rec, mem, toe_delayed, \
+                effect_seen
+            if first_det is None:
+                first_det = event_name
+                effect_seen = effect
+            rollbacks += 1
+            idx = len(ckpts) - rollbacks
+            toe_delayed = False
+            if idx < 0:                       # relaunch from the beginning
+                mem = self._fresh_memory()
+                pc = 0
+                final_rec = None
+                return
+            name, saved_pc, saved = ckpts[idx]
+            mem = [{k: v.copy() for k, v in m.items()} for m in saved]
+            del ckpts[idx + 1:]               # re-stored during re-execution
+            pc = saved_pc
+            final_rec = name
+
+        def validate_send(key: str, event_name: str, effect: str) -> bool:
+            if _fp(mem[0][key]) != _fp(mem[1][key]):
+                detect(event_name, effect)
+                return False
+            return True
+
+        rows = self.n // self.workers
+        while pc < len(EVENTS):
+            guard += 1
+            if guard > 600:
+                raise RuntimeError("scenario did not converge")
+            ev = EVENTS[pc]
+
+            if ev in CKPT_EVENTS:
+                snapshot(ev)
+
+            elif ev == "SCATTER":
+                if not validate_send("M.A", "SCATTER", "TDC"):
+                    continue
+                for w in range(self.workers):
+                    blk = mem[0]["M.A"][w * rows:(w + 1) * rows].copy()
+                    for r in range(2):
+                        mem[r][f"W{w}.A"] = blk.copy()
+
+            elif ev == "BCAST":
+                if not validate_send("M.B", "BCAST", "TDC"):
+                    continue
+                for w in range(self.workers):
+                    for r in range(2):
+                        mem[r][f"W{w}.B"] = mem[0]["M.B"].copy()
+
+            elif ev == "MATMUL":
+                for w in range(self.workers):
+                    for r in range(2):
+                        mem[r][f"W{w}.C"] = mem[r][f"W{w}.A"] @ mem[r][f"W{w}.B"]
+
+            elif ev == "GATHER":
+                if toe_delayed:
+                    detect("GATHER", "TOE")
+                    continue
+                failed = False
+                for w in range(self.workers):
+                    if not validate_send(f"W{w}.C", "GATHER", "TDC"):
+                        failed = True
+                        break
+                if failed:
+                    continue
+                for w in range(self.workers):
+                    blk = mem[0][f"W{w}.C"]
+                    for r in range(2):
+                        mem[r]["M.C"][w * rows:(w + 1) * rows] = blk.copy()
+
+            elif ev == "VALIDATE":
+                if _fp(mem[0]["M.C"]) != _fp(mem[1]["M.C"]):
+                    detect("VALIDATE", "FSC")
+                    continue
+
+            # -- injection: right after event `ev` ------------------------------
+            if (scenario is not None and not injected
+                    and ev == scenario.window):
+                injected = True
+                key = f"{'M' if scenario.process == 'M' else 'W0'}.{scenario.datum}"
+                if scenario.datum == "i":
+                    if scenario.window == "CK2":
+                        toe_delayed = True      # replica 1 restarts its loop
+                    # else: dead index, no memory effect
+                else:
+                    # single bit-flip in replica 1's copy (paper Sec. 4.2)
+                    flat = mem[1][key].reshape(-1)
+                    target_idx = min(3, flat.size - 1)
+                    uu = flat[target_idx:target_idx + 1].view(np.uint32).copy()
+                    uu ^= np.uint32(1 << 22)
+                    flat[target_idx:target_idx + 1] = uu.view(np.float32)
+
+            pc += 1
+
+        ok = np.allclose(mem[0]["M.C"], self.truth, atol=1e-4) and \
+            np.allclose(mem[1]["M.C"], self.truth, atol=1e-4)
+        return Observation(
+            effect=effect_seen or "LE",
+            p_det=first_det,
+            p_rec=final_rec,
+            n_roll=rollbacks,
+            correct_result=ok)
+
+
+def run_campaign(n: int = 8, workers: int = 2):
+    """Run all 64 scenarios; returns list of dicts with predicted vs observed."""
+    app = MatmulTestApp(n=n, workers=workers)
+    rows = []
+    for s in all_scenarios():
+        pred = predict(s)
+        obs = app.run(s)
+        rows.append({
+            "sid": s.sid, "window": s.window, "process": s.process,
+            "datum": s.datum,
+            "pred": dataclasses.asdict(pred),
+            "obs": dataclasses.asdict(obs),
+            "match": (pred.effect == obs.effect
+                      and pred.p_det == obs.p_det
+                      and pred.p_rec == obs.p_rec
+                      and pred.n_roll == obs.n_roll
+                      and obs.correct_result),
+        })
+    return rows

@@ -1,0 +1,244 @@
+"""SEDAR temporal-behavior model — paper Eqs. (1)-(14), Sec. 3.4 and Sec. 4.4.
+
+All times in HOURS unless suffixed _s. Parameter names follow paper Table 1:
+
+    T_prog  : execution time of two instances of the original app in parallel
+    T_comp  : semi-automatic result comparison time
+    T_rest  : restart time
+    f_d     : detection-mechanism overhead factor (0 < f_d < 1)
+    X       : fault-detection instant as a fraction of progress (0 < X < 1)
+    n       : number of checkpoints in the whole execution
+    t_cs    : system-level checkpoint store time
+    t_i     : checkpoint interval
+    k       : extra checkpoints to rewind when the last one is dirty
+    t_ca    : application-level checkpoint store time (t_ca < t_cs)
+    T_compA : application-level checkpoint validation time
+
+Validated against the paper's published Tables 4 and 5 in
+tests/test_temporal_model.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class SedarParams:
+    T_prog: float            # hours
+    T_comp: float            # hours
+    T_rest: float            # hours
+    f_d: float
+    t_cs: float              # hours
+    t_ca: float              # hours
+    T_compA: float           # hours
+    t_i: float = 1.0         # hours
+    n: Optional[int] = None  # checkpoints; default derived from Eq. 3 / t_i
+
+    def n_ckpts(self) -> int:
+        """Paper: n = time of the detection-only strategy (Eq. 3) / t_i."""
+        if self.n is not None:
+            return self.n
+        return int(detection_fa(self) / self.t_i)
+
+
+# ---------------------------------------------------------------------------
+# Baseline (manual two-instance + vote) — Eqs. (1), (2)
+# ---------------------------------------------------------------------------
+
+def baseline_fa(p: SedarParams) -> float:
+    return p.T_prog + p.T_comp                                   # Eq. (1)
+
+
+def baseline_fp(p: SedarParams) -> float:
+    return 2.0 * (p.T_prog + p.T_comp) + p.T_rest                # Eq. (2)
+
+
+# ---------------------------------------------------------------------------
+# L1: detection + notification — Eqs. (3), (4)
+# ---------------------------------------------------------------------------
+
+def detection_fa(p: SedarParams) -> float:
+    return p.T_prog * (1.0 + p.f_d) + p.T_comp                   # Eq. (3)
+
+
+def detection_fp(p: SedarParams, X: float) -> float:
+    return (p.T_prog * (1.0 + p.f_d) * (X + 1.0)
+            + p.T_rest + p.T_comp)                               # Eq. (4)
+
+
+# ---------------------------------------------------------------------------
+# L2: multiple system-level checkpoints — Eqs. (5), (6) == (14) via (13)
+# ---------------------------------------------------------------------------
+
+def multi_ckpt_fa(p: SedarParams) -> float:
+    return detection_fa(p) + p.n_ckpts() * p.t_cs                # Eq. (5)
+
+
+def multi_ckpt_fp(p: SedarParams, k: int) -> float:
+    """Eq. (6)/(14): sum_{m=0}^{k}(k - m + 1/2) t_i == ((k+1)^2 / 2) t_i."""
+    n = p.n_ckpts()
+    rework = ((k + 1) ** 2) / 2.0 * p.t_i                        # Eq. (13)
+    return (p.T_prog * (1.0 + p.f_d) + p.T_comp
+            + (n + k) * p.t_cs + rework + (k + 1) * p.T_rest)    # Eq. (14)
+
+
+# ---------------------------------------------------------------------------
+# L3: single validated application-level checkpoint — Eqs. (7), (8)
+# ---------------------------------------------------------------------------
+
+def single_ckpt_fa(p: SedarParams) -> float:
+    n = p.n_ckpts()
+    return detection_fa(p) + n * (p.t_ca + p.T_compA)            # Eq. (7)
+
+
+def single_ckpt_fp(p: SedarParams) -> float:
+    return (single_ckpt_fa(p) + 0.5 * p.t_i + p.T_rest)          # Eq. (8)
+
+
+# ---------------------------------------------------------------------------
+# Average execution time — Eqs. (9)-(11)
+# ---------------------------------------------------------------------------
+
+def fault_probability(T_prog: float, mtbe: float) -> float:
+    """Eq. (10): P = 1 - exp(-T_prog / MTBE), exponential error model."""
+    return 1.0 - math.exp(-T_prog / mtbe)
+
+
+def aet(t_fp: float, t_fa: float, T_prog: float, mtbe: float) -> float:
+    """Eq. (11)."""
+    alpha = fault_probability(T_prog, mtbe)
+    return t_fp * alpha + t_fa * (1.0 - alpha)
+
+
+def aet_strategy(p: SedarParams, strategy: str, mtbe: float,
+                 X: float = 0.5, k: int = 0) -> float:
+    """AET for one of: baseline | detection | multi_ckpt | single_ckpt."""
+    table = {
+        "baseline": (baseline_fa(p), baseline_fp(p)),
+        "detection": (detection_fa(p), detection_fp(p, X)),
+        "multi_ckpt": (multi_ckpt_fa(p), multi_ckpt_fp(p, k)),
+        "single_ckpt": (single_ckpt_fa(p), single_ckpt_fp(p)),
+    }
+    fa, fp = table[strategy]
+    return aet(fp, fa, p.T_prog, mtbe)
+
+
+def system_mtbe(mtbe_individual: float, n_processors: int) -> float:
+    """MTBE = MTBE_ind / N (paper Sec. 3.4)."""
+    return mtbe_individual / n_processors
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-interval selection (Daly's higher-order estimate, paper Sec. 4.3)
+# ---------------------------------------------------------------------------
+
+def daly_interval(t_cs: float, mtbe: float) -> float:
+    """Daly (2006) higher-order optimum checkpoint interval (hours)."""
+    if t_cs >= 2.0 * mtbe:
+        return mtbe
+    x = math.sqrt(2.0 * t_cs * mtbe)
+    return x * (1.0 + math.sqrt(t_cs / (2.0 * mtbe)) / 3.0
+                + (t_cs / (2.0 * mtbe)) / 9.0) - t_cs
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.4 — convenience of saving multiple checkpoints
+# ---------------------------------------------------------------------------
+
+def admissible_k(p: SedarParams, X: float) -> int:
+    """Largest admissible k at detection instant X: the rollback target
+    checkpoint must already exist (ckpts are cut every t_i of Eq.-3 time)."""
+    stored = int((X * detection_fa(p)) / p.t_i)   # checkpoints stored so far
+    return max(stored - 1, -1)                    # k in {0..stored-1}
+
+
+def rollback_beats_restart(p: SedarParams, X: float, k: int) -> bool:
+    """True if k+1 rollbacks (Eq. 14) beat detect+relaunch (Eq. 4) at X."""
+    if k > admissible_k(p, X):
+        return False
+    return multi_ckpt_fp(p, k) <= detection_fp(p, X)
+
+
+def min_progress_for_checkpointing(p: SedarParams) -> float:
+    """X* below which storing checkpoints is NOT worth it (Eq.4 <= Eq.14, k=0).
+
+    Paper Sec 4.4: X <= ~5.88% for the Jacobi parameters."""
+    # T(1+fd)(X+1) + Trest + Tcomp <= T(1+fd) + Tcomp + n tcs + ti/2 + Trest
+    n = p.n_ckpts()
+    return (n * p.t_cs + 0.5 * p.t_i) / (p.T_prog * (1.0 + p.f_d))
+
+
+def min_progress_for_k(p: SedarParams, k: int) -> float:
+    """X* above which rolling back k+1 checkpoints beats detect+relaunch."""
+    n = p.n_ckpts()
+    lhs = ((n + k) * p.t_cs + ((k + 1) ** 2) / 2.0 * p.t_i
+           + k * p.T_rest)
+    return lhs / (p.T_prog * (1.0 + p.f_d))
+
+
+def convenience_table(p: SedarParams, Xs=(0.3, 0.5, 0.8), ks=(0, 1, 2, 3, 4)):
+    """Paper Table 5: detection-only time vs k+1-rollback times, with NA for
+    non-admissible (checkpoint not yet stored) combinations."""
+    rows = []
+    for X in Xs:
+        adm = admissible_k(p, X)
+        row = {"X": X, "detection": detection_fp(p, X), "k": {}}
+        for k in ks:
+            row["k"][k] = multi_ckpt_fp(p, k) if k <= adm else None  # None = NA
+        rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 3 parameter sets (for validation + benchmarks)
+# ---------------------------------------------------------------------------
+
+PAPER_TABLE3 = {
+    "MATMUL": SedarParams(T_prog=10.21, T_comp=42 / 3600, T_rest=14.10 / 3600,
+                          f_d=0.0001, t_cs=14.10 / 3600, t_ca=10.58 / 3600,
+                          T_compA=42 / 3600, t_i=1.0, n=10),
+    "JACOBI": SedarParams(T_prog=8.92, T_comp=1 / 3600, T_rest=9.62 / 3600,
+                          f_d=0.006, t_cs=9.62 / 3600, t_ca=9.11 / 3600,
+                          T_compA=1 / 3600, t_i=1.0, n=8),
+    "SW":     SedarParams(T_prog=11.15, T_comp=0.5 / 3600, T_rest=2.55 / 3600,
+                          f_d=0.0005, t_cs=2.55 / 3600, t_ca=1.92 / 3600,
+                          T_compA=0.5 / 3600, t_i=1.0, n=11),
+}
+
+# Paper Table 4 published values (hours) for regression-testing our model.
+PAPER_TABLE4 = {
+    # row: (MATMUL, JACOBI, SW)
+    "baseline_fa":        (10.22, 8.92, 11.15),
+    "baseline_fp":        (20.45, 17.85, 22.35),
+    "detection_fa":       (10.23, 8.97, 11.16),
+    "detection_fp_30":    (13.29, 11.67, 14.50),
+    "detection_fp_50":    (15.33, 13.46, 16.73),
+    "detection_fp_80":    (18.39, 16.16, 20.08),
+    "multi_fa":           (10.26, 9.00, 11.17),
+    "multi_fp_k0":        (10.77, 9.50, 11.66),
+    "multi_fp_k1":        (12.27, 11.01, 13.17),
+    "multi_fp_k4":        (22.79, 21.53, 23.67),
+    "single_fa":          (10.37, 8.99, 11.16),
+    "single_fp":          (10.87, 9.50, 11.66),
+}
+
+
+def table4_ours() -> dict:
+    """Recompute paper Table 4 from Table 3 parameters with our model."""
+    out = {}
+    apps = ["MATMUL", "JACOBI", "SW"]
+    P = [PAPER_TABLE3[a] for a in apps]
+    out["baseline_fa"] = tuple(baseline_fa(p) for p in P)
+    out["baseline_fp"] = tuple(baseline_fp(p) for p in P)
+    out["detection_fa"] = tuple(detection_fa(p) for p in P)
+    for x in (30, 50, 80):
+        out[f"detection_fp_{x}"] = tuple(detection_fp(p, x / 100) for p in P)
+    out["multi_fa"] = tuple(multi_ckpt_fa(p) for p in P)
+    for k in (0, 1, 4):
+        out[f"multi_fp_k{k}"] = tuple(multi_ckpt_fp(p, k) for p in P)
+    out["single_fa"] = tuple(single_ckpt_fa(p) for p in P)
+    out["single_fp"] = tuple(single_ckpt_fp(p) for p in P)
+    return out

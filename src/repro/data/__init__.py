@@ -1,0 +1,3 @@
+from repro.data.pipeline import MemmapCorpus, SyntheticLM, make_pipeline
+
+__all__ = ["SyntheticLM", "MemmapCorpus", "make_pipeline"]

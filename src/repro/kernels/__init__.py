@@ -1,0 +1,5 @@
+from repro.kernels import ops, ref
+from repro.kernels.fingerprint import fingerprint_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = ["ops", "ref", "fingerprint_pallas", "flash_attention_pallas"]

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused state fingerprint (hash + sum + absmax).
+
+SEDAR's hot spot is the comparison/validation pass over every byte of
+gradient/parameter state (DESIGN.md §5). This kernel computes, in a single
+HBM pass with (block_rows, 128) VMEM tiles:
+
+    h1 = sum_i ((u_i XOR (i*C1)) * C2)        mod 2^32
+    h2 = sum_i (t XOR (t >> 15)), t=(u_i+i)*C3
+    s  = sum(x)       (f32)
+    a  = max(|x|)     (f32)
+
+identical bit-for-bit to the pure-jnp oracle `repro.core.fingerprint.
+tensor_fingerprint` (= kernels/ref.py::fingerprint_ref). The reduction terms
+are associative/commutative, so the grid accumulates into 4 scalar output
+refs; padding lanes contribute the identity (0 for sum/xor, -inf for max).
+
+The tensor is viewed as (rows, 128) u32 lanes — the native f32 VREG tile is
+(8, 128), so block_rows is a multiple of 8 and the last dim is exactly the
+128-lane width. Arithmetic intensity is O(1) FLOP/byte: the kernel is
+memory-bound by design and its roofline cost is one read of the state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+C1 = np.uint32(2654435761)
+C2 = np.uint32(2246822519)
+C3 = np.uint32(3266489917)
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256      # (256, 128) u32 = 128 KiB per VMEM tile
+
+
+def _fingerprint_kernel(n_valid, u_ref, h1_ref, h2_ref, s_ref, a_ref):
+    i = pl.program_id(0)
+    rows = u_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        h1_ref[0] = jnp.uint32(0)
+        h2_ref[0] = jnp.uint32(0)
+        s_ref[0] = jnp.float32(0)
+        a_ref[0] = jnp.float32(0)
+
+    u = u_ref[...]                                   # (rows, 128) u32
+    # program_id is int32 — keep everything uint32 or the h2 mix's right
+    # shift turns arithmetic (sign-extending) instead of logical
+    base = jnp.uint32(i) * jnp.uint32(rows * LANES)
+    idx = (base
+           + jax.lax.broadcasted_iota(jnp.uint32, (rows, LANES), 0)
+           * jnp.uint32(LANES)
+           + jax.lax.broadcasted_iota(jnp.uint32, (rows, LANES), 1))
+    idx = idx.astype(jnp.uint32)
+    valid = idx < jnp.uint32(int(n_valid))   # n_valid is static (x.size)
+
+    t1 = jnp.where(valid, (u ^ (idx * C1)) * C2, jnp.uint32(0))
+    h1_ref[0] = h1_ref[0] + jnp.sum(t1, dtype=jnp.uint32)
+
+    t2 = (u + idx) * C3
+    t2 = jnp.where(valid, t2 ^ (t2 >> jnp.uint32(15)), jnp.uint32(0))
+    h2_ref[0] = h2_ref[0] + jnp.sum(t2, dtype=jnp.uint32)
+
+    xf = jax.lax.bitcast_convert_type(u, jnp.float32)
+    xv = jnp.where(valid, xf, 0.0)
+    s_ref[0] = s_ref[0] + jnp.sum(xv, dtype=jnp.float32)
+    a_ref[0] = jnp.maximum(a_ref[0], jnp.max(jnp.where(valid, jnp.abs(xf), 0.0)))
+
+
+def fingerprint_pallas(x, block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True):
+    """-> (4,) uint32, bit-identical to fingerprint_ref. Accepts any floating
+    dtype (exact upcast to f32 first, matching the oracle)."""
+    x = jnp.asarray(x)
+    if x.dtype != jnp.float32:
+        x = x.astype(jnp.float32)
+    n = x.size
+    u = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32)
+
+    per_block = block_rows * LANES
+    nblocks = max((n + per_block - 1) // per_block, 1)
+    padded = nblocks * per_block
+    u = jnp.pad(u, (0, padded - n))
+    u = u.reshape(nblocks * block_rows, LANES)
+
+    kern = functools.partial(_fingerprint_kernel, int(n))
+    h1, h2, s, a = pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u)
+    sb = jax.lax.bitcast_convert_type(s[0], jnp.uint32)
+    ab = jax.lax.bitcast_convert_type(a[0], jnp.uint32)
+    return jnp.stack([h1[0], h2[0], sb, ab])

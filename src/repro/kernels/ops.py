@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with interpret=True (Python
+emulation of the kernel body); on TPU set REPRO_PALLAS_INTERPRET=0 (or rely
+on the backend check) to compile them for real. Block shapes stay identical
+either way, so VMEM footprints claimed by the BlockSpecs are what a TPU
+would see.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fingerprint import fingerprint_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def fingerprint(x, block_rows: int = 256) -> jnp.ndarray:
+    """Fused fingerprint of one tensor -> (4,) uint32."""
+    return fingerprint_pallas(x, block_rows=block_rows,
+                              interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """Flash attention in model layout. q: (B,S,H,hd); k/v: (B,S,KV,hd).
+
+    Returns (B,S,H,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import tensor_fingerprint
+
+
+def fingerprint_ref(x) -> jnp.ndarray:
+    """Oracle for kernels/fingerprint.py — the SEDAR core implementation."""
+    x = jnp.asarray(x)
+    if x.dtype != jnp.float32:
+        x = x.astype(jnp.float32)
+    return tensor_fingerprint(x)
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Exact attention. q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd); GQA when KV<H."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    group = H // KV
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero device allocation (the shannon/kernels pattern).
+
+Returns (specs, logical_axes) pytrees per (arch config, ShapeSpec)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Dict, Dict]:
+    """Training / prefill batch: tokens + targets (+ frontend embeddings for
+    the modality-stub archs, per the task spec)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    axes: Dict[str, Any] = {"tokens": ("batch", None)}
+    if shape.kind == "train":
+        specs["targets"] = _sds((B, S), jnp.int32)
+        axes["targets"] = ("batch", None)
+    if cfg.frontend:
+        specs["frontend_embeds"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                                        jnp.dtype(cfg.dtype))
+        axes["frontend_embeds"] = ("batch", None, None)
+    return specs, axes
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Dict, Dict]:
+    """Serve-step inputs: one new token per sequence + position + cache."""
+    from repro.models import build_model
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+
+    holder = {}
+
+    def mk():
+        c, ax = model.init_cache(B, S, jnp.bfloat16)
+        holder["ax"] = ax
+        return c
+
+    cache = jax.eval_shape(mk)
+    specs = {"tokens": _sds((B,), jnp.int32), "pos": _sds((), jnp.int32),
+             "cache": cache}
+    axes = {"tokens": ("batch",), "pos": (), "cache": holder["ax"]}
+    return specs, axes
+
+
+def train_state_specs(cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Full TrainState: f32 master params + AdamW moments (realistic memory)."""
+    from repro.models import build_model
+    model = build_model(cfg)
+    pshapes, paxes = model.abstract_params()
+    f32 = jax.tree.map(lambda s: _sds(s.shape, jnp.float32), pshapes)
+    specs = {"params": f32,
+             "opt": {"m": f32, "v": f32},
+             "step": _sds((), jnp.int32)}
+    axes = {"params": paxes, "opt": {"m": paxes, "v": paxes}, "step": ()}
+    return specs, axes
+
+
+def serve_param_specs(cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Serving deployment: bf16 weights."""
+    from repro.models import build_model
+    model = build_model(cfg)
+    pshapes, paxes = model.abstract_params()
+    bf16 = jax.tree.map(lambda s: _sds(s.shape, jnp.bfloat16), pshapes)
+    return bf16, paxes

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS before first jax init, while smoke tests must see the
+real single device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...], devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = 1
+    for s in shape:
+        n *= s
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "BEFORE any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment: one v5e pod 16x16 = 256 chips, or 2 pods = 512.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    Under SEDAR dual-replication the "pod" axis carries the two replicas
+    (DESIGN.md §2/§6); in the unprotected baseline it is an extra data axis.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 2, 2),
+                   axes: Tuple[str, ...] = ("pod", "data", "model")):
+    """Small mesh for CPU multi-device tests (needs forced host devices)."""
+    return _mk(shape, axes)

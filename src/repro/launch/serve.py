@@ -1,0 +1,50 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
+        --batch 4 --steps 16 [--dual]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (RunConfig, TrainConfig, get_config, list_archs,
+                           reduce_for_smoke)
+from repro.runtime.serve import SedarServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--dual", action="store_true",
+                    help="SEDAR dual-execution detection on decode")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    srv = SedarServer(RunConfig(model=cfg, train=TrainConfig()),
+                      dual=args.dual)
+    params = srv.model.init(jax.random.PRNGKey(0))
+    prompts = {"tokens": jnp.asarray(
+        np.random.RandomState(0).randint(0, min(cfg.vocab_size, 200),
+                                         (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.frontend:
+        prompts["frontend_embeds"] = 0.1 * jnp.ones(
+            (args.batch, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+    toks, rep = srv.generate(params, prompts, steps=args.steps)
+    tps = rep.tokens_emitted / max(rep.wall_s, 1e-9)
+    print(f"{args.arch}: {rep.tokens_emitted} tokens, {tps:.1f} tok/s "
+          f"(CPU smoke), detections={len(rep.detections)}")
+
+
+if __name__ == "__main__":
+    main()

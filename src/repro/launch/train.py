@@ -1,0 +1,107 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 8 --level 3 [--smoke] [--replication sequential|pod|none] \
+        [--inject-step N] [--manual-vote]
+
+--smoke uses the reduced per-arch config (CPU-runnable); full configs are for
+real accelerators (and are exercised shape-only via the dry-run).
+--manual-vote runs the paper's BASELINE protocol: two independent instances,
+final comparison, third run + majority vote on mismatch (Sec. 3, Eqs. 1-2).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+
+import numpy as np
+
+from repro.configs import (RunConfig, SedarConfig, TrainConfig, get_config,
+                           list_archs, reduce_for_smoke)
+from repro.core.fingerprint import pytree_fingerprint
+from repro.core.injection import InjectionSpec
+from repro.runtime.cluster import Heartbeat
+from repro.runtime.train import SedarTrainer
+
+
+def manual_vote_baseline(run_cfg: RunConfig, workdir: str, steps: int,
+                         inj_spec=None) -> None:
+    """Paper baseline: two instances + compare; on mismatch, a third run and
+    majority vote (semi-automatic, Eqs. 1-2)."""
+    import dataclasses
+    fps = []
+    for inst in range(2):
+        rc = dataclasses.replace(
+            run_cfg, sedar=SedarConfig(level=1, replication="none"))
+        tr = SedarTrainer(rc, f"{workdir}/inst{inst}",
+                          inj_spec=inj_spec if inst == 1 else None)
+        _, rep = tr.run(steps)
+        fps.append(rep.final_state_fp[:, :2])
+        print(f"[baseline] instance {inst}: {rep.summary()}")
+    if np.array_equal(fps[0], fps[1]):
+        print("[baseline] results MATCH — accepted")
+        return
+    print("[baseline] MISMATCH — launching third instance for majority vote")
+    rc = dataclasses.replace(run_cfg,
+                             sedar=SedarConfig(level=1, replication="none"))
+    tr = SedarTrainer(rc, f"{workdir}/inst2")
+    _, rep = tr.run(steps)
+    third = rep.final_state_fp[:, :2]
+    winner = 0 if np.array_equal(third, fps[0]) else 1
+    print(f"[baseline] majority: instances {winner} and 2 agree -> "
+          f"instance {1 - winner} was corrupted")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--level", type=int, default=3, choices=(1, 2, 3))
+    ap.add_argument("--replication", default="sequential",
+                    choices=("none", "sequential", "pod"))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--ckpt-interval", type=int, default=4)
+    ap.add_argument("--workdir", default="/tmp/sedar_train")
+    ap.add_argument("--inject-step", type=int, default=None)
+    ap.add_argument("--manual-vote", action="store_true")
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    rc = RunConfig(
+        model=cfg,
+        train=TrainConfig(global_batch=args.global_batch,
+                          seq_len=args.seq_len, steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1), lr=1e-3),
+        sedar=SedarConfig(level=args.level, replication=args.replication,
+                          checkpoint_interval=args.ckpt_interval,
+                          param_validate_interval=args.ckpt_interval))
+    shutil.rmtree(args.workdir, ignore_errors=True)
+
+    inj = None
+    if args.inject_step is not None:
+        inj = InjectionSpec(leaf_idx=3, flat_idx=11, bit=21,
+                            step=args.inject_step, replica=1, target="grads")
+
+    if args.manual_vote:
+        manual_vote_baseline(rc, args.workdir, args.steps, inj)
+        return
+
+    hb = Heartbeat(os.path.join(args.workdir, "heartbeats"), args.host_id)
+    trainer = SedarTrainer(rc, args.workdir, inj_spec=inj)
+    dual, rep = trainer.run(args.steps)
+    hb.beat(rep.steps_completed)
+    print(rep.summary())
+    for e in rep.detections:
+        print(f"  detection: {e}")
+    for r in rep.recoveries:
+        print(f"  recovery: {r}")
+
+
+if __name__ == "__main__":
+    main()

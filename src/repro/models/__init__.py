@@ -1,0 +1,3 @@
+from repro.models.model import Model, Probe, build_model, count_params_analytic
+
+__all__ = ["Model", "Probe", "build_model", "count_params_analytic"]

@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The speech frontend is a STUB per the task spec: the encoder consumes
+precomputed frame embeddings (B, S_enc, D) supplied by input_specs(). The
+decoder is a standard causal transformer with cross-attention; decode uses a
+self-attention KV cache plus a cross-attention cache computed once from the
+encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models.transformer import ShardCtx, _act, _remat
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    emb_p, emb_ax = nn.init_embedding(ks[0], cfg)
+
+    def stack(key, L, cross: bool):
+        k1, k2, k3 = jax.random.split(key, 3)
+        attn_p, attn_ax = nn.init_attention(k1, cfg, layers=L)
+        mlp_p, mlp_ax = nn.init_mlp(k2, cfg, layers=L)
+        p = {"attn": attn_p, "mlp": mlp_p,
+             "ln1": jnp.zeros((L, cfg.d_model), pdt),
+             "ln2": jnp.zeros((L, cfg.d_model), pdt)}
+        ax = {"attn": attn_ax, "mlp": mlp_ax,
+              "ln1": ("layers", "embed"), "ln2": ("layers", "embed")}
+        if cross:
+            xp, xax = nn.init_attention(k3, cfg, layers=L)
+            p["xattn"] = xp
+            p["lnx"] = jnp.zeros((L, cfg.d_model), pdt)
+            ax["xattn"] = xax
+            ax["lnx"] = ("layers", "embed")
+        return p, ax
+
+    enc_p, enc_ax = stack(ks[1], cfg.encoder_layers, cross=False)
+    dec_p, dec_ax = stack(ks[2], cfg.num_layers, cross=True)
+    params = {
+        "embed": emb_p,
+        "encoder": {"layers": enc_p, "final_ln": jnp.zeros((cfg.d_model,), pdt)},
+        "decoder": {"layers": dec_p, "final_ln": jnp.zeros((cfg.d_model,), pdt)},
+    }
+    axes = {
+        "embed": emb_ax,
+        "encoder": {"layers": enc_ax, "final_ln": ("embed",)},
+        "decoder": {"layers": dec_ax, "final_ln": ("embed",)},
+    }
+    return params, axes
+
+
+def encode(cfg, params, frames, ctx=None):
+    """frames: (B, S_enc, D) precomputed frontend embeddings -> (B, S_enc, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = _act(ctx, x, "batch", "seq", None)
+    S = x.shape[1]
+    sin, cos = nn.rope_tables(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        h = nn.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        q, k, v = nn.qkv_project(cfg, lp["attn"], h)
+        q = nn.apply_rope(q, sin, cos)
+        k = nn.apply_rope(k, sin, cos)
+        o = nn.causal_attention(q, k, v, causal=False)   # bidirectional
+        y = carry + nn.out_project(cfg, lp["attn"], o)
+        h2 = nn.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + _act(ctx, nn.mlp(cfg, lp["mlp"], h2), "batch", "seq", None)
+        return y, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"]["layers"])
+    return nn.rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def _decoder_hidden(cfg, params, tokens, enc_out, ctx=None, collect_kv=False):
+    x = nn.embed_tokens(cfg, params["embed"], tokens)
+    x = _act(ctx, x, "batch", "seq", None)
+    S = x.shape[1]
+    sin, cos = nn.rope_tables(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        # self attention (causal; chunked for long decoder sequences)
+        from repro.models.transformer import _attention_dispatch
+        h = nn.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        q, k, v = nn.qkv_project(cfg, lp["attn"], h)
+        q = nn.apply_rope(q, sin, cos)
+        k = nn.apply_rope(k, sin, cos)
+        o = _attention_dispatch(cfg, q, k, v)
+        y = carry + nn.out_project(cfg, lp["attn"], o)
+        # cross attention
+        hx = nn.rms_norm(y, lp["lnx"], cfg.norm_eps)
+        qx, _, _ = nn.qkv_project(cfg, lp["xattn"], hx)
+        _, kx, vx = nn.qkv_project(cfg, lp["xattn"], enc_out)
+        ox = nn.causal_attention(qx, kx, vx, causal=False)
+        y = y + nn.out_project(cfg, lp["xattn"], ox)
+        # mlp
+        h2 = nn.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + _act(ctx, nn.mlp(cfg, lp["mlp"], h2), "batch", "seq", None)
+        out = (k, v) if collect_kv else None
+        return y, out
+
+    x, kv = jax.lax.scan(_remat(cfg, body), x, params["decoder"]["layers"])
+    x = nn.rms_norm(x, params["decoder"]["final_ln"], cfg.norm_eps)
+    return x, (kv if collect_kv else None)
+
+
+def encdec_loss(cfg, params, batch, ctx=None):
+    """batch: {"frontend_embeds": (B,S_enc,D), "tokens": (B,S), "targets"}."""
+    enc_out = encode(cfg, params, batch["frontend_embeds"], ctx)
+    h, _ = _decoder_hidden(cfg, params, batch["tokens"], enc_out, ctx)
+    if h.shape[1] > nn.CE_CHUNK:
+        loss = nn.chunked_cross_entropy(cfg, params["embed"], h,
+                                        batch["targets"])
+    else:
+        logits = nn.logits_from_hidden(cfg, params["embed"], h)
+        logits = _act(ctx, logits, "batch", "seq", "vocab")
+        loss = nn.cross_entropy_loss(logits, batch["targets"])
+    return loss, {"loss": loss}
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    Se = cfg.frontend_seq
+    cache = {
+        "k": jnp.zeros((L, batch, max_len, KV, hd), cache_dtype),
+        "v": jnp.zeros((L, batch, max_len, KV, hd), cache_dtype),
+        "xk": jnp.zeros((L, batch, Se, KV, hd), cache_dtype),
+        "xv": jnp.zeros((L, batch, Se, KV, hd), cache_dtype),
+    }
+    ax = ("layers", "batch", None, "kv_heads", "head_dim")
+    return cache, {"k": ax, "v": ax, "xk": ax, "xv": ax}
+
+
+def encdec_prefill(cfg, params, frames, tokens, max_len: int, ctx=None,
+                   cache_dtype=jnp.bfloat16):
+    """Encode + decoder prefill. Returns (last_logits, cache)."""
+    enc_out = encode(cfg, params, frames, ctx)
+    B = tokens.shape[0]
+    cache, _ = init_encdec_cache(cfg, B, max_len, cache_dtype)
+
+    # cross-attention cache: (L, B, Se, KV, hd), computed once
+    def xbody(_, lp):
+        _, kx, vx = nn.qkv_project(cfg, lp["xattn"], enc_out)
+        return None, (kx, vx)
+
+    _, (xk, xv) = jax.lax.scan(xbody, None, params["decoder"]["layers"])
+    cache["xk"] = xk.astype(cache_dtype)
+    cache["xv"] = xv.astype(cache_dtype)
+
+    h, kv = _decoder_hidden(cfg, params, tokens, enc_out, ctx, collect_kv=True)
+    k, v = kv
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache_dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache_dtype), (0, 0, 0, 0, 0))
+    logits = nn.logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+def encdec_decode_step(cfg, params, cache, tokens, pos, ctx=None):
+    """One decoder step. tokens: (B,); pos: scalar int32."""
+    x = nn.embed_tokens(cfg, params["embed"], tokens[:, None])
+    sin, cos = nn.rope_tables(pos[None] if jnp.ndim(pos) == 0 else pos,
+                              cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, sl):
+        y, kcache, vcache = carry
+        lp, xk, xv, li = sl
+        kc = jax.lax.dynamic_index_in_dim(kcache, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vcache, li, 0, keepdims=False)
+        h = nn.rms_norm(y, lp["ln1"], cfg.norm_eps)
+        q, k, v = nn.qkv_project(cfg, lp["attn"], h)
+        q = nn.apply_rope(q, sin, cos)
+        k = nn.apply_rope(k, sin, cos)
+        kc, vc = nn.cache_update(kc, vc, k, v, pos)
+        o = nn.decode_attention(q, kc, vc, pos)
+        y = y + nn.out_project(cfg, lp["attn"], o)
+        hx = nn.rms_norm(y, lp["lnx"], cfg.norm_eps)
+        qx, _, _ = nn.qkv_project(cfg, lp["xattn"], hx)
+        ox = nn.decode_attention(qx, xk, xv, jnp.asarray(xk.shape[1] - 1))
+        y = y + nn.out_project(cfg, lp["xattn"], ox)
+        h2 = nn.rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + nn.mlp(cfg, lp["mlp"], h2)
+        kcache = jax.lax.dynamic_update_index_in_dim(
+            kcache, kc.astype(kcache.dtype), li, 0)
+        vcache = jax.lax.dynamic_update_index_in_dim(
+            vcache, vc.astype(vcache.dtype), li, 0)
+        return (y, kcache, vcache), None
+
+    (x, k_new, v_new), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["decoder"]["layers"], cache["xk"], cache["xv"],
+         jnp.arange(cfg.num_layers)))
+    x = nn.rms_norm(x, params["decoder"]["final_ln"], cfg.norm_eps)
+    logits = nn.logits_from_hidden(cfg, params["embed"], x)[:, 0, :]
+    cache_new = dict(cache)
+    cache_new["k"] = k_new
+    cache_new["v"] = v_new
+    return logits, cache_new

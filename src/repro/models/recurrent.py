@@ -1,0 +1,137 @@
+"""Griffin-style recurrent block (RG-LRU) for recurrentgemma [arXiv:2402.19427].
+
+Block: x -> (W_gelu branch) * (conv1d -> RG-LRU branch) -> W_out.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan (log-depth, fully counted by
+HLO cost analysis — no scan-body undercount); decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+RG_LRU_C = 8.0
+
+
+def init_recurrent_block(key, cfg, layers: Optional[int] = None):
+    D, R, W = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    L = (layers,) if layers else ()
+    lax_pref = ("layers",) if layers else ()
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_gelu": normal_init(ks[0], L + (D, R), pdt, 1.0 / math.sqrt(D)),
+        "w_in":   normal_init(ks[1], L + (D, R), pdt, 1.0 / math.sqrt(D)),
+        "w_out":  normal_init(ks[2], L + (R, D), pdt, 1.0 / math.sqrt(R)),
+        "conv_w": normal_init(ks[3], L + (W, R), pdt, 1.0 / math.sqrt(W)),
+        "conv_b": jnp.zeros(L + (R,), pdt),
+        "wa":     normal_init(ks[4], L + (R, R), pdt, 1.0 / math.sqrt(R)),
+        "ba":     jnp.zeros(L + (R,), pdt),
+        "wx":     normal_init(ks[5], L + (R, R), pdt, 1.0 / math.sqrt(R)),
+        "bx":     jnp.zeros(L + (R,), pdt),
+        # Lambda init so that a^c in [0.9, 0.999] (paper init)
+        "lam":    normal_init(ks[6], L + (R,), pdt, 0.0) + 0.7,
+    }
+    ax = {
+        "w_gelu": lax_pref + ("embed", "rnn"),
+        "w_in":   lax_pref + ("embed", "rnn"),
+        "w_out":  lax_pref + ("rnn", "embed"),
+        "conv_w": lax_pref + (None, "rnn"),
+        "conv_b": lax_pref + ("rnn",),
+        "wa":     lax_pref + ("embed", "rnn"),
+        "ba":     lax_pref + ("rnn",),
+        "wx":     lax_pref + ("embed", "rnn"),
+        "bx":     lax_pref + ("rnn",),
+        "lam":    lax_pref + ("rnn",),
+    }
+    return p, ax
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,R); w: (W,R); state: (B,W-1,R) or None.
+
+    Returns (y, new_state). With state, the conv sees [state, x]."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, R)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):  # W is tiny (4): unrolled taps
+        y = y + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = (y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    return y, new_state
+
+
+def _rg_lru_gates(p, u):
+    """u: (B,S,R) post-conv branch -> (a, beta_x) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["wa"].astype(jnp.float32))
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["wx"].astype(jnp.float32))
+                       + p["bx"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rg_lru_scan(p, u, h0=None):
+    """Full-sequence RG-LRU via associative scan. u: (B,S,R) -> (y, h_last)."""
+    a, b = _rg_lru_gates(p, u)
+    if h0 is not None:
+        # fold the carry state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rg_lru_step(p, u_t, h):
+    """Single decode step. u_t: (B,R); h: (B,R) f32 -> (y_t, h_new)."""
+    a, b = _rg_lru_gates(p, u_t[:, None, :])
+    h_new = a[:, 0, :] * h + b[:, 0, :]
+    return h_new.astype(u_t.dtype), h_new
+
+
+def recurrent_block(cfg, p, x, *, conv_state=None, h_state=None, decode=False):
+    """Griffin recurrent temporal-mixing block.
+
+    Train/prefill: x (B,S,D) -> (y, (conv_state, h_last)).
+    Decode: x (B,1,D), states given -> (y, new states)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gelu"].astype(dt))
+                       .astype(jnp.float32)).astype(dt)
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in"].astype(dt))
+    u, conv_state_new = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    if decode:
+        y_t, h_new = rg_lru_step(p, u[:, 0, :], h_state)
+        y = y_t[:, None, :]
+    else:
+        y, h_new = rg_lru_scan(p, u, h_state)
+    out = jnp.einsum("bsr,rd->bsd", gate * y, p["w_out"].astype(dt))
+    return out, (conv_state_new, h_new)
+
+
+def init_recurrent_state(cfg, batch: int, dtype=jnp.float32):
+    """Decode state for one recurrent layer: (conv_state, h)."""
+    return (jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+            jnp.zeros((batch, cfg.d_rnn), jnp.float32))

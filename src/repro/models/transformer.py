@@ -1,0 +1,658 @@
+"""Decoder LM assembly: scan-over-layers, all families, train + prefill + decode.
+
+Families:
+  dense / moe / vlm : homogeneous layer stack, lax.scan over L stacked params.
+  hybrid (griffin)  : pattern groups (rec, rec, attn) scanned over G + tail.
+  ssm (xlstm)       : pattern groups (mlstm, slstm) scanned over G.
+
+Scan-over-layers keeps compile time depth-independent (critical for the 88-L
+dry-runs on the CPU container) and is the production choice anyway.
+
+Activation sharding hints are applied through an optional ``ctx`` (ShardCtx);
+with ctx=None the code is mesh-free (CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models import xlstm as xlstm_lib
+
+
+# ---------------------------------------------------------------------------
+# Sharding context for activations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Any
+    resolver: Any   # repro.sharding.Resolver
+
+    def act(self, x, *logical):
+        from jax.sharding import NamedSharding
+        spec = self.resolver.spec(logical, x.shape, name="act")
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def tp_size(self) -> int:
+        r = self.resolver.rules
+        return r.axis_size(self.mesh, r.model_axes)
+
+
+def _act(ctx, x, *logical):
+    return ctx.act(x, *logical) if ctx is not None else x
+
+
+# ---------------------------------------------------------------------------
+# Layer init (per family)
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer_stack(key, cfg, L):
+    ks = jax.random.split(key, 4)
+    attn_p, attn_ax = nn.init_attention(ks[0], cfg, layers=L)
+    if cfg.family == "moe" and cfg.num_experts:
+        mlp_p, mlp_ax = moe_lib.init_moe(ks[1], cfg, layers=L)
+    else:
+        mlp_p, mlp_ax = nn.init_mlp(ks[1], cfg, layers=L)
+    pdt = jnp.dtype(cfg.param_dtype)
+    p = {"attn": attn_p, "mlp": mlp_p,
+         "ln1": jnp.zeros((L, cfg.d_model), pdt),
+         "ln2": jnp.zeros((L, cfg.d_model), pdt)}
+    ax = {"attn": attn_ax, "mlp": mlp_ax,
+          "ln1": ("layers", "embed"), "ln2": ("layers", "embed")}
+    return p, ax
+
+
+def _init_hybrid_group_stack(key, cfg, pattern, G):
+    """One stacked group of blocks following ``pattern`` (e.g. rec,rec,attn)."""
+    p, ax = {}, {}
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2 * len(pattern))
+    for i, kind in enumerate(pattern):
+        name = f"b{i}_{kind}"
+        if kind == "attention":
+            bp, bax = nn.init_attention(ks[2 * i], cfg, layers=G)
+        elif kind == "recurrent":
+            bp, bax = rec_lib.init_recurrent_block(ks[2 * i], cfg, layers=G)
+        elif kind == "mlstm":
+            bp, bax = xlstm_lib.init_mlstm_block(ks[2 * i], cfg, layers=G)
+        elif kind == "slstm":
+            bp, bax = xlstm_lib.init_slstm_block(ks[2 * i], cfg, layers=G)
+        else:
+            raise ValueError(kind)
+        entry = {"core": bp, "ln": jnp.zeros((G, cfg.d_model), pdt)}
+        entry_ax = {"core": bax, "ln": ("layers", "embed")}
+        if kind in ("attention", "recurrent") and cfg.d_ff:
+            mp, max_ = nn.init_mlp(ks[2 * i + 1], cfg, layers=G)
+            entry["mlp"] = mp
+            entry["ln2"] = jnp.zeros((G, cfg.d_model), pdt)
+            entry_ax["mlp"] = max_
+            entry_ax["ln2"] = ("layers", "embed")
+        p[name] = entry
+        ax[name] = entry_ax
+    return p, ax
+
+
+def init_lm(key, cfg):
+    """Returns (params, logical_axes)."""
+    ks = jax.random.split(key, 4)
+    emb_p, emb_ax = nn.init_embedding(ks[0], cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    params: Dict[str, Any] = {"embed": emb_p,
+                              "final_ln": jnp.zeros((cfg.d_model,), pdt)}
+    axes: Dict[str, Any] = {"embed": emb_ax, "final_ln": ("embed",)}
+
+    if cfg.block_pattern:
+        pat = tuple(cfg.block_pattern)
+        G = cfg.num_layers // len(pat)
+        tail_len = cfg.num_layers - G * len(pat)
+        gp, gax = _init_hybrid_group_stack(ks[1], cfg, pat, G)
+        params["groups"] = gp
+        axes["groups"] = gax
+        if tail_len:
+            tp, tax = _init_hybrid_group_stack(ks[2], cfg, pat[:tail_len], 1)
+            params["tail"] = tp
+            axes["tail"] = tax
+    else:
+        lp, lax_ = _init_dense_layer_stack(ks[1], cfg, cfg.num_layers)
+        params["layers"] = lp
+        axes["layers"] = lax_
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Block applications (full-sequence mode)
+# ---------------------------------------------------------------------------
+
+def _attn_full(cfg, lp, x, sin, cos, ctx, window: int = 0):
+    """Pre-norm attention sub-block, full sequence."""
+    h = nn.rms_norm(x, lp["ln1"] if "ln1" in lp else lp["ln"], cfg.norm_eps)
+    # sequence-parallel boundary: x stays seq-sharded, the norm runs locally
+    # (per-token), and the all-gather moves the bf16 normed activations
+    h = _act(ctx, h, "batch", None, None)
+    q, k, v = nn.qkv_project(cfg, lp["attn"] if "attn" in lp else lp["core"], h)
+    q = nn.apply_rope(q, sin, cos)
+    k = nn.apply_rope(k, sin, cos)
+    # Inside attention: tensor-parallel over heads; when heads % TP != 0 the
+    # batch dim takes data*model instead (fully-local attention). The q and
+    # k/v layouts are COUPLED: if q shards heads, k/v either shard kv_heads
+    # (divisible) or replicate over the model axis (GQA kv < TP: each kv head
+    # lives on H/KV devices — the standard replication trick); k/v must never
+    # take a batch layout different from q's. head_dim is deliberately NOT a
+    # candidate for activations: it is a contraction dim, and sharding it
+    # turns every QK^T/PV einsum into an S^2-sized all-reduce. The seq dim
+    # must not pick up the model axis here either (attention chunking
+    # reshapes seq -> replicate-repartition storms).
+    tp = ctx.tp_size() if ctx is not None else 1
+    heads_ok = q.shape[2] % tp == 0
+    kv_ok = k.shape[2] % tp == 0
+    if heads_ok:
+        q = _act(ctx, q, "batch", None, "heads", None)
+        kv_name = "kv_heads" if kv_ok else None
+        k = _act(ctx, k, "batch", None, kv_name, None)
+        v = _act(ctx, v, "batch", None, kv_name, None)
+    else:
+        q = _act(ctx, q, "batch_dm", None, None, None)
+        k = _act(ctx, k, "batch_dm", None, None, None)
+        v = _act(ctx, v, "batch_dm", None, None, None)
+    o = _attention_dispatch(cfg, q, k, v, window)
+    o = nn.out_project(cfg, lp["attn"] if "attn" in lp else lp["core"], o)
+    return x + _act(ctx, o, "batch", "seq", None)
+
+
+def _attention_dispatch(cfg, q, k, v, window: int = 0):
+    """Pick the attention implementation by sequence length / config.
+
+    S <= CHUNKED_THRESHOLD: exact einsum (O(S^2) logits, fine at this size).
+    Larger S: flash-in-XLA chunked scans (O(chunk) memory, GSPMD-shardable).
+    attention_impl="pallas": the Pallas flash kernel (TPU production path)."""
+    S = q.shape[1]
+    if cfg.attention_impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=True, window=window)
+    if window and S > window:
+        return nn.chunked_window_attention(q, k, v, window)
+    if S > nn.CHUNKED_THRESHOLD:
+        return nn.chunked_causal_attention(q, k, v)
+    return nn.causal_attention(q, k, v)
+
+
+def _mlp_sub(cfg, lp, x, ctx, ln_key="ln2", mlp_key="mlp"):
+    h = nn.rms_norm(x, lp[ln_key], cfg.norm_eps)
+    h = _act(ctx, h, "batch", None, None)   # SP boundary (see _attn_full)
+    if cfg.family == "moe" and mlp_key == "mlp" and cfg.num_experts and "router" in lp[mlp_key]:
+        o, aux = moe_lib.moe_mlp(cfg, lp[mlp_key], h, ctx=ctx)
+    else:
+        o, aux = nn.mlp(cfg, lp[mlp_key], h), {}
+    return x + _act(ctx, o, "batch", "seq", None), aux
+
+
+def _dense_layer_full(cfg, lp, x, sin, cos, ctx):
+    x = _attn_full(cfg, lp, x, sin, cos, ctx)
+    x, aux = _mlp_sub(cfg, lp, x, ctx)
+    return x, aux
+
+
+def _hybrid_group_full(cfg, gp, x, sin, cos, ctx, pattern):
+    """Apply one (stack-sliced) pattern group, full sequence. Returns (x, aux)."""
+    auxes = {}
+    for i, kind in enumerate(pattern):
+        lp = gp[f"b{i}_{kind}"]
+        if kind == "attention":
+            x = _attn_full(cfg, {"ln1": lp["ln"], "attn": lp["core"]},
+                           x, sin, cos, ctx, window=cfg.window_size)
+            if "mlp" in lp:
+                x, _ = _mlp_sub(cfg, lp, x, ctx)
+        elif kind == "recurrent":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            h = _act(ctx, h, "batch", None, None)
+            o, _ = rec_lib.recurrent_block(cfg, lp["core"], h)
+            x = x + _act(ctx, o, "batch", "seq", None)
+            if "mlp" in lp:
+                x, _ = _mlp_sub(cfg, lp, x, ctx)
+        elif kind == "mlstm":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            h = _act(ctx, h, "batch", None, None)
+            o, _ = xlstm_lib.mlstm_block(cfg, lp["core"], h)
+            x = x + _act(ctx, o, "batch", "seq", None)
+        elif kind == "slstm":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            h = _act(ctx, h, "batch", None, None)
+            o, _ = xlstm_lib.slstm_block(cfg, lp["core"], h)
+            x = x + _act(ctx, o, "batch", "seq", None)
+    return x, auxes
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    else:
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def lm_hidden(cfg, params, tokens, ctx=None, frontend_embeds=None,
+              collect_kv: bool = False):
+    """tokens: (B, S_text) int32. frontend_embeds: (B, P, D) or None.
+
+    Returns (hidden (B,S,D), kv_stack or None, aux dict). S = P + S_text.
+    kv_stack (dense families only): (k, v) each (L, B, S, KV, hd)."""
+    x = nn.embed_tokens(cfg, params["embed"], tokens)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    B, S, D = x.shape
+    x = _act(ctx, x, "batch", "seq", None)
+    sin, cos = nn.rope_tables(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    aux_out: Dict[str, Any] = {}
+
+    if cfg.block_pattern:
+        pat = tuple(cfg.block_pattern)
+        G = cfg.num_layers // len(pat)
+
+        def gbody(carry, gp):
+            y, _ = _hybrid_group_full(cfg, gp, carry, sin, cos, ctx, pat)
+            return y, None
+
+        x, _ = jax.lax.scan(_remat(cfg, gbody), x, params["groups"])
+        if "tail" in params:
+            tail_pat = pat[: len(_pattern_tail(cfg))]
+
+            def tbody(carry, gp):
+                y, _ = _hybrid_group_full(cfg, gp, carry, sin, cos, ctx, tail_pat)
+                return y, None
+
+            x, _ = jax.lax.scan(_remat(cfg, tbody), x, params["tail"])
+        kv = None
+    else:
+        is_moe = cfg.family == "moe" and cfg.num_experts > 0
+
+        def body(carry, lp):
+            y, aux = _dense_layer_full(cfg, lp, carry, sin, cos, ctx)
+            if collect_kv:
+                # re-derive this layer's K/V from the *input* activations to
+                # seed the decode cache (prefill path only)
+                hq = nn.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+                _, k, v = nn.qkv_project(cfg, lp["attn"], hq)
+                k = nn.apply_rope(k, sin, cos)
+                out = (k, v)
+            elif is_moe:
+                out = aux
+            else:
+                out = None
+            return y, out
+
+        G = remat_group_size(cfg)
+        if collect_kv or G == 1:
+            x, ys = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+        else:
+            # scan-of-scans remat: checkpoint GROUPS of G layers so the
+            # saved residual-stream carries shrink L -> L/G (the standard
+            # sqrt-style activation-checkpointing trade; bwd recomputes one
+            # group forward). Only the bwd path cares, so prefill keeps the
+            # flat scan.
+            NG = cfg.num_layers // G
+            grouped = jax.tree.map(
+                lambda a: a.reshape((NG, G) + a.shape[1:]), params["layers"])
+
+            # two-level remat: the inner per-layer body is checkpointed as
+            # well, otherwise the group's bwd recompute stashes G layers of
+            # f32 residuals (norm/silu upcasts) at once — the difference
+            # between ~240 GB and ~10 GB per device at 123B/1M-token scale
+            inner = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+            def group_body(carry, gp):
+                return jax.lax.scan(inner, carry, gp)
+
+            x, ys_g = jax.lax.scan(_remat(cfg, group_body), x, grouped)
+            ys = (jax.tree.map(lambda a: a.reshape((cfg.num_layers,)
+                                                   + a.shape[2:]), ys_g)
+                  if ys_g is not None and is_moe else None)
+        kv = ys if collect_kv else None
+        if is_moe and not collect_kv and ys is not None:
+            aux_out = {k: jnp.mean(v) for k, v in ys.items()}
+    x = nn.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, kv, aux_out
+
+
+def remat_group_size(cfg) -> int:
+    """Largest divisor of num_layers <= 8 (1 disables grouping)."""
+    if cfg.remat == "none" or cfg.block_pattern:
+        return 1
+    for g in range(min(8, cfg.num_layers), 0, -1):
+        if cfg.num_layers % g == 0:
+            return g
+    return 1
+
+
+def dense_group_fwd(cfg, gp, x, sin, cos):
+    """One remat group of G stacked dense layers (dry-run cost probe; the
+    same inner-scan + inner-checkpoint structure as lm_hidden's group_body)."""
+    def body(carry, lp):
+        y, _ = _dense_layer_full(cfg, lp, carry, sin, cos, None)
+        return y, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    y, _ = jax.lax.scan(body, x, gp)
+    return y
+
+
+def _pattern_tail(cfg):
+    pat = tuple(cfg.block_pattern)
+    return pat[: cfg.num_layers - (cfg.num_layers // len(pat)) * len(pat)]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step) + cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    """Abstract-safe cache init. Returns (cache, logical_axes)."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.block_pattern:
+        pat = tuple(cfg.block_pattern)
+        G = cfg.num_layers // len(pat)
+        tail = _pattern_tail(cfg)
+
+        def group_cache(n, pattern):
+            c, a = {}, {}
+            for i, kind in enumerate(pattern):
+                name = f"b{i}_{kind}"
+                if kind == "attention":
+                    W = cfg.window_size or max_len
+                    T = min(W, max_len) if cfg.window_size else max_len
+                    c[name] = {
+                        "k": jnp.zeros((n, batch, T, KV, hd), cache_dtype),
+                        "v": jnp.zeros((n, batch, T, KV, hd), cache_dtype)}
+                    a[name] = {
+                        "k": ("layers", "batch", None, "kv_heads", "head_dim"),
+                        "v": ("layers", "batch", None, "kv_heads", "head_dim")}
+                elif kind == "recurrent":
+                    c[name] = {
+                        "conv": jnp.zeros((n, batch, cfg.conv_width - 1, cfg.d_rnn), jnp.float32),
+                        "h": jnp.zeros((n, batch, cfg.d_rnn), jnp.float32)}
+                    a[name] = {"conv": ("layers", "batch", None, "rnn"),
+                               "h": ("layers", "batch", "rnn")}
+                elif kind == "mlstm":
+                    H = cfg.num_heads
+                    c[name] = {
+                        "conv": jnp.zeros((n, batch, cfg.conv_width - 1, cfg.d_model), jnp.float32),
+                        "C": jnp.zeros((n, batch, H, hd, hd), jnp.float32),
+                        "n": jnp.zeros((n, batch, H, hd), jnp.float32),
+                        "m": jnp.full((n, batch, H), -1e30, jnp.float32)}
+                    a[name] = {"conv": ("layers", "batch", None, "inner"),
+                               "C": ("layers", "batch", "heads", "head_dim", None),
+                               "n": ("layers", "batch", "heads", "head_dim"),
+                               "m": ("layers", "batch", "heads")}
+                elif kind == "slstm":
+                    D = cfg.d_model
+                    c[name] = {
+                        "conv": jnp.zeros((n, batch, cfg.conv_width - 1, D), jnp.float32),
+                        "c": jnp.zeros((n, batch, D), jnp.float32),
+                        "n2": jnp.zeros((n, batch, D), jnp.float32),
+                        "h": jnp.zeros((n, batch, D), jnp.float32),
+                        "m": jnp.full((n, batch, D), -1e30, jnp.float32)}
+                    a[name] = {"conv": ("layers", "batch", None, "inner"),
+                               "c": ("layers", "batch", "inner"),
+                               "n2": ("layers", "batch", "inner"),
+                               "h": ("layers", "batch", "inner"),
+                               "m": ("layers", "batch", "inner")}
+            return c, a
+
+        cache, axes = {}, {}
+        cache["groups"], axes["groups"] = group_cache(G, pat)
+        if tail:
+            cache["tail"], axes["tail"] = group_cache(1, tail)
+        return cache, axes
+
+    L = cfg.num_layers
+    cache = {"k": jnp.zeros((L, batch, max_len, KV, hd), cache_dtype),
+             "v": jnp.zeros((L, batch, max_len, KV, hd), cache_dtype)}
+    axes = {"k": ("layers", "batch", None, "kv_heads", "head_dim"),
+            "v": ("layers", "batch", None, "kv_heads", "head_dim")}
+    return cache, axes
+
+
+def _attn_decode(cfg, lp, x, kc, vc, sin, cos, pos, ctx, window: int = 0):
+    """One attention block, single token. kc/vc: (B,T,KV,hd). Returns
+    (y, kc_new, vc_new)."""
+    h = nn.rms_norm(x, lp["ln1"] if "ln1" in lp else lp["ln"], cfg.norm_eps)
+    ap = lp["attn"] if "attn" in lp else lp["core"]
+    q, k, v = nn.qkv_project(cfg, ap, h)
+    q = nn.apply_rope(q, sin, cos)
+    k = nn.apply_rope(k, sin, cos)
+    # Decode layout must FOLLOW the cache layout (gathering a 32k-token KV
+    # cache per step would dwarf the step itself). With GQA kv < TP the cache
+    # shards head_dim over the model axis, so q/k/v take head_dim sharding
+    # and the QK^T partial products all-reduce only (B,1,T)-sized logits.
+    tp = ctx.tp_size() if ctx is not None else 1
+    if k.shape[2] % tp == 0:
+        q = _act(ctx, q, "batch", None, "heads", None)
+        k = _act(ctx, k, "batch", None, "kv_heads", None)
+        v = _act(ctx, v, "batch", None, "kv_heads", None)
+    else:
+        q = _act(ctx, q, "batch", None, None, "head_dim")
+        k = _act(ctx, k, "batch", None, None, "head_dim")
+        v = _act(ctx, v, "batch", None, None, "head_dim")
+    kc, vc = nn.cache_update(kc, vc, k, v, pos, window=window)
+    o = nn.decode_attention(q, kc, vc, pos, window=window)
+    o = _act(ctx, o, "batch", None, None, None)
+    o = nn.out_project(cfg, ap, o)
+    return x + _act(ctx, o, "batch", None, None), kc, vc
+
+
+def lm_decode_step(cfg, params, cache, tokens, pos, ctx=None):
+    """One serve step. tokens: (B,) int32; pos: scalar int32 (0-based absolute
+    position of this token). Returns (logits (B,V), new_cache)."""
+    x = nn.embed_tokens(cfg, params["embed"], tokens[:, None])   # (B,1,D)
+    x = _act(ctx, x, "batch", None, None)
+    sin, cos = nn.rope_tables(pos[None] if jnp.ndim(pos) == 0 else pos,
+                              cfg.head_dim, cfg.rope_theta)
+
+    if cfg.block_pattern:
+        pat = tuple(cfg.block_pattern)
+
+        def make_gbody(pattern):
+            def gbody(carry, sl):
+                gp, gc = sl
+                y = carry
+                gc_new = {}
+                for i, kind in enumerate(pattern):
+                    name = f"b{i}_{kind}"
+                    lp, c = gp[name], gc[name]
+                    if kind == "attention":
+                        y, kc, vc = _attn_decode(
+                            cfg, {"ln": lp["ln"], "core": lp["core"]},
+                            y, c["k"], c["v"], sin, cos, pos,
+                            ctx, window=cfg.window_size)
+                        gc_new[name] = {"k": kc, "v": vc}
+                        if "mlp" in lp:
+                            y, _ = _mlp_sub(cfg, lp, y, ctx)
+                    elif kind == "recurrent":
+                        h = nn.rms_norm(y, lp["ln"], cfg.norm_eps)
+                        o, (cs, hs) = rec_lib.recurrent_block(
+                            cfg, lp["core"], h,
+                            conv_state=c["conv"], h_state=c["h"], decode=True)
+                        y = y + o
+                        gc_new[name] = {"conv": cs, "h": hs}
+                        if "mlp" in lp:
+                            y, _ = _mlp_sub(cfg, lp, y, ctx)
+                    elif kind == "mlstm":
+                        h = nn.rms_norm(y, lp["ln"], cfg.norm_eps)
+                        o, (cs, cell) = xlstm_lib.mlstm_block(
+                            cfg, lp["core"], h,
+                            state=(c["conv"], (c["C"], c["n"], c["m"])),
+                            decode=True)
+                        y = y + o
+                        gc_new[name] = {"conv": cs, "C": cell[0],
+                                        "n": cell[1], "m": cell[2]}
+                    elif kind == "slstm":
+                        h = nn.rms_norm(y, lp["ln"], cfg.norm_eps)
+                        o, (cs, cell) = xlstm_lib.slstm_block(
+                            cfg, lp["core"], h,
+                            state=(c["conv"], (c["c"], c["n2"], c["h"], c["m"])),
+                            decode=True)
+                        y = y + o
+                        gc_new[name] = {"conv": cs, "c": cell[0], "n2": cell[1],
+                                        "h": cell[2], "m": cell[3]}
+                return y, gc_new
+            return gbody
+
+        x, groups_new = jax.lax.scan(make_gbody(pat), x,
+                                     (params["groups"], cache["groups"]))
+        cache_new = {"groups": groups_new}
+        if "tail" in params:
+            x, tail_new = jax.lax.scan(make_gbody(_pattern_tail(cfg)), x,
+                                       (params["tail"], cache["tail"]))
+            cache_new["tail"] = tail_new
+    else:
+        # The KV cache is a loop CARRY updated in place with
+        # dynamic_update_index (single buffer), NOT a scan xs->ys pair —
+        # the xs/ys form double-buffers the multi-GB cache (§Perf C8).
+        L = cfg.num_layers
+
+        def body(carry, sl):
+            y, kcache, vcache = carry
+            lp, li = sl
+            kc = jax.lax.dynamic_index_in_dim(kcache, li, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vcache, li, 0, keepdims=False)
+            y, kc2, vc2 = _attn_decode(cfg, lp, y, kc, vc, sin, cos, pos, ctx)
+            y, _ = _mlp_sub(cfg, lp, y, ctx)
+            kcache = jax.lax.dynamic_update_index_in_dim(
+                kcache, kc2.astype(kcache.dtype), li, 0)
+            vcache = jax.lax.dynamic_update_index_in_dim(
+                vcache, vc2.astype(vcache.dtype), li, 0)
+            return (y, kcache, vcache), None
+
+        (x, k_new, v_new), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(L)))
+        cache_new = {"k": k_new, "v": v_new}
+
+    x = nn.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = nn.logits_from_hidden(cfg, params["embed"], x)[:, 0, :]
+    logits = _act(ctx, logits, "batch", "vocab")
+    return logits, cache_new
+
+
+def _hybrid_group_prefill(cfg, gp, x, sin, cos, ctx, pattern, cache_dtype):
+    """One pattern group over the full prompt, returning decode states."""
+    states = {}
+    W = cfg.window_size
+    for i, kind in enumerate(pattern):
+        name = f"b{i}_{kind}"
+        lp = gp[name]
+        if kind == "attention":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            q, k, v = nn.qkv_project(cfg, lp["core"], h)
+            q = nn.apply_rope(q, sin, cos)
+            k = nn.apply_rope(k, sin, cos)
+            o = _attention_dispatch(cfg, q, k, v, W)
+            x = x + nn.out_project(cfg, lp["core"], o)
+            if "mlp" in lp:
+                x, _ = _mlp_sub(cfg, lp, x, ctx)
+            S = k.shape[1]
+            T = min(W or S, S)
+            # ring alignment holds when S % W == 0 (all assigned shapes)
+            states[name] = {"k": k[:, -T:].astype(cache_dtype),
+                            "v": v[:, -T:].astype(cache_dtype)}
+        elif kind == "recurrent":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            o, (cs, hs) = rec_lib.recurrent_block(cfg, lp["core"], h)
+            x = x + o
+            states[name] = {"conv": cs.astype(jnp.float32), "h": hs}
+            if "mlp" in lp:
+                x, _ = _mlp_sub(cfg, lp, x, ctx)
+        elif kind == "mlstm":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            o, (cs, cell) = xlstm_lib.mlstm_block(cfg, lp["core"], h)
+            x = x + o
+            states[name] = {"conv": cs.astype(jnp.float32), "C": cell[0],
+                            "n": cell[1], "m": cell[2]}
+        elif kind == "slstm":
+            h = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+            o, (cs, cell) = xlstm_lib.slstm_block(cfg, lp["core"], h)
+            x = x + o
+            states[name] = {"conv": cs.astype(jnp.float32), "c": cell[0],
+                            "n2": cell[1], "h": cell[2], "m": cell[3]}
+    return x, states
+
+
+def lm_prefill(cfg, params, tokens, max_len: int, ctx=None,
+               frontend_embeds=None, cache_dtype=jnp.bfloat16):
+    """Prefill: run the trunk over the prompt and build the decode cache.
+    Returns (last_logits (B,V), cache)."""
+    B = tokens.shape[0]
+    if cfg.block_pattern:
+        x = nn.embed_tokens(cfg, params["embed"], tokens)
+        x = _act(ctx, x, "batch", "seq", None)
+        S = x.shape[1]
+        sin, cos = nn.rope_tables(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+        pat = tuple(cfg.block_pattern)
+
+        def make_gbody(pattern):
+            def gbody(carry, gp):
+                return _hybrid_group_prefill(cfg, gp, carry, sin, cos, ctx,
+                                             pattern, cache_dtype)
+            return gbody
+
+        x, groups_state = jax.lax.scan(make_gbody(pat), x, params["groups"])
+        cache = {"groups": groups_state}
+        if "tail" in params:
+            x, tail_state = jax.lax.scan(make_gbody(_pattern_tail(cfg)), x,
+                                         params["tail"])
+            cache["tail"] = tail_state
+        x = nn.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = nn.logits_from_hidden(cfg, params["embed"], x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    h, kv, _ = lm_hidden(cfg, params, tokens, ctx, frontend_embeds,
+                         collect_kv=True)
+    cache, _ = init_cache(cfg, B, max_len, cache_dtype)
+    k, v = kv   # (L, B, S, KV, hd)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache_dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache_dtype), (0, 0, 0, 0, 0))
+    logits = nn.logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+def lm_loss(cfg, params, batch, ctx=None):
+    """batch: {"tokens": (B,S), "targets": (B,S), ["frontend_embeds"]}.
+
+    Loss over text positions only (frontend positions excluded). Long
+    sequences stream the head+CE over seq chunks so (B,S,V) logits never
+    materialize."""
+    fe = batch.get("frontend_embeds")
+    h, _, aux = lm_hidden(cfg, params, batch["tokens"], ctx, fe)
+    if fe is not None:
+        h = h[:, fe.shape[1]:, :]     # text positions only
+    if h.shape[1] > nn.CE_CHUNK:
+        # gather the (bf16) hidden over seq ONCE before the CE scan — the
+        # scan slices seq, and slicing a seq-sharded tensor reshards per step
+        h = _act(ctx, h, "batch", None, None)
+        loss = nn.chunked_cross_entropy(cfg, params["embed"], h,
+                                        batch["targets"])
+    else:
+        logits = nn.logits_from_hidden(cfg, params["embed"], h)
+        logits = _act(ctx, logits, "batch", "seq", "vocab")
+        loss = nn.cross_entropy_loss(logits, batch["targets"])
+    metrics = {"loss": loss}
+    for k, v in aux.items():
+        metrics[k] = v
+    if "moe_aux" in aux:
+        loss = loss + 0.01 * aux["moe_aux"]
+    return loss, metrics

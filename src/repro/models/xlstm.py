@@ -1,0 +1,387 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, sequential) — attention-free, O(1)-state decode.
+
+mLSTM training uses an exact *chunkwise* form (TFLA-style): intra-chunk
+quadratic attention-like compute + inter-chunk recurrent (C, n, m) state,
+stabilized in log space. This keeps prefill_32k sub-quadratic
+(O(S * chunk + S * d^2)) instead of O(S^2).
+
+    true state:  C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    stabilized:  C = Cbar * exp(m); per chunk, with lf = logsigmoid(f_raw),
+                 cum_j = inclusive-cumsum(lf), M = max(m_prev, max_j(i_j - cum_j)):
+                 w_j   = exp(i_j - cum_j - M)                (intra weights)
+                 Cbar' = exp(m_prev - M) Cbar + sum_j w_j k_j v_j^T
+                 m'    = cum_C + M
+                 h_t   = num_t / max(|q_t . n_t|, exp(-m_loc_t)), m_loc_t = cum_t + M
+
+The quadratic reference (ref_mlstm_quadratic) and the sequential reference
+(ref_mlstm_sequential) are used to validate the chunkwise form in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rms_norm
+from repro.models.recurrent import _causal_conv
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg, layers: Optional[int] = None):
+    D, H, hd, W = cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.conv_width
+    assert H * hd == D, ("mLSTM inner dim must equal d_model", H, hd, D)
+    L = (layers,) if layers else ()
+    lax_pref = ("layers",) if layers else ()
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 9)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "w_up":   normal_init(ks[0], L + (D, 2 * D), pdt, s),
+        "conv_w": normal_init(ks[1], L + (W, D), pdt, 1.0 / math.sqrt(W)),
+        "conv_b": jnp.zeros(L + (D,), pdt),
+        "wq":     normal_init(ks[2], L + (D, H, hd), pdt, s),
+        "wk":     normal_init(ks[3], L + (D, H, hd), pdt, s),
+        "wv":     normal_init(ks[4], L + (D, H, hd), pdt, s),
+        "wi":     normal_init(ks[5], L + (D, H), pdt, s),
+        "bi":     jnp.zeros(L + (H,), pdt),
+        "wf":     normal_init(ks[6], L + (D, H), pdt, s),
+        "bf":     jnp.full(L + (H,), 3.0, pdt),   # forget-gate bias init: remember
+        "gn":     jnp.zeros(L + (D,), pdt),
+        "w_down": normal_init(ks[7], L + (D, D), pdt, s),
+    }
+    ax = {
+        "w_up":   lax_pref + ("embed", "inner"),
+        "conv_w": lax_pref + (None, "inner"),
+        "conv_b": lax_pref + ("inner",),
+        "wq":     lax_pref + ("embed", "heads", "head_dim"),
+        "wk":     lax_pref + ("embed", "heads", "head_dim"),
+        "wv":     lax_pref + ("embed", "heads", "head_dim"),
+        "wi":     lax_pref + ("embed", "heads"),
+        "bi":     lax_pref + ("heads",),
+        "wf":     lax_pref + ("embed", "heads"),
+        "bf":     lax_pref + ("heads",),
+        "gn":     lax_pref + ("inner",),
+        "w_down": lax_pref + ("inner", "embed"),
+    }
+    return p, ax
+
+
+def init_slstm_block(key, cfg, layers: Optional[int] = None):
+    D, H, hd, W = cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.conv_width
+    L = (layers,) if layers else ()
+    lax_pref = ("layers",) if layers else ()
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(D)
+    sr = 1.0 / math.sqrt(hd)
+    F = int(cfg.proj_factor * D)
+    p = {
+        "conv_w": normal_init(ks[0], L + (W, D), pdt, 1.0 / math.sqrt(W)),
+        "conv_b": jnp.zeros(L + (D,), pdt),
+        "wz": normal_init(ks[1], L + (D, D), pdt, s),
+        "wi": normal_init(ks[2], L + (D, D), pdt, s),
+        "wf": normal_init(ks[3], L + (D, D), pdt, s),
+        "wo": normal_init(ks[4], L + (D, D), pdt, s),
+        "rz": normal_init(ks[5], L + (H, hd, hd), pdt, sr),
+        "ri": normal_init(ks[6], L + (H, hd, hd), pdt, sr),
+        "rf": normal_init(ks[7], L + (H, hd, hd), pdt, sr),
+        "ro": normal_init(ks[8], L + (H, hd, hd), pdt, sr),
+        "bz": jnp.zeros(L + (D,), pdt),
+        "bi": jnp.zeros(L + (D,), pdt),
+        "bf": jnp.full(L + (D,), 3.0, pdt),
+        "bo": jnp.zeros(L + (D,), pdt),
+        "gn": jnp.zeros(L + (D,), pdt),
+        # gated FFN
+        "w_gate": normal_init(ks[9], L + (D, F), pdt, s),
+        "w_upf":  normal_init(ks[10], L + (D, F), pdt, s),
+        "w_downf": normal_init(ks[11], L + (F, D), pdt, 1.0 / math.sqrt(F)),
+    }
+    ax = {
+        "conv_w": lax_pref + (None, "inner"),
+        "conv_b": lax_pref + ("inner",),
+        "wz": lax_pref + ("embed", "inner"),
+        "wi": lax_pref + ("embed", "inner"),
+        "wf": lax_pref + ("embed", "inner"),
+        "wo": lax_pref + ("embed", "inner"),
+        "rz": lax_pref + ("heads", "head_dim", None),
+        "ri": lax_pref + ("heads", "head_dim", None),
+        "rf": lax_pref + ("heads", "head_dim", None),
+        "ro": lax_pref + ("heads", "head_dim", None),
+        "bz": lax_pref + ("inner",),
+        "bi": lax_pref + ("inner",),
+        "bf": lax_pref + ("inner",),
+        "bo": lax_pref + ("inner",),
+        "gn": lax_pref + ("inner",),
+        "w_gate": lax_pref + ("embed", "mlp"),
+        "w_upf":  lax_pref + ("embed", "mlp"),
+        "w_downf": lax_pref + ("mlp", "embed"),
+    }
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise (training / prefill)
+# ---------------------------------------------------------------------------
+
+def mlstm_chunk_body(carry, xs):
+    """One chunk of the chunkwise mLSTM (scan body; also a dry-run cost probe).
+
+    carry = (Cbar, nbar, m); xs = (q, k, v, i_raw, f_raw) with q/k/v
+    (B,H,c,hd) and gates (B,H,c) f32."""
+    Cbar, nbar, m = carry
+    qq, kk, vv, ii, ff = xs
+    chunk = qq.shape[-2]
+    lf = jax.nn.log_sigmoid(ff)         # (B,H,c)
+    cum = jnp.cumsum(lf, axis=-1)       # inclusive
+    total = cum[..., -1]                # (B,H)
+    M = jnp.maximum(m, jnp.max(ii - cum, axis=-1))          # (B,H)
+    w = jnp.exp(ii - cum - M[..., None])                    # (B,H,c)
+    m_loc = cum + M[..., None]                              # (B,H,c)
+
+    qf = qq.astype(jnp.float32)
+    kf = kk.astype(jnp.float32)
+    vf = vv.astype(jnp.float32)
+
+    # intra-chunk: weight of pair (t,j), j<=t, after exp(-m_loc_t) scaling,
+    # is exp(i_j - cum_j - M) = w_j (independent of t).
+    s_tj = jnp.einsum("bhtd,bhjd->bhtj", qf, kf) * w[..., None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    s_tj = jnp.where(tri, s_tj, 0.0)
+    num_intra = jnp.einsum("bhtj,bhjd->bhtd", s_tj, vf)
+
+    # inter-chunk: exp(m_prev - M) carried state
+    inter_scale = jnp.exp(m - M)[..., None, None]           # (B,H,1,1)
+    num_inter = jnp.einsum("bhtd,bhde->bhte", qf, Cbar) * inter_scale
+    qn_inter = jnp.einsum("bhtd,bhd->bht", qf, nbar)[..., None] * inter_scale
+
+    num = num_intra + num_inter                             # (B,H,c,hd)
+    # denominator: q.n_t = sum_{j<=t} (q.k_j) w_j + e^{m-M} q.nbar
+    qn = jnp.sum(s_tj, axis=-1)[..., None] + qn_inter       # (B,H,c,1)
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_loc)[..., None])
+    h = num / den                                           # (B,H,c,hd)
+
+    # state update: with m_new = total + M,
+    #   carry scale  exp(m + total - m_new) = exp(m - M)
+    #   token weight exp(i_j + total - cum_j - m_new) = w_j
+    m_new = total + M
+    carry_scale = jnp.exp(m - M)
+    Cbar_new = (carry_scale[..., None, None] * Cbar
+                + jnp.einsum("bhj,bhjd,bhje->bhde", w, kf, vf))
+    nbar_new = (carry_scale[..., None] * nbar
+                + jnp.einsum("bhj,bhjd->bhd", w, kf))
+    return (Cbar_new, nbar_new, m_new), h
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk: int,
+                    state: Optional[Tuple] = None):
+    """Exact chunkwise mLSTM. q,k,v: (B,H,S,hd); gates (B,H,S) f32.
+
+    Returns (h (B,H,S,hd), (Cbar, nbar, m) final state)."""
+    B, H, S, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    NC = S // chunk
+
+    qc = q.reshape(B, H, NC, chunk, hd).transpose(2, 0, 1, 3, 4)  # (NC,B,H,c,hd)
+    kc = k.reshape(B, H, NC, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, NC, chunk, hd).transpose(2, 0, 1, 3, 4)
+    ic = i_raw.reshape(B, H, NC, chunk).transpose(2, 0, 1, 3)     # (NC,B,H,c)
+    fc = f_raw.reshape(B, H, NC, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        Cbar = jnp.zeros((B, H, hd, hd), jnp.float32)
+        nbar = jnp.zeros((B, H, hd), jnp.float32)
+        m = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        Cbar, nbar, m = state
+
+    body = jax.checkpoint(mlstm_chunk_body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (Cbar, nbar, m), hs = jax.lax.scan(body, (Cbar, nbar, m),
+                                       (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    return h, (Cbar, nbar, m)
+
+
+def mlstm_step(q_t, k_t, v_t, i_t, f_t, state):
+    """Single-token mLSTM recurrence (decode).
+
+    q/k/v_t: (B,H,hd); i/f_t: (B,H) f32; state=(Cbar,nbar,m)."""
+    Cbar, nbar, m = state
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q_t, k_t, v_t))
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m, i_t)
+    fg = jnp.exp(lf + m - m_new)          # (B,H)
+    ig = jnp.exp(i_t - m_new)
+    Cbar = fg[..., None, None] * Cbar + ig[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    nbar = fg[..., None] * nbar + ig[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, Cbar)
+    qn = jnp.einsum("bhd,bhd->bh", qf, nbar)
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))[..., None]
+    h = (num / den).astype(q_t.dtype)
+    return h, (Cbar, nbar, m_new)
+
+
+def ref_mlstm_sequential(q, k, v, i_raw, f_raw):
+    """Token-by-token oracle for tests. q,k,v: (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.full((B, H), -1e30, jnp.float32))
+
+    def body(st, xs):
+        qt, kt, vt, it, ft = xs
+        h, st = mlstm_step(qt, kt, vt, it, ft, st)
+        return st, h
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), i_raw.transpose(2, 0, 1),
+          f_raw.transpose(2, 0, 1))
+    _, hs = jax.lax.scan(body, state, xs)
+    return hs.transpose(1, 2, 0, 3)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _head_groupnorm(h, scale, eps=1e-6):
+    """Per-head RMS norm. h: (B,S,H,hd); scale: (H*hd,)."""
+    B, S, H, hd = h.shape
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    y = hf * jax.lax.rsqrt(var + eps)
+    y = y.reshape(B, S, H * hd) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(h.dtype)
+
+
+def mlstm_block(cfg, p, x, *, state=None, decode=False):
+    """x: (B,S,D) -> (y, new_state). State = (conv_state, (Cbar, nbar, m))."""
+    dt = x.dtype
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(dt))
+    u, g = up[..., :D], up[..., D:]
+
+    conv_state = state[0] if state is not None else None
+    uc, conv_state_new = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    uc = jax.nn.silu(uc.astype(jnp.float32)).astype(dt)
+    q = jnp.einsum("bsd,dhk->bhsk", uc, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", uc, p["wk"].astype(dt)) / math.sqrt(hd)
+    v = jnp.einsum("bsd,dhk->bhsk", u, p["wv"].astype(dt))
+    i_raw = (jnp.einsum("bsd,dh->bhs", uc, p["wi"].astype(dt))
+             + p["bi"].astype(dt)[:, None]).astype(jnp.float32)
+    f_raw = (jnp.einsum("bsd,dh->bhs", uc, p["wf"].astype(dt))
+             + p["bf"].astype(dt)[:, None]).astype(jnp.float32)
+
+    cell_state = state[1] if state is not None else None
+    if decode:
+        h_t, cell_state_new = mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                         i_raw[:, :, 0], f_raw[:, :, 0], cell_state)
+        h = h_t[:, :, None, :]                      # (B,H,1,hd)
+    else:
+        chunk = min(cfg.mlstm_chunk, S)
+        h, cell_state_new = mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk, cell_state)
+    h = h.transpose(0, 2, 1, 3).astype(dt)          # (B,S,H,hd), back to compute dtype
+    h = _head_groupnorm(h, p["gn"])
+    y = h * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsd,de->bse", y, p["w_down"].astype(dt))
+    return out, (conv_state_new, cell_state_new)
+
+
+def init_mlstm_state(cfg, batch: int):
+    B, H, hd = batch, cfg.num_heads, cfg.head_dim
+    conv = jnp.zeros((B, cfg.conv_width - 1, cfg.d_model), jnp.float32)
+    return (conv, (jnp.zeros((B, H, hd, hd), jnp.float32),
+                   jnp.zeros((B, H, hd), jnp.float32),
+                   jnp.full((B, H), -1e30, jnp.float32)))
+
+
+def slstm_cell_scan(cfg, p, x, xc, state=None):
+    """sLSTM over a sequence. x, xc: (B,S,D); returns (h_seq, state).
+
+    State = (c, n, h, m) each (B,D) (viewed per-head for the R matmuls)."""
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    f32 = jnp.float32
+
+    # precompute input-driven gate terms for the whole sequence
+    gz = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt)).astype(f32) + p["bz"].astype(f32)
+    gi = jnp.einsum("bsd,de->bse", xc, p["wi"].astype(dt)).astype(f32) + p["bi"].astype(f32)
+    gf = jnp.einsum("bsd,de->bse", xc, p["wf"].astype(dt)).astype(f32) + p["bf"].astype(f32)
+    go = jnp.einsum("bsd,de->bse", x, p["wo"].astype(dt)).astype(f32) + p["bo"].astype(f32)
+
+    rz, ri, rf, ro = (p[k].astype(f32) for k in ("rz", "ri", "rf", "ro"))
+
+    if state is None:
+        zeros = jnp.zeros((B, D), f32)
+        state = (zeros, zeros, zeros, jnp.full((B, D), -1e30, f32))
+
+    def body(carry, xs):
+        return slstm_token_body((rz, ri, rf, ro), (H, hd), carry, xs)
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (gz.transpose(1, 0, 2), gi.transpose(1, 0, 2),
+          gf.transpose(1, 0, 2), go.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(body, state, xs)
+    return hs.transpose(1, 0, 2).astype(dt), state
+
+
+def slstm_token_body(r_mats, head_shape, carry, xs):
+    """One sLSTM token step (scan body; also a dry-run cost probe).
+
+    r_mats = (rz, ri, rf, ro) each (H,hd,hd) f32; carry = (c,n,h,m) each
+    (B,D) f32; xs = per-token input-gate preactivations (z,i,f,o) each (B,D)."""
+    rz, ri, rf, ro = r_mats
+    H, hd = head_shape
+    c, n, h, m = carry
+    B, D = c.shape
+    z_t, i_t, f_t, o_t = xs
+
+    def rmul(r, hh):
+        return jnp.einsum("bhk,hkq->bhq", hh.reshape(B, H, hd), r).reshape(B, D)
+
+    z = jnp.tanh(z_t + rmul(rz, h))
+    it = i_t + rmul(ri, h)
+    ft = f_t + rmul(rf, h)
+    o = jax.nn.sigmoid(o_t + rmul(ro, h))
+    lf = jax.nn.log_sigmoid(ft)          # exp-gate via logsigmoid (stable)
+    m_new = jnp.maximum(lf + m, it)
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(it - m_new)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-12))
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(cfg, p, x, *, state=None, decode=False):
+    """x: (B,S,D) -> (y, new_state). State = (conv_state, (c,n,h,m))."""
+    dt = x.dtype
+    conv_state = state[0] if state is not None else None
+    xc, conv_state_new = _causal_conv(x, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+    cell_state = state[1] if state is not None else None
+    h, cell_state_new = slstm_cell_scan(cfg, p, x, xc, cell_state)
+    B, S, D = h.shape
+    h = _head_groupnorm(h.reshape(B, S, cfg.num_heads, cfg.head_dim), p["gn"])
+    # gated FFN
+    g = jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", h, p["w_upf"].astype(dt))
+    y = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_downf"].astype(dt))
+    return out, (conv_state_new, cell_state_new)
+
+
+def init_slstm_state(cfg, batch: int):
+    B, D = batch, cfg.d_model
+    zeros = jnp.zeros((B, D), jnp.float32)
+    conv = jnp.zeros((B, cfg.conv_width - 1, D), jnp.float32)
+    return (conv, (zeros, zeros, zeros, jnp.full((B, D), -1e30, jnp.float32)))

@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    sgdm,
+)
+from repro.optim.schedules import make_schedule
+from repro.optim.compression import int8_error_feedback
+
+__all__ = [
+    "Optimizer", "adamw", "sgdm", "make_optimizer", "apply_updates",
+    "clip_by_global_norm", "global_norm", "make_schedule",
+    "int8_error_feedback",
+]

@@ -1,0 +1,120 @@
+"""From-scratch optimizers (no optax): AdamW, SGD-momentum.
+
+An Optimizer is a pair of pure functions over pytrees:
+    init(params)                 -> opt_state
+    update(grads, opt_state, params, step) -> (updates, new_opt_state)
+`updates` are the deltas to ADD to params (lr already applied, sign included).
+
+All state mirrors the parameter pytree so SEDAR fingerprinting, sharding and
+checkpointing treat it uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]
+    name: str = "opt"
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def adamw(lr_fn, *, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        stepf = step.astype(jnp.float32) + 1.0
+        lr = lr_fn(step)
+        bc1 = 1.0 - beta1 ** stepf
+        bc2 = 1.0 - beta2 ** stepf
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = beta1 * m + (1.0 - beta1) * gf
+            v2 = beta2 * v + (1.0 - beta2) * gf * gf
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+            return delta, m2, v2
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                     "v": treedef.unflatten([o[2] for o in out])}
+        return updates, new_state
+
+    return Optimizer(init, update, "adamw")
+
+
+def sgdm(lr_fn, *, momentum=0.9, weight_decay=0.0, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(step)
+
+        def upd(g, m, p):
+            gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m2 = momentum * m + gf
+            return -lr * m2, m2
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"m": treedef.unflatten([o[1] for o in out])})
+
+    return Optimizer(init, update, "sgdm")
+
+
+def make_optimizer(train_cfg) -> Optimizer:
+    from repro.optim.schedules import make_schedule
+    lr_fn = make_schedule(train_cfg)
+    if train_cfg.optimizer == "adamw":
+        return adamw(lr_fn, beta1=train_cfg.beta1, beta2=train_cfg.beta2,
+                     eps=train_cfg.eps, weight_decay=train_cfg.weight_decay,
+                     grad_clip=train_cfg.grad_clip)
+    if train_cfg.optimizer == "sgdm":
+        return sgdm(lr_fn, momentum=train_cfg.beta1,
+                    weight_decay=train_cfg.weight_decay,
+                    grad_clip=train_cfg.grad_clip)
+    raise ValueError(train_cfg.optimizer)

@@ -1,0 +1,38 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(lr, warmup, total, final_frac=0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * (s + 1.0) / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def warmup_linear(lr, warmup, total, final_frac=0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * (s + 1.0) / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        lin = lr * (1 - (1 - final_frac) * prog)
+        return jnp.where(s < warmup, warm, lin)
+    return fn
+
+
+def constant(lr):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def make_schedule(train_cfg):
+    if train_cfg.schedule == "cosine":
+        return warmup_cosine(train_cfg.lr, train_cfg.warmup_steps, train_cfg.steps)
+    if train_cfg.schedule == "linear":
+        return warmup_linear(train_cfg.lr, train_cfg.warmup_steps, train_cfg.steps)
+    return constant(train_cfg.lr)

@@ -1,0 +1,3 @@
+from repro.runtime.train import SedarTrainer, TrainReport
+
+__all__ = ["SedarTrainer", "TrainReport"]

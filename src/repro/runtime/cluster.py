@@ -1,0 +1,115 @@
+"""Cluster-level fault tolerance: heartbeats, stragglers, elastic re-mesh.
+
+The paper's TOE detector generalizes to the pod level: every host writes a
+heartbeat file per step; a monitor flags hosts whose beat is stale (hang /
+crash / TOE) and measures per-step skew quantiles (stragglers). On permanent
+host loss the elastic planner rebuilds the mesh with a smaller data axis from
+the last valid checkpoint (SEDAR L3 guarantees its validity).
+
+On this container the monitor runs against simulated host directories; on a
+real cluster each jax process calls `Heartbeat.beat()` after every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class HostState:
+    host_id: int
+    last_beat: float
+    step: int
+
+
+class Heartbeat:
+    """Per-host heartbeat writer (one file per host, atomic replace)."""
+
+    def __init__(self, directory: str, host_id: int):
+        self.dir = directory
+        self.host_id = host_id
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        path = os.path.join(self.dir, f"host_{self.host_id:05d}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host_id, "step": step,
+                       "t": time.time()}, f)
+        os.replace(tmp, path)
+
+
+class ClusterMonitor:
+    """Scans heartbeat files; reports stale hosts and stragglers."""
+
+    def __init__(self, directory: str, n_hosts: int, timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0):
+        self.dir = directory
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+
+    def scan(self) -> Dict[int, HostState]:
+        out = {}
+        if not os.path.isdir(self.dir):
+            return out
+        for name in os.listdir(self.dir):
+            if not name.startswith("host_") or not name.endswith(".json"):
+                continue
+            try:
+                with open(os.path.join(self.dir, name)) as f:
+                    d = json.load(f)
+                out[d["host"]] = HostState(d["host"], d["t"], d["step"])
+            except (json.JSONDecodeError, KeyError, OSError):
+                continue
+        return out
+
+    def stale_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = now or time.time()
+        seen = self.scan()
+        stale = [h for h, s in seen.items() if now - s.last_beat > self.timeout_s]
+        missing = [h for h in range(self.n_hosts) if h not in seen]
+        return sorted(stale + missing)
+
+    def stragglers(self) -> List[int]:
+        """Hosts more than straggler_factor x median steps behind."""
+        seen = self.scan()
+        if len(seen) < 2:
+            return []
+        steps = sorted(s.step for s in seen.values())
+        med = steps[len(steps) // 2]
+        lag = max(2.0, med / self.straggler_factor) if med else 2.0
+        return sorted(h for h, s in seen.items() if med - s.step > lag)
+
+
+@dataclass
+class ElasticPlan:
+    old_data: int
+    new_data: int
+    new_global_batch: int
+    dropped_hosts: List[int]
+    note: str
+
+
+def plan_elastic_remesh(data_axis: int, global_batch: int,
+                        lost_hosts: List[int], hosts_per_data_shard: int = 1
+                        ) -> ElasticPlan:
+    """Shrink the data axis past lost hosts, keeping batch divisible.
+
+    Policy: drop whole data shards containing lost hosts; rescale the global
+    batch proportionally (keeps per-shard batch, so activation memory and the
+    compiled program are unchanged -> restart reuses the compile cache)."""
+    lost_shards = sorted({h // hosts_per_data_shard for h in lost_hosts})
+    new_data = data_axis - len(lost_shards)
+    if new_data < 1:
+        raise RuntimeError("all data shards lost")
+    new_batch = global_batch * new_data // data_axis
+    return ElasticPlan(
+        old_data=data_axis, new_data=new_data, new_global_batch=new_batch,
+        dropped_hosts=lost_hosts,
+        note=("per-shard batch preserved; data-axis collectives shrink; "
+              "restore from last VALID checkpoint (L3) then continue"))

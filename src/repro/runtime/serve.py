@@ -1,0 +1,92 @@
+"""Batched serving loop with optional SEDAR detection on the decode path.
+
+Serving follows the paper's inference-side story: decoding is deterministic
+(greedy or fixed-seed sampling), so a dual-replica serve step can compare
+logits fingerprints before emitting tokens — "validate the message before
+sending it to the user". Recovery for serving is trivial (recompute the
+step), so only detection (L1) applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.core.fingerprint import fingerprints_equal, pytree_fingerprint
+from repro.core.injection import InjectionSpec, inject_tree
+from repro.models import build_model
+
+
+@dataclass
+class ServeReport:
+    tokens_emitted: int = 0
+    detections: List[int] = field(default_factory=list)   # positions
+    retries: int = 0
+    wall_s: float = 0.0
+
+
+class SedarServer:
+    """Prefill once, then decode step-by-step (optionally dual-executed)."""
+
+    def __init__(self, run_cfg: RunConfig, dual: bool = False,
+                 inj_spec: Optional[InjectionSpec] = None):
+        self.cfg = run_cfg
+        self.model = build_model(run_cfg.model)
+        self.dual = dual
+        self.inj_spec = inj_spec
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn, static_argnums=(2,))
+
+    def _prefill_fn(self, params, batch, max_len):
+        return self.model.prefill(params, batch, max_len)
+
+    def _decode_fn(self, params, cache, tokens, pos, replica_id, armed):
+        if self.inj_spec is not None:
+            params = inject_tree(params, self.inj_spec, step=pos,
+                                 replica_id=replica_id, armed=armed)
+        logits, cache = self.model.decode_step(params, cache, tokens, pos)
+        fp = pytree_fingerprint({"logits": logits})
+        return logits, cache, fp
+
+    def generate(self, params, prompt_batch: Dict[str, Any], steps: int,
+                 max_len: Optional[int] = None) -> "tuple[np.ndarray, ServeReport]":
+        rep = ServeReport()
+        t0 = time.time()
+        B, S = prompt_batch["tokens"].shape
+        P = (self.cfg.model.frontend_seq
+             if (self.cfg.model.frontend and self.cfg.model.family == "vlm") else 0)
+        max_len = max_len or (S + P + steps + 8)
+        logits, cache = self._prefill(params, prompt_batch, max_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        pos = S + P
+        armed = jnp.asarray(True)
+        guard = 0
+        while len(out) < steps and guard < 4 * steps:
+            guard += 1
+            l0, c0, fp0 = self._decode(params, cache, tok, jnp.asarray(pos),
+                                       jnp.asarray(0), armed)
+            if self.dual:
+                l1, _, fp1 = self._decode(params, cache, tok, jnp.asarray(pos),
+                                          jnp.asarray(1), armed)
+                if not bool(np.asarray(fingerprints_equal(fp0, fp1))):
+                    # SDC on the serve path: validate-before-send — the token
+                    # is NOT emitted; the step re-executes (transient faults
+                    # do not repeat)
+                    rep.detections.append(pos)
+                    rep.retries += 1
+                    armed = jnp.asarray(False)
+                    continue
+            cache = c0
+            tok = jnp.argmax(l0, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+            pos += 1
+        rep.tokens_emitted = len(out) * B
+        rep.wall_s = time.time() - t0
+        return np.stack(out, axis=1), rep

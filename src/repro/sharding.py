@@ -1,0 +1,208 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Model code annotates every parameter / activation dimension with a *logical*
+axis name ("heads", "embed", "mlp", "batch", ...). The resolver maps logical
+axes onto physical mesh axes:
+
+  * tensor-parallel candidates  -> the "model" mesh axis
+  * FSDP / data candidates      -> the "data" mesh axis (or ("pod","data") in
+                                   baseline multi-pod mode)
+  * sequence-parallel candidate -> optional (hillclimb knob)
+
+A mesh axis is assigned to at most one dimension per tensor, in declaration
+priority order, and only when the dimension size is divisible by the mesh-axis
+extent. Any failed candidate falls through to the next dimension that can take
+the axis (e.g. qwen2-0.5b: 14 heads % 16 != 0 -> the head axis stays
+replicated and "model" lands on head_dim or d_ff instead). Every fallback is
+*recorded* so the dry-run artifact shows exactly what sharded where — no
+silent replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axes that want the tensor-parallel ("model") mesh axis, in priority
+# order. Within one tensor, the first divisible dim wins.
+MODEL_PARALLEL_AXES: Tuple[str, ...] = (
+    "experts",      # MoE expert parallelism
+    "heads",
+    "kv_heads",
+    "mlp",
+    "vocab",
+    "rnn",          # RG-LRU recurrent width
+    "inner",        # xLSTM inner width
+    "head_dim",     # fallback when the head axis is not divisible (params)
+    "batch_dm",     # activations-only fallback: batch over data*model —
+                    # keeps attention fully local when heads % TP != 0
+                    # (sharding a contraction dim like head_dim would turn
+                    # every QK^T/PV einsum into an all-reduce of the S^2
+                    # matrix; batch sharding has no cross-device contraction)
+)
+
+# Logical axes that want the data/FSDP mesh axes.
+DATA_PARALLEL_AXES: Tuple[str, ...] = (
+    "batch",
+    "batch_dm",     # if the combined data*model grab failed, plain data
+    "embed",        # FSDP: parameters sharded along their embed dim
+)
+
+# Sequence axis: shardable over "model" under sequence parallelism (opt-in).
+SEQUENCE_AXES: Tuple[str, ...] = ("seq",)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Physical mapping policy for one run."""
+
+    model_axes: Tuple[str, ...] = ("model",)
+    data_axes: Tuple[str, ...] = ("data",)      # ("pod","data") in baseline multi-pod
+    sequence_parallel: bool = False             # shard activation seq dim over model_axes
+    fsdp: bool = True                           # shard params' embed dim over data_axes
+
+    def axis_size(self, mesh: Mesh, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+
+@dataclass
+class FallbackRecord:
+    tensor: str
+    logical: str
+    dim: int
+    size: int
+    wanted: Tuple[str, ...]
+    reason: str
+
+
+class Resolver:
+    """Resolves logical-axis tuples to PartitionSpecs over a given mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[ShardingRules] = None):
+        self.mesh = mesh
+        self.rules = rules or ShardingRules()
+        self.fallbacks: List[FallbackRecord] = []
+        # replica ("pod" in dual mode) axes are intentionally absent from all
+        # specs -> every tensor is replicated across replicas by construction.
+
+    # -- core ----------------------------------------------------------------
+
+    def spec(self, logical: Sequence[Optional[str]], shape: Sequence[int],
+             name: str = "?") -> P:
+        """Map one tensor's logical axes to a PartitionSpec."""
+        assert len(logical) == len(shape), (name, logical, shape)
+        assigned: Dict[int, Tuple[str, ...]] = {}
+        used_mesh_axes: set = set()
+
+        def try_assign(dim: int, axes: Tuple[str, ...]) -> bool:
+            if any(a in used_mesh_axes for a in axes):
+                return False
+            n = self.rules.axis_size(self.mesh, axes)
+            if n == 1 or shape[dim] % n != 0:
+                return False
+            assigned[dim] = axes
+            used_mesh_axes.update(axes)
+            return True
+
+        # Pass 1: tensor parallel — priority order over logical names, then dims.
+        for lname in MODEL_PARALLEL_AXES:
+            if any(a in used_mesh_axes for a in self.rules.model_axes):
+                break
+            for dim, l in enumerate(logical):
+                if l == lname and dim not in assigned:
+                    # batch_dm takes data AND model together (fully-local
+                    # fallback); everything else takes the model axes
+                    axes = (self.rules.data_axes + self.rules.model_axes
+                            if lname == "batch_dm" else self.rules.model_axes)
+                    if try_assign(dim, axes):
+                        break
+                    self.fallbacks.append(FallbackRecord(
+                        name, lname, dim, shape[dim], axes,
+                        f"{shape[dim]} % {self.rules.axis_size(self.mesh, axes)} != 0",
+                    ))
+
+        # Pass 2: sequence parallelism (activations only; opt-in).
+        if self.rules.sequence_parallel:
+            for dim, l in enumerate(logical):
+                if l in SEQUENCE_AXES and dim not in assigned:
+                    try_assign(dim, self.rules.model_axes)
+
+        # Pass 3: data / FSDP.
+        for lname in DATA_PARALLEL_AXES:
+            if lname == "embed" and not self.rules.fsdp:
+                continue
+            if any(a in used_mesh_axes for a in self.rules.data_axes):
+                break
+            for dim, l in enumerate(logical):
+                if l == lname and dim not in assigned:
+                    if try_assign(dim, self.rules.data_axes):
+                        break
+                    self.fallbacks.append(FallbackRecord(
+                        name, lname, dim, shape[dim], self.rules.data_axes,
+                        f"{shape[dim]} % {self.rules.axis_size(self.mesh, self.rules.data_axes)} != 0",
+                    ))
+
+        entries = []
+        for dim in range(len(shape)):
+            ax = assigned.get(dim)
+            if ax is None:
+                entries.append(None)
+            elif len(ax) == 1:
+                entries.append(ax[0])
+            else:
+                entries.append(tuple(ax))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def named(self, logical, shape, name: str = "?") -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape, name))
+
+    # -- pytree helpers --------------------------------------------------------
+
+    def tree_specs(self, logical_tree, shape_tree):
+        """Resolve a pytree of logical-axis tuples against matching shapes."""
+        paths_logical = jax.tree_util.tree_flatten_with_path(
+            logical_tree, is_leaf=lambda x: isinstance(x, tuple) and
+            all(isinstance(e, (str, type(None))) for e in x))
+        leaves_l, treedef = paths_logical
+        leaves_s = jax.tree_util.tree_leaves(
+            shape_tree, is_leaf=lambda x: isinstance(x, tuple) and
+            all(isinstance(e, int) for e in x))
+        assert len(leaves_l) == len(leaves_s), (len(leaves_l), len(leaves_s))
+        out = []
+        for (path, logical), shape in zip(leaves_l, leaves_s):
+            name = jax.tree_util.keystr(path)
+            out.append(self.spec(logical, shape, name))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def tree_shardings(self, logical_tree, abstract_tree):
+        """NamedShardings for a pytree of ShapeDtypeStructs / arrays."""
+        shape_tree = jax.tree.map(lambda x: tuple(x.shape), abstract_tree)
+        specs = self.tree_specs(logical_tree, shape_tree)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def fallback_report(self) -> List[dict]:
+        return [dataclasses.asdict(f) for f in self.fallbacks]
+
+
+def batch_spec(rules: ShardingRules) -> P:
+    """PartitionSpec entry for the global-batch dimension."""
+    axes = rules.data_axes
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def constrain(x, mesh: Mesh, *entries):
+    """Convenience with_sharding_constraint that tolerates missing axes."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+    except (ValueError, KeyError):
+        return x

@@ -1,0 +1,20 @@
+"""Shared fixtures. NB: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; multi-device tests spawn subprocesses with forced host
+device counts (see test_multidevice.py)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def tmp_workdir(tmp_path):
+    return str(tmp_path / "work")

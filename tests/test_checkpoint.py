@@ -1,0 +1,89 @@
+"""Checkpoint store: roundtrip, atomicity, multi-version, GC, async."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointStore
+
+
+def _state(seed=0, n=5):
+    rs = np.random.RandomState(seed)
+    return {"params": {"w": jnp.asarray(rs.randn(3, 4).astype(np.float32)),
+                       "b": jnp.asarray(rs.randn(n).astype(np.float32))},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    s = _state(3)
+    store.save(10, s)
+    r = store.restore(10, jax.tree.map(np.asarray, s))
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multi_version_and_latest(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    for step in (5, 10, 15):
+        store.save(step, _state(step))
+    assert store.steps() == [5, 10, 15]
+    assert store.latest() == 15
+    assert store.count() == 3
+
+
+def test_valid_flag_and_single_valid(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(5, _state(5), valid=True)
+    store.save(10, _state(10), valid=True)
+    store.delete(5)
+    assert store.latest(valid_only=True) == 10
+    assert store.steps() == [10]
+
+
+def test_overwrite_same_step(tmp_path):
+    """L2 re-stores a checkpoint during re-execution (paper Sec. 4.2)."""
+    store = CheckpointStore(str(tmp_path))
+    store.save(5, _state(1))
+    store.save(5, _state(2))
+    r = store.restore(5, jax.tree.map(np.asarray, _state(2)))
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(_state(2)["params"]["w"]))
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, _state(1))
+    store.save(2, _state(2), async_=True)
+    store.wait()
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_gc_keep_last(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    for s in range(6):
+        store.save(s, _state(s))
+    store.gc_keep_last(2)
+    assert store.steps() == [4, 5]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, _state(1))
+    bad = {"params": {"w": np.zeros((9, 9), np.float32),
+                      "b": np.zeros((5,), np.float32)},
+           "step": np.zeros((), np.int32)}
+    with pytest.raises(ValueError):
+        store.restore(1, bad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=8, unique=True))
+def test_property_latest_is_max(tmp_path_factory, steps):
+    store = CheckpointStore(str(tmp_path_factory.mktemp("ckpt")))
+    for s in steps:
+        store.save(s, _state(s))
+    assert store.latest() == max(steps)

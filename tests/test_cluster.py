@@ -1,0 +1,55 @@
+"""Cluster monitor: heartbeats, staleness, stragglers, elastic planning."""
+import time
+
+import pytest
+
+from repro.runtime.cluster import (ClusterMonitor, Heartbeat,
+                                   plan_elastic_remesh)
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    d = str(tmp_path)
+    for h in range(4):
+        Heartbeat(d, h).beat(step=10 + h)
+    mon = ClusterMonitor(d, n_hosts=4, timeout_s=60)
+    seen = mon.scan()
+    assert sorted(seen) == [0, 1, 2, 3]
+    assert seen[2].step == 12
+    assert mon.stale_hosts() == []
+
+
+def test_missing_host_is_stale(tmp_path):
+    d = str(tmp_path)
+    for h in (0, 1, 3):
+        Heartbeat(d, h).beat(step=5)
+    mon = ClusterMonitor(d, n_hosts=4, timeout_s=60)
+    assert mon.stale_hosts() == [2]
+
+
+def test_old_beat_is_stale(tmp_path):
+    d = str(tmp_path)
+    Heartbeat(d, 0).beat(step=5)
+    mon = ClusterMonitor(d, n_hosts=1, timeout_s=0.01)
+    time.sleep(0.05)
+    assert mon.stale_hosts() == [0]
+
+
+def test_straggler_detection(tmp_path):
+    d = str(tmp_path)
+    for h in range(4):
+        Heartbeat(d, h).beat(step=100 if h != 3 else 10)
+    mon = ClusterMonitor(d, n_hosts=4)
+    assert mon.stragglers() == [3]
+
+
+def test_elastic_plan():
+    plan = plan_elastic_remesh(data_axis=16, global_batch=256,
+                               lost_hosts=[5])
+    assert plan.new_data == 15
+    assert plan.new_global_batch == 240
+    assert plan.new_global_batch % plan.new_data == 0
+
+
+def test_elastic_plan_all_lost_raises():
+    with pytest.raises(RuntimeError):
+        plan_elastic_remesh(1, 16, [0])

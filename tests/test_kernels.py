@@ -1,0 +1,57 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+
+RS = np.random.RandomState(0)
+
+
+def _qkv(B, H, KV, Sq, Sk, hd, dtype):
+    q = jnp.asarray(RS.randn(B, H, Sq, hd).astype(dtype))
+    k = jnp.asarray(RS.randn(B, KV, Sk, hd).astype(dtype))
+    v = jnp.asarray(RS.randn(B, KV, Sk, hd).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,hd", [
+    (1, 2, 1, 32, 32, 16),
+    (2, 4, 2, 64, 64, 32),
+    (1, 8, 2, 48, 48, 16),     # GQA group 4
+    (1, 2, 2, 40, 40, 8),      # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_flash_causal(B, H, KV, Sq, Sk, hd, dtype):
+    q, k, v = _qkv(B, H, KV, Sq, Sk, hd, dtype)
+    o = flash_attention_pallas(q, k, v, causal=True, block_q=16, block_k=16,
+                               interpret=True)
+    o2 = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_noncausal_cross_length():
+    q, k, v = _qkv(1, 2, 1, 32, 64, 16, np.float32)
+    o = flash_attention_pallas(q, k, v, causal=False, block_q=16, block_k=16,
+                               interpret=True)
+    o2 = ref.mha_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_sliding_window():
+    q, k, v = _qkv(1, 2, 2, 64, 64, 16, np.float32)
+    o = flash_attention_pallas(q, k, v, causal=True, window=16,
+                               block_q=16, block_k=16, interpret=True)
+    o2 = ref.mha_ref(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_bf16_tolerance():
+    q, k, v = _qkv(1, 2, 1, 32, 32, 16, np.float32)
+    q, k, v = (a.astype(jnp.bfloat16) for a in (q, k, v))
+    o = flash_attention_pallas(q, k, v, causal=True, block_q=16, block_k=16,
+                               interpret=True)
+    o2 = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o2, np.float32), atol=3e-2)

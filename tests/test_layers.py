@@ -1,0 +1,144 @@
+"""Layer-level numerics: chunked attention == exact, mLSTM chunkwise ==
+sequential, RG-LRU scan == stepwise, chunked CE == full CE, decode == train."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import layers as nn
+from repro.models import recurrent as rec
+from repro.models import xlstm as xl
+
+RS = np.random.RandomState(0)
+
+
+def test_chunked_causal_matches_exact():
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(RS.randn(B, S, H, hd).astype(np.float32))
+    k = jnp.asarray(RS.randn(B, S, KV, hd).astype(np.float32))
+    v = jnp.asarray(RS.randn(B, S, KV, hd).astype(np.float32))
+    o1 = nn.causal_attention(q, k, v)
+    o2 = nn.chunked_causal_attention(q, k, v, q_chunk=16, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_chunked_window_matches_band_mask():
+    from repro.kernels.ref import mha_ref
+    B, S, H, KV, hd, w = 2, 96, 4, 2, 8, 32
+    q = jnp.asarray(RS.randn(B, S, H, hd).astype(np.float32))
+    k = jnp.asarray(RS.randn(B, S, KV, hd).astype(np.float32))
+    v = jnp.asarray(RS.randn(B, S, KV, hd).astype(np.float32))
+    o_ref = mha_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), causal=True,
+                    window=w).transpose(0, 2, 1, 3)
+    o = nn.chunked_window_attention(q, k, v, w, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o), atol=2e-5)
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    B, H, S, hd = 2, 3, 64, 8
+    q = jnp.asarray(RS.randn(B, H, S, hd).astype(np.float32))
+    k = jnp.asarray(RS.randn(B, H, S, hd).astype(np.float32)) / np.sqrt(hd)
+    v = jnp.asarray(RS.randn(B, H, S, hd).astype(np.float32))
+    i_raw = jnp.asarray(RS.randn(B, H, S).astype(np.float32))
+    f_raw = jnp.asarray(2.0 + RS.randn(B, H, S).astype(np.float32))
+    h_seq = xl.ref_mlstm_sequential(q, k, v, i_raw, f_raw)
+    for chunk in (8, 16, 64):
+        h_ck, _ = xl.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk)
+        np.testing.assert_allclose(np.asarray(h_seq), np.asarray(h_ck),
+                                   atol=2e-4, rtol=1e-3)
+
+
+def test_mlstm_chunkwise_state_continuation():
+    """Processing [first half | second half with carried state] == full."""
+    B, H, S, hd = 1, 2, 32, 8
+    q = jnp.asarray(RS.randn(B, H, S, hd).astype(np.float32))
+    k = jnp.asarray(RS.randn(B, H, S, hd).astype(np.float32)) / np.sqrt(hd)
+    v = jnp.asarray(RS.randn(B, H, S, hd).astype(np.float32))
+    i_raw = jnp.asarray(RS.randn(B, H, S).astype(np.float32))
+    f_raw = jnp.asarray(2.0 + RS.randn(B, H, S).astype(np.float32))
+    h_full, st_full = xl.mlstm_chunkwise(q, k, v, i_raw, f_raw, 8)
+    h1, st1 = xl.mlstm_chunkwise(q[:, :, :16], k[:, :, :16], v[:, :, :16],
+                                 i_raw[:, :, :16], f_raw[:, :, :16], 8)
+    h2, st2 = xl.mlstm_chunkwise(q[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                                 i_raw[:, :, 16:], f_raw[:, :, 16:], 8,
+                                 state=st1)
+    np.testing.assert_allclose(np.asarray(h_full),
+                               np.asarray(jnp.concatenate([h1, h2], axis=2)),
+                               atol=2e-4, rtol=1e-3)
+    for a, b in zip(st_full, st2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                                   rtol=1e-3)
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = reduce_for_smoke(get_config("recurrentgemma-2b"))
+    p, _ = rec.init_recurrent_block(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    u = jnp.asarray(RS.randn(B, S, cfg.d_rnn).astype(np.float32))
+    y_scan, h_last = rec.rg_lru_scan(p, u)
+    h = jnp.zeros((B, cfg.d_rnn), jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, h = rec.rg_lru_step(p, u[:, t], h)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h), atol=1e-5)
+
+
+def test_chunked_ce_matches_full():
+    cfg = reduce_for_smoke(get_config("qwen2-72b"))
+    from repro.models.layers import (chunked_cross_entropy,
+                                     cross_entropy_loss, init_embedding,
+                                     logits_from_hidden)
+    emb, _ = init_embedding(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 40
+    h = jnp.asarray(RS.randn(B, S, cfg.d_model).astype(np.float32))
+    tgt = jnp.asarray(RS.randint(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    full = cross_entropy_loss(logits_from_hidden(cfg, emb, h), tgt)
+    ck = chunked_cross_entropy(cfg, emb, h, tgt, chunk=16)
+    np.testing.assert_allclose(float(full), float(ck), rtol=1e-5)
+
+
+def test_decode_matches_full_forward():
+    """Greedy decode logits == teacher-forced forward logits, per position."""
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("qwen2-0.5b")))
+    from repro.models import build_model
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jnp.asarray(RS.randint(0, 200, (B, S)).astype(np.int32))
+    # full forward logits at final position
+    from repro.models.transformer import lm_hidden
+    from repro.models.layers import logits_from_hidden
+    h, _, _ = lm_hidden(cfg, params, toks)
+    full_logits = logits_from_hidden(cfg, params["embed"], h)
+    # prefill over S-1, then decode token S-1
+    logits_p, cache = m.prefill(params, {"tokens": toks[:, :-1]}, S + 4)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, -2]), atol=2e-4)
+    # decode reads the bf16 KV cache -> bf16-level tolerance
+    logits_d, _ = m.decode_step(params, cache, toks[:, -1],
+                                jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full_logits[:, -1]), atol=5e-2)
+    assert np.array_equal(np.argmax(np.asarray(logits_d), -1),
+                          np.argmax(np.asarray(full_logits[:, -1]), -1))
+
+
+def test_rope_positions():
+    x = jnp.asarray(RS.randn(1, 4, 2, 8).astype(np.float32))
+    sin, cos = nn.rope_tables(jnp.arange(4), 8, 10_000.0)
+    y = nn.apply_rope(x, sin, cos)
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(x[:, 0]),
+                               atol=1e-6)
+    # norms preserved (rotation)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)

@@ -1,0 +1,58 @@
+"""The paper's 64-scenario workfault (Table 2): prediction == observation for
+every scenario, plus the four published exemplars."""
+import pytest
+
+from repro.core.scenarios import (MatmulTestApp, Observation, Scenario,
+                                  all_scenarios, predict, run_campaign)
+
+
+def test_64_scenarios_exist():
+    ss = all_scenarios()
+    assert len(ss) == 64
+
+
+def test_clean_run_correct():
+    app = MatmulTestApp()
+    obs = app.run(None)
+    assert obs.correct_result and obs.n_roll == 0 and obs.p_det is None
+
+
+def test_full_campaign_predictions_match():
+    rows = run_campaign()
+    bad = [r for r in rows if not r["match"]]
+    assert not bad, f"{len(bad)} scenario mismatches: {bad[:3]}"
+
+
+def test_effect_classes_all_present():
+    effects = {predict(s).effect for s in all_scenarios()}
+    assert effects == {"TDC", "FSC", "LE", "TOE"}
+
+
+@pytest.mark.parametrize("window,proc,datum,effect,p_det,p_rec,n_roll", [
+    # paper Table 2 exemplars (scenarios 2, 29, 50, 59 analogues)
+    ("CK0", "M", "A", "TDC", "SCATTER", "CK0", 1),
+    ("BCAST", "W", "C", "LE", None, None, 0),
+    ("GATHER", "M", "C", "FSC", "VALIDATE", "CK2", 2),
+    ("CK2", "W", "i", "TOE", "GATHER", "CK2", 1),
+])
+def test_paper_exemplar_scenarios(window, proc, datum, effect, p_det, p_rec,
+                                  n_roll):
+    s = next(x for x in all_scenarios()
+             if (x.window, x.process, x.datum) == (window, proc, datum))
+    pred = predict(s)
+    assert (pred.effect, pred.p_det, pred.p_rec, pred.n_roll) == \
+        (effect, p_det, p_rec, n_roll)
+    obs = MatmulTestApp().run(s)
+    assert obs.correct_result
+    assert (obs.effect, obs.p_det, obs.p_rec, obs.n_roll) == \
+        (effect, p_det, p_rec, n_roll)
+
+
+def test_multi_rollback_scenario():
+    """Worker A corrupted after SCATTER: CK1+CK2 dirty -> 3 rollbacks to CK0."""
+    s = next(x for x in all_scenarios()
+             if (x.window, x.process, x.datum) == ("SCATTER", "W", "A"))
+    pred = predict(s)
+    assert pred.n_roll == 3 and pred.p_rec == "CK0"
+    obs = MatmulTestApp().run(s)
+    assert obs.n_roll == 3 and obs.p_rec == "CK0" and obs.correct_result

@@ -1,0 +1,51 @@
+"""Serving loop: greedy generation + dual-replica detection on decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, ServeConfig, TrainConfig, get_config, \
+    reduce_for_smoke
+from repro.core.injection import InjectionSpec
+from repro.runtime.serve import SedarServer
+
+
+def _setup(dual=False, inj=None):
+    cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+    rc = RunConfig(model=cfg, train=TrainConfig(global_batch=2, seq_len=8))
+    srv = SedarServer(rc, dual=dual, inj_spec=inj)
+    params = srv.model.init(jax.random.PRNGKey(0))
+    prompt = {"tokens": jnp.asarray(
+        np.random.RandomState(0).randint(0, 200, (2, 8)), jnp.int32)}
+    return srv, params, prompt
+
+
+def test_greedy_generate():
+    srv, params, prompt = _setup()
+    toks, rep = srv.generate(params, prompt, steps=6)
+    assert toks.shape == (2, 6)
+    assert rep.tokens_emitted == 12
+    assert not rep.detections
+
+
+def test_generate_deterministic():
+    srv, params, prompt = _setup()
+    t1, _ = srv.generate(params, prompt, steps=5)
+    t2, _ = srv.generate(params, prompt, steps=5)
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_dual_serve_detects_and_retries():
+    """Transient fault on one serve replica: detected (logits fingerprint
+    mismatch), the step retries, output equals the clean run."""
+    srv_c, params, prompt = _setup()
+    clean, _ = srv_c.generate(params, prompt, steps=6)
+    # exponent-bit flip in final_ln (touches every token's logits); a
+    # mantissa flip of a 0.0 bias would be a denormal -> a true LE
+    spec = InjectionSpec(leaf_idx=2, flat_idx=3, bit=30, step=10, replica=1,
+                         target="params")   # fires at pos==10 on replica 1
+    srv, params2, _ = _setup(dual=True, inj=spec)
+    toks, rep = srv.generate(params, prompt, steps=6)
+    assert rep.detections, "fault not detected on serve path"
+    assert rep.retries >= 1
+    np.testing.assert_array_equal(toks, clean)

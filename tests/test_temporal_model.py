@@ -1,0 +1,83 @@
+"""Paper-claims regression: our Eqs. 1-14 implementation must reproduce the
+published Tables 4 and 5 from the Table-3 measured parameters."""
+import pytest
+
+from repro.core import temporal_model as tm
+
+
+APPS = ["MATMUL", "JACOBI", "SW"]
+
+
+def test_table4_reproduction():
+    """Every published Table-4 value within 0.05 h (the paper's own rounding
+    is inconsistent at the 0.01-h level; see DESIGN.md §9)."""
+    ours = tm.table4_ours()
+    for key, pub in tm.PAPER_TABLE4.items():
+        for app, o, p in zip(APPS, ours[key], pub):
+            assert abs(o - p) < 0.05, (key, app, o, p)
+
+
+def test_eq13_identity():
+    """sum_{m=0}^{k} (k - m + 1/2) t_i == (k+1)^2/2 t_i (paper Eq. 13)."""
+    for k in range(6):
+        lhs = sum(k - m + 0.5 for m in range(k + 1))
+        assert abs(lhs - (k + 1) ** 2 / 2) < 1e-12
+
+
+def test_table5_jacobi():
+    """Paper Table 5 (Jacobi): detection vs k+1 rollbacks, incl. NA cells."""
+    p = tm.PAPER_TABLE3["JACOBI"]
+    rows = {r["X"]: r for r in tm.convenience_table(p)}
+    # X=50%: published 13.46 | 9.5 11.01 13.52 17.02 NA
+    r = rows[0.5]
+    assert abs(r["detection"] - 13.46) < 0.02
+    assert abs(r["k"][0] - 9.50) < 0.02
+    assert abs(r["k"][1] - 11.01) < 0.02
+    assert abs(r["k"][2] - 13.52) < 0.02
+    assert abs(r["k"][3] - 17.02) < 0.02
+    assert r["k"][4] is None                       # NA (not yet stored)
+    # X=30%: only k<=1 admissible (2 checkpoints stored at t=2.69h)
+    r = rows[0.3]
+    assert r["k"][0] is not None and r["k"][1] is not None
+    assert r["k"][2] is None
+
+
+def test_section44_thresholds():
+    """X* thresholds (paper: 5.88%, 22.67%, 50.61% with rounded inputs)."""
+    p = tm.PAPER_TABLE3["JACOBI"]
+    assert abs(tm.min_progress_for_checkpointing(p) - 0.0588) < 0.01
+    assert abs(tm.min_progress_for_k(p, 1) - 0.2267) < 0.01
+    assert abs(tm.min_progress_for_k(p, 2) - 0.5061) < 0.01
+
+
+def test_aet_monotonic_in_mtbe():
+    """AET decreases as the system gets more reliable (larger MTBE)."""
+    p = tm.PAPER_TABLE3["JACOBI"]
+    aets = [tm.aet_strategy(p, "single_ckpt", mtbe) for mtbe in (2, 8, 64, 512)]
+    assert all(a >= b - 1e-9 for a, b in zip(aets, aets[1:]))
+
+
+def test_strategy_ordering_under_faults():
+    """With faults likely (small MTBE), checkpointing strategies beat
+    detection-only; without faults detection-only is cheapest (paper Sec 4.3)."""
+    p = tm.PAPER_TABLE3["JACOBI"]
+    risky = {s: tm.aet_strategy(p, s, 5.0)
+             for s in ("detection", "multi_ckpt", "single_ckpt")}
+    assert risky["single_ckpt"] < risky["detection"]
+    safe = {s: tm.aet_strategy(p, s, 1e6)
+            for s in ("detection", "multi_ckpt", "single_ckpt")}
+    assert safe["detection"] < safe["multi_ckpt"]
+
+
+def test_daly_interval_sane():
+    assert 0.1 < tm.daly_interval(9.62 / 3600, 8.92) < 1.0
+
+
+def test_advisor():
+    from repro.core.policy import advise
+    p = tm.PAPER_TABLE3["JACOBI"]
+    a = advise(p, mtbe_hours=5.0)
+    assert a.strategy in ("multi_ckpt", "single_ckpt")
+    assert a.level in (2, 3)
+    a2 = advise(p, mtbe_hours=1e7)
+    assert a2.strategy == "detection"

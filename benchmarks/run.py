@@ -25,13 +25,25 @@ MODULES = [
     "benchmarks.roofline",
 ]
 
+# quick CI subset: analytic models + the fingerprint hot-spot (no training
+# loops, no dry-run artifacts)
+SMOKE_MODULES = [
+    "benchmarks.bench_strategies",
+    "benchmarks.bench_convenience",
+    "benchmarks.bench_aet",
+    "benchmarks.bench_fingerprint",
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick subset for CI (analytic + fingerprint)")
     args = ap.parse_args()
     failures = 0
-    for modname in MODULES:
+    modules = SMOKE_MODULES if args.smoke else MODULES
+    for modname in modules:
         if args.only and args.only not in modname:
             continue
         try:

@@ -33,7 +33,9 @@ def main() -> None:
     rc = RunConfig(model=cfg, train=TrainConfig())
     spec = None
     if args.inject:
-        spec = InjectionSpec(leaf_idx=3, flat_idx=9, bit=21,
+        # exponent-bit flip: a mantissa flip of a 0.0 bias would be a
+        # denormal -> a true LE (no logits change, nothing to detect)
+        spec = InjectionSpec(leaf_idx=3, flat_idx=9, bit=30,
                              step=args.prompt_len + 4, replica=1,
                              target="params")
     srv = SedarServer(rc, dual=args.dual, inj_spec=spec)
@@ -50,7 +52,7 @@ def main() -> None:
     print(f"arch={args.arch} emitted={rep.tokens_emitted} tokens "
           f"in {rep.wall_s:.2f}s (dual={args.dual})")
     if rep.detections:
-        print(f"SDC detected at positions {rep.detections}; "
+        print(f"SDC detected at positions {[e.step for e in rep.detections]}; "
               f"{rep.retries} step(s) recomputed — output stream clean.")
     print("first sequence:", toks[0].tolist())
 

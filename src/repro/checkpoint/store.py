@@ -108,6 +108,12 @@ class CheckpointStore:
     # -- read -------------------------------------------------------------------
 
     def steps(self) -> List[int]:
+        # Read-path barrier: Algorithm 1 counts checkpoints
+        # (ckpt_count - extern_counter), so a version whose async write is
+        # still in flight MUST be visible here — otherwise a detection that
+        # lands right after a checkpoint boundary rolls back one version too
+        # far (and external observers undercount the chain).
+        self.wait()
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("ckpt_") and not name.endswith(".tmp"):

@@ -1,21 +1,33 @@
 """SEDAR core — the paper's contribution as composable JAX modules."""
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
                                   make_pod_comparator, make_pod_injector)
+from repro.core.engine import (BoundarySchedule, PlainExecutor, PodExecutor,
+                               ReplicaExecutor, SedarEngine,
+                               SequentialExecutor, StepOutcome, VoteExecutor)
 from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
-                                    pytree_fingerprint, tensor_fingerprint)
-from repro.core.injection import InjectionFlag, InjectionSpec, flip_bit, inject_tree
-from repro.core.policy import Advice, advise
+                                    pack_tree_u32, packed_fingerprint,
+                                    pytree_fingerprint,
+                                    pytree_fingerprint_fused,
+                                    tensor_fingerprint)
+from repro.core.injection import (InjectionFlag, InjectionSpec,
+                                  MemoryInjectionFlag, flip_bit, inject_tree)
+from repro.core.policy import Advice, advise, make_engine, make_server, \
+    make_trainer
 from repro.core.recovery import (ExternalCounter, MultiCheckpointRecovery,
-                                 RecoveryAction, SafeStop,
+                                 RecoveryAction, RetryRecovery, SafeStop,
                                  ValidatedCheckpointRecovery, make_recovery)
 from repro.core import scenarios, temporal_model
 
 __all__ = [
     "DetectionEvent", "SedarSafeStop", "Watchdog", "make_pod_comparator",
-    "make_pod_injector", "fingerprints_equal", "mismatch_report",
-    "pytree_fingerprint", "tensor_fingerprint", "InjectionFlag",
-    "InjectionSpec", "flip_bit", "inject_tree", "Advice", "advise",
-    "ExternalCounter", "MultiCheckpointRecovery", "RecoveryAction",
-    "SafeStop", "ValidatedCheckpointRecovery", "make_recovery",
+    "make_pod_injector", "BoundarySchedule", "PlainExecutor", "PodExecutor",
+    "ReplicaExecutor", "SedarEngine", "SequentialExecutor", "StepOutcome",
+    "VoteExecutor", "fingerprints_equal", "mismatch_report", "pack_tree_u32",
+    "packed_fingerprint", "pytree_fingerprint", "pytree_fingerprint_fused",
+    "tensor_fingerprint", "InjectionFlag", "InjectionSpec",
+    "MemoryInjectionFlag", "flip_bit", "inject_tree", "Advice", "advise",
+    "make_engine", "make_server", "make_trainer", "ExternalCounter",
+    "MultiCheckpointRecovery", "RecoveryAction", "RetryRecovery", "SafeStop",
+    "ValidatedCheckpointRecovery", "make_recovery",
     "scenarios", "temporal_model",
 ]

@@ -109,12 +109,14 @@ def make_pod_broadcaster(mesh, axis: str = "pod"):
 
 
 def majority_replica(fp_all: "np.ndarray"):
-    """Host-side majority vote over gathered fingerprints (n_replicas, L, 4).
+    """Host-side majority vote over gathered fingerprints — (n_replicas, 4)
+    for the fused whole-state hash, (n_replicas, L, 4) for per-leaf.
 
     Returns (src_replica, ok) — ok False when no strict majority exists."""
     import numpy as np
+    fp_all = np.asarray(fp_all)
     n = fp_all.shape[0]
-    keys = [fp_all[i, :, :2].tobytes() for i in range(n)]
+    keys = [fp_all[i].reshape(-1, 4)[:, :2].tobytes() for i in range(n)]
     best, count = None, 0
     for i, k in enumerate(keys):
         c = keys.count(k)

@@ -1,0 +1,464 @@
+"""The unified SEDAR engine: one detection/recovery core for every workload.
+
+Paper Secs. 3.1–3.3 compose three orthogonal mechanisms — replicated
+execution (detection), boundary validation (containment), and leveled
+checkpointing (recovery). This module is the single place where that
+composition lives (DESIGN.md §1):
+
+    SedarEngine = ReplicaExecutor        (how redundant copies execute)
+                × BoundarySchedule       (when boundaries fire)
+                × recovery policy        (what a detection costs: L0 retry /
+                                          L1 stop / L2 chain / L3 validated)
+                × Watchdog + injection   (TOE detection, fault campaigns)
+
+Workloads (training, serving, future batch/eval paths) are thin drivers:
+they provide a jit-able `step_fn(state, batch, replica_id, armed) ->
+(candidate, fingerprint, aux)` plus state fingerprints, then call
+`run_protected_step()` per step and `on_detection()` per event. All
+compare / commit-gate / validate / checkpoint / rollback / retry logic is
+in the engine — no workload re-derives the protocol.
+
+Executor backends:
+  * plain       -- no redundancy (the unprotected baseline).
+  * sequential  -- time redundancy: both replicas run on the same devices
+                   one after the other, each owning a full state image.
+  * pod         -- space redundancy: replicas are pods of the production
+                   mesh; fingerprints exchanged via all-gather in shard_map.
+  * vote        -- N-modular redundancy (beyond-paper, DESIGN.md §6): >=3
+                   pod replicas; a divergence is repaired FORWARD by
+                   broadcasting the majority replica's state — no rollback.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
+                                  majority_replica)
+from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
+                                    pytree_fingerprint)
+from repro.core.recovery import (MultiCheckpointRecovery, RecoveryAction,
+                                 ValidatedCheckpointRecovery)
+
+
+# ---------------------------------------------------------------------------
+# Boundary schedule
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BoundarySchedule:
+    """When each SEDAR boundary fires (cadences in steps; 0 = never).
+
+    commit_interval     -- TDC boundary: replica update-fingerprint compare
+                           before the commit (paper: validate-before-send).
+    validate_interval   -- FSC boundary: full-state fingerprint compare.
+    checkpoint_interval -- L2/L3 checkpoint cadence (t_i analogue).
+    toe_timeout_s       -- replica flow-separation lapse (TOE boundary).
+    """
+
+    commit_interval: int = 1
+    validate_interval: int = 0
+    checkpoint_interval: int = 0
+    toe_timeout_s: float = 120.0
+
+    @classmethod
+    def from_config(cls, sedar) -> "BoundarySchedule":
+        return cls(commit_interval=max(int(sedar.validate_interval), 1),
+                   validate_interval=int(sedar.param_validate_interval),
+                   checkpoint_interval=int(sedar.checkpoint_interval),
+                   toe_timeout_s=float(sedar.toe_timeout_s))
+
+    @staticmethod
+    def _due(step: int, interval: int) -> bool:
+        return interval > 0 and step > 0 and step % interval == 0
+
+    def commit_due(self, step: int) -> bool:
+        return self.commit_interval > 0 and step % self.commit_interval == 0
+
+    def validate_due(self, step: int) -> bool:
+        return self._due(step, self.validate_interval)
+
+    def checkpoint_due(self, step: int) -> bool:
+        return self._due(step, self.checkpoint_interval)
+
+
+@dataclass
+class StepOutcome:
+    """Result of one protected step. `dual` is ALWAYS the state to continue
+    from: the pre-step state when the commit was gated by a detection, the
+    committed state otherwise (recovery then acts on it via on_detection)."""
+
+    dual: Any
+    aux: Any = None
+    event: Optional[DetectionEvent] = None
+
+    @property
+    def committed(self) -> bool:
+        return self.event is None or self.event.boundary not in ("commit",
+                                                                 "toe")
+
+
+def _default_localizer(c0, c1) -> List[Dict[str, Any]]:
+    """Leaf-level localization for a commit mismatch: per-leaf fingerprints
+    of the two candidate states (the fused compare fingerprint is a single
+    hash — localization recomputes at leaf granularity, off the hot path)."""
+    fa, fb = pytree_fingerprint(c0), pytree_fingerprint(c1)
+    return mismatch_report(c0, fa, fb)[:4]
+
+
+# ---------------------------------------------------------------------------
+# Replica executors
+# ---------------------------------------------------------------------------
+
+class ReplicaExecutor:
+    """Protocol for redundant-execution backends.
+
+    execute(dual, batch, step, armed, compare)
+        -> (dual', aux, event | None); dual' == dual when event is not None.
+    validate(dual, step)      -> DetectionEvent | None  (FSC boundary)
+    validated_fp(dual)        -> (per-leaf fp of r0 [np], replicas_equal)
+    init_dual(single)         -> dual state from one logical state
+    adopt_single(single)      -> dual state from a restored L3 checkpoint
+    state_fp(dual)            -> per-leaf fingerprint of r0 (reporting)
+    repair(event, dual)       -> (dual', record) | None  (forward correction)
+    """
+
+    name = "base"
+    n_replicas = 1
+
+    def init_dual(self, single):
+        return {"r0": single}
+
+    def adopt_single(self, single):
+        return {"r0": single}
+
+    def repair(self, event: DetectionEvent, dual
+               ) -> Optional[Tuple[Any, Dict[str, Any]]]:
+        return None
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        return None
+
+    def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
+        return np.asarray(self.state_fp(dual)), True
+
+    def state_fp(self, dual):
+        raise NotImplementedError
+
+
+class PlainExecutor(ReplicaExecutor):
+    """No redundancy: the unprotected baseline (replication='none')."""
+
+    name = "none"
+    n_replicas = 1
+
+    def __init__(self, step_fn: Callable, state_fp_fn: Callable):
+        self.step_fn = step_fn
+        self.state_fp_fn = state_fp_fn
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        cand, _fp, aux = self.step_fn(dual["r0"], batch, jnp.asarray(0),
+                                      armed)
+        return {"r0": cand}, aux, None
+
+    def state_fp(self, dual):
+        return self.state_fp_fn(dual["r0"])
+
+
+class SequentialExecutor(ReplicaExecutor):
+    """Time redundancy: replicas run back-to-back on the same devices, each
+    owning a FULL state image (the paper's per-thread memory image), so
+    FSC-class corruption is representable and detectable."""
+
+    name = "sequential"
+    n_replicas = 2
+
+    def __init__(self, step_fn: Callable, state_fp_fn: Callable,
+                 fast_state_fp_fn: Optional[Callable] = None,
+                 watchdog: Optional[Watchdog] = None,
+                 toe_timeout_s: float = 120.0,
+                 delay_source: Optional[Callable[[], dict]] = None,
+                 localizer: Callable = _default_localizer):
+        self.step_fn = step_fn
+        self.state_fp_fn = state_fp_fn
+        self.fast_state_fp_fn = fast_state_fp_fn or state_fp_fn
+        self.watchdog = watchdog
+        self.toe_timeout_s = toe_timeout_s
+        self.delay_source = delay_source or (lambda: {})
+        self.localizer = localizer
+
+    def init_dual(self, single):
+        return {"r0": single, "r1": jax.tree.map(jnp.copy, single)}
+
+    adopt_single = init_dual   # a validated single state seeds both replicas
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        outs, exec_t = {}, {}
+        delays = self.delay_source() or {}
+        for rid in range(self.n_replicas):
+            # one-shot scenario hook (the paper injects the delay once; the
+            # re-execution after recovery is not delayed again)
+            delay = delays.pop((step, rid), None)
+            t_r = time.monotonic()
+            if delay:
+                time.sleep(delay)
+            outs[rid] = self.step_fn(dual[f"r{rid}"], batch,
+                                     jnp.asarray(rid), armed)
+            jax.block_until_ready(outs[rid][1])
+            exec_t[rid] = time.monotonic() - t_r
+            if self.watchdog is not None:
+                self.watchdog.beat(rid, step)
+
+        # TOE: replica flow separation beyond the configured lapse
+        if abs(exec_t[1] - exec_t[0]) > self.toe_timeout_s:
+            return dual, outs[0][2], DetectionEvent(
+                step=step, boundary="toe", effect="TOE",
+                detail={"dt0": exec_t[0], "dt1": exec_t[1],
+                        "timeout_s": self.toe_timeout_s})
+
+        (c0, fp0, aux0), (c1, fp1, _aux1) = outs[0], outs[1]
+        if compare and not bool(np.asarray(fingerprints_equal(fp0, fp1))):
+            detail = {"mismatch": self.localizer(c0, c1)}
+            return dual, aux0, DetectionEvent(step=step, boundary="commit",
+                                              effect="TDC", detail=detail)
+        # containment held (or compare skipped this step): adopt candidates
+        return {"r0": c0, "r1": c1}, aux0, None
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        fp0 = self.fast_state_fp_fn(dual["r0"])
+        fp1 = self.fast_state_fp_fn(dual["r1"])
+        if bool(np.asarray(fingerprints_equal(fp0, fp1))):
+            return None
+        return DetectionEvent(step=step, boundary="validate", effect="FSC")
+
+    def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
+        fp0 = self.fast_state_fp_fn(dual["r0"])
+        fp1 = self.fast_state_fp_fn(dual["r1"])
+        equal = bool(np.asarray(fingerprints_equal(fp0, fp1)))
+        return np.asarray(self.state_fp_fn(dual["r0"])), equal
+
+    def state_fp(self, dual):
+        return self.state_fp_fn(dual["r0"])
+
+
+class PodExecutor(ReplicaExecutor):
+    """Space redundancy: replicas are pods of the production mesh; one jit'd
+    step runs the compare + gated commit inside shard_map.
+
+    `pod_step(state, batch, armed) -> (new_state, eq, fp_all, aux)` must
+    commit candidates only where eq (the in-jit analogue of the sequential
+    compare-then-commit); `pod_validate(state) -> (eq, fp_all)` compares
+    full-state fingerprints over the replica axis."""
+
+    name = "pod"
+    n_replicas = 2
+
+    def __init__(self, pod_step: Callable, pod_validate: Callable,
+                 state_fp_fn: Callable):
+        self.pod_step = pod_step
+        self.pod_validate = pod_validate
+        self.state_fp_fn = state_fp_fn
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        new_state, eq, fp_all, aux = self.pod_step(dual["r0"], batch, armed)
+        if compare and not bool(np.asarray(eq)):
+            return dual, aux, DetectionEvent(step=step, boundary="commit",
+                                             effect="TDC")
+        return {"r0": new_state}, aux, None
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        eq, fp_all = self.pod_validate(dual["r0"])
+        if bool(np.asarray(eq)):
+            return None
+        return DetectionEvent(step=step, boundary="validate", effect="FSC",
+                              detail={"fp_all": np.asarray(fp_all)})
+
+    def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
+        eq, _ = self.pod_validate(dual["r0"])
+        return np.asarray(self.state_fp_fn(dual["r0"])), bool(np.asarray(eq))
+
+    def state_fp(self, dual):
+        return self.state_fp_fn(dual["r0"])
+
+
+class VoteExecutor(PodExecutor):
+    """Beyond-paper N-modular redundancy (DESIGN.md §6): >=3 pod replicas.
+
+    A state divergence is repaired FORWARD by broadcasting the majority
+    replica's state (no rollback, no recomputation); a transient commit
+    mismatch simply re-executes. Falls back to the engine's recovery policy
+    when no strict majority exists."""
+
+    name = "vote"
+
+    def __init__(self, pod_step: Callable, pod_validate: Callable,
+                 state_fp_fn: Callable, broadcaster: Callable,
+                 n_replicas: int = 3):
+        super().__init__(pod_step, pod_validate, state_fp_fn)
+        self.broadcaster = broadcaster
+        self.n_replicas = n_replicas
+
+    def repair(self, event: DetectionEvent, dual
+               ) -> Optional[Tuple[Any, Dict[str, Any]]]:
+        if event.boundary in ("validate", "final") and \
+                "fp_all" in event.detail:
+            src, ok = majority_replica(event.detail["fp_all"])
+            if ok:
+                repaired = self.broadcaster(src)(dual["r0"])
+                return {"r0": repaired}, {"kind": "vote_repair", "step": None,
+                                          "rollbacks": 0, "src_replica": src}
+            return None
+        if event.boundary == "commit":
+            # transient update fault: simple re-execution, no rollback
+            return dual, {"kind": "vote_retry", "step": None, "rollbacks": 0}
+        return None
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class SedarEngine:
+    """Composes executor × schedule × recovery × watchdog × injection behind
+    `run_protected_step()` + `on_detection()` (DESIGN.md §1).
+
+    The engine owns the event/recovery/checkpoint records for a run
+    (`detections`, `recoveries`, `checkpoints`); drivers alias or copy them
+    into their own reports. Call `reset()` at the start of each run."""
+
+    def __init__(self, executor: ReplicaExecutor, schedule: BoundarySchedule,
+                 recovery, *, watchdog: Optional[Watchdog] = None,
+                 inj_spec=None, inj_flag=None,
+                 init_fn: Optional[Callable[[], Any]] = None,
+                 notify: Optional[Callable[[DetectionEvent], None]] = None):
+        self.executor = executor
+        self.schedule = schedule
+        self.recovery = recovery
+        self.watchdog = watchdog
+        self.inj_spec = inj_spec
+        self.inj_flag = inj_flag
+        self.init_fn = init_fn
+        self.notify = notify or (lambda e: print(str(e), flush=True))
+        self.detections: List[DetectionEvent] = []
+        self.recoveries: List[Dict[str, Any]] = []
+        self.checkpoints: List[int] = []
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def reset(self) -> None:
+        self.detections.clear()
+        self.recoveries.clear()
+        self.checkpoints.clear()
+
+    def init_dual(self):
+        if self.init_fn is None:
+            raise RuntimeError("engine has no init_fn")
+        return self.init_fn()
+
+    # -- the protected step --------------------------------------------------
+
+    def run_protected_step(self, dual, batch, step: int) -> StepOutcome:
+        """Execute one redundant step at `step`: inject (if armed) ->
+        execute replicas -> TDC commit gate -> FSC validation boundary ->
+        checkpoint boundary. Returns the state to continue from plus the
+        detection event, if any (feed it to `on_detection`)."""
+        armed = jnp.asarray(
+            1 if (self.inj_flag is not None
+                  and self.inj_flag.arm_spec(self.inj_spec) is not None)
+            else 0, jnp.bool_)
+        compare = self.schedule.commit_due(step)
+        dual2, aux, event = self.executor.execute(dual, batch, step, armed,
+                                                  compare)
+        self._mark_injected(step)
+        if event is not None:
+            return StepOutcome(dual=dual2, aux=aux, event=event)
+        # the step committed: consecutive-failure budgets reset (whatever
+        # failed before was transient)
+        note = getattr(self.recovery, "note_success", None)
+        if note is not None:
+            note()
+
+        new_step = step + 1
+        if self.executor.n_replicas > 1 and \
+                self.schedule.validate_due(new_step):
+            event = self.executor.validate(dual2, new_step)
+            if event is not None:
+                return StepOutcome(dual=dual2, aux=aux, event=event)
+
+        # checkpoint boundary (right after validation — minimal window of
+        # vulnerability, paper Sec. 3.2)
+        event = self._maybe_checkpoint(dual2, new_step)
+        return StepOutcome(dual=dual2, aux=aux, event=event)
+
+    def validate_final(self, dual, step: int) -> Optional[DetectionEvent]:
+        """Final-results comparison (paper Sec. 3.1); the event is tagged
+        boundary='final' so NMR repair still applies."""
+        if self.executor.n_replicas <= 1:
+            return None
+        event = self.executor.validate(dual, step)
+        if event is not None:
+            event.boundary = "final"
+        return event
+
+    # -- detection handling ---------------------------------------------------
+
+    def on_detection(self, event: DetectionEvent, dual):
+        """Record + notify + recover. Returns the state to continue from;
+        raises SedarSafeStop when the policy is (or degrades to) L1."""
+        self.detections.append(event)
+        self.notify(event)
+
+        fix = self.executor.repair(event, dual)
+        if fix is not None:
+            repaired, record = fix
+            record = dict(record, at=event.step)
+            self.recoveries.append(record)
+            return repaired
+
+        action: RecoveryAction = self.recovery.on_detection(event)
+        self.recoveries.append({"kind": action.kind, "step": action.step,
+                                "rollbacks": action.rollbacks,
+                                "at": event.step})
+        if action.kind == "stop":
+            raise SedarSafeStop(event)
+        if action.kind == "retry":
+            return dual          # transient fault: re-execute the same step
+        if action.kind == "restart_scratch":
+            return self.init_dual()
+        if isinstance(self.recovery, ValidatedCheckpointRecovery):
+            # L3 stores ONE validated state; re-seed every replica from it
+            single = self.recovery.restore(action, dual["r0"])
+            single = jax.tree.map(jnp.asarray, single)
+            return self.executor.adopt_single(single)
+        restored = self.recovery.restore(action, dual)
+        return jax.tree.map(jnp.asarray, restored)
+
+    # -- internals ------------------------------------------------------------
+
+    def _mark_injected(self, step: int) -> None:
+        if (self.inj_spec is not None and self.inj_flag is not None
+                and not self.inj_flag.already_injected()
+                and step == self.inj_spec.step):
+            self.inj_flag.mark()
+
+    def _maybe_checkpoint(self, dual, step: int) -> Optional[DetectionEvent]:
+        r = self.recovery
+        if isinstance(r, MultiCheckpointRecovery):
+            if r.maybe_checkpoint(step, dual,
+                                  np.asarray(self.executor.state_fp(dual))):
+                self.checkpoints.append(step)
+            return None
+        if isinstance(r, ValidatedCheckpointRecovery):
+            if step == 0 or step % r.interval != 0:
+                return None
+            fp0, fp_equal = self.executor.validated_fp(dual)
+            ev = r.maybe_checkpoint(step, dual, fp0, fp_equal=fp_equal)
+            if ev is None:
+                self.checkpoints.append(step)
+            return ev
+        return None   # SafeStop / RetryRecovery store no checkpoints

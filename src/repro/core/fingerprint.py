@@ -21,10 +21,20 @@ A single flipped bit anywhere changes h1 (and almost surely h2).
 
 `pytree_fingerprint` returns a (n_leaves, 4) uint32 array (stats bitcast), so
 replica comparison is a single small array equality.
+
+Two granularities (DESIGN.md §5):
+  * per-leaf  -- `pytree_fingerprint` -> (n_leaves, 4). One reduction per
+    leaf; keeps leaf-level localization for `mismatch_report`.
+  * fused     -- `pytree_fingerprint_fused` -> (4,). All leaves are packed
+    (bit-exactly, via `_to_u32`) into ONE flat u32 buffer and hashed in a
+    single streaming pass — one kernel launch instead of n_leaves, which is
+    what the comparison hot path wants (models have hundreds of leaves, most
+    of them small). The fused hash is NOT comparable to per-leaf hashes
+    (different index stream); both replicas must use the same granularity.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +96,99 @@ def pytree_fingerprint(tree, use_pallas: bool = False) -> jnp.ndarray:
     else:
         fps = [tensor_fingerprint(l) for l in leaves]
     return jnp.stack(fps) if fps else jnp.zeros((0, 4), jnp.uint32)
+
+
+def pack_tree_u32(tree) -> jnp.ndarray:
+    """Bit-exact packing of every leaf into one flat u32 buffer
+    (tree_flatten order). The packing is a reinterpretation, not a value
+    conversion, so any single corrupted bit in any leaf is a corrupted bit
+    in the packed buffer."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.uint32)
+    return jnp.concatenate([_to_u32(l) for l in leaves])
+
+
+def packed_fingerprint(u: jnp.ndarray) -> jnp.ndarray:
+    """Fingerprint of an already-packed u32 buffer -> (4,) uint32.
+
+    Same mixing as `tensor_fingerprint`, with the kernel's diagnostic
+    convention: sum/absmax are computed over the f32 REINTERPRETATION of the
+    packed words (matches kernels/fingerprint.py bit-for-bit on the hash
+    words; the float stats are diagnostics only).
+
+    Non-u32 input is bit-reinterpreted via `_to_u32` (never value-cast —
+    a value cast would truncate every float in (-1, 1) to 0 and make the
+    fingerprint blind to corruption)."""
+    u = jnp.asarray(u)
+    if u.dtype != jnp.uint32:
+        u = _to_u32(u)
+    u = u.reshape(-1)
+    n = u.shape[0]
+    if n == 0:
+        return jnp.zeros((4,), jnp.uint32)
+    idx = jax.lax.iota(jnp.uint32, n)
+    h1 = jnp.sum((u ^ (idx * C1)) * C2, dtype=jnp.uint32)
+    t2 = (u + idx) * C3
+    h2 = jnp.sum(t2 ^ (t2 >> jnp.uint32(15)), dtype=jnp.uint32)
+    xf = jax.lax.bitcast_convert_type(u, jnp.float32)
+    sb = jax.lax.bitcast_convert_type(jnp.sum(xf), jnp.uint32)
+    ab = jax.lax.bitcast_convert_type(jnp.max(jnp.abs(xf)), jnp.uint32)
+    return jnp.stack([h1, h2, sb, ab])
+
+
+def pytree_fingerprint_fused(tree, use_pallas: Optional[bool] = None
+                             ) -> jnp.ndarray:
+    """Whole-state fingerprint -> (4,) uint32: ONE fingerprint over the
+    logically-packed state instead of one per leaf.
+
+    Two value-identical lowerings of the same hash (hash words compare equal
+    across both — verified by tests):
+      * Pallas (accelerators): flatten/concatenate the leaves once into a
+        packed u32 buffer and make a single `fingerprint_pallas` pass over
+        it — one kernel launch for the whole state.
+      * jnp (CPU/XLA): per-leaf partial reductions with GLOBAL element
+        offsets folded into the index stream, combined with one final
+        add/max. Modular-add reductions are associative/commutative, so the
+        partials sum to exactly the packed-buffer hash — without
+        materializing the concatenation (which would cost an extra full
+        write+read pass).
+
+    `use_pallas=None` auto-selects from the JAX backend."""
+    if use_pallas is None:
+        from repro.kernels.fingerprint import default_interpret
+        use_pallas = not default_interpret()
+    if use_pallas:
+        u = pack_tree_u32(tree)
+        if u.shape[0]:
+            from repro.kernels.ops import fingerprint_packed
+            return fingerprint_packed(u)
+        return jnp.zeros((4,), jnp.uint32)
+
+    leaves = jax.tree.leaves(tree)
+    h1s, h2s, ss, as_ = [], [], [], []
+    offset = 0
+    for l in leaves:
+        u = _to_u32(l)
+        n = u.shape[0]
+        if n == 0:
+            continue
+        idx = jnp.uint32(offset) + jax.lax.iota(jnp.uint32, n)
+        h1s.append(jnp.sum((u ^ (idx * C1)) * C2, dtype=jnp.uint32))
+        t2 = (u + idx) * C3
+        h2s.append(jnp.sum(t2 ^ (t2 >> jnp.uint32(15)), dtype=jnp.uint32))
+        xf = jax.lax.bitcast_convert_type(u, jnp.float32)
+        ss.append(jnp.sum(xf))
+        as_.append(jnp.max(jnp.abs(xf)))
+        offset += n
+    if not h1s:
+        return jnp.zeros((4,), jnp.uint32)
+    h1 = jnp.sum(jnp.stack(h1s), dtype=jnp.uint32)
+    h2 = jnp.sum(jnp.stack(h2s), dtype=jnp.uint32)
+    s = jnp.sum(jnp.stack(ss))
+    a = jnp.max(jnp.stack(as_))
+    return jnp.stack([h1, h2, jax.lax.bitcast_convert_type(s, jnp.uint32),
+                      jax.lax.bitcast_convert_type(a, jnp.uint32)])
 
 
 def fingerprints_equal(fp_a, fp_b) -> jnp.ndarray:

@@ -117,6 +117,29 @@ class InjectionFlag:
         return spec
 
 
+class MemoryInjectionFlag:
+    """In-memory once-only flag with the InjectionFlag API, for workloads
+    that have no workdir (e.g. the serving path: a transient fault does not
+    repeat, so the retry after a detection must not re-inject)."""
+
+    def __init__(self):
+        self._injected = False
+
+    def already_injected(self) -> bool:
+        return self._injected
+
+    def mark(self) -> None:
+        self._injected = True
+
+    def reset(self) -> None:
+        self._injected = False
+
+    def arm_spec(self, spec: Optional[InjectionSpec]) -> Optional[InjectionSpec]:
+        if spec is None or self._injected:
+            return None
+        return spec
+
+
 def random_spec(key, tree, *, step: int, replica: int = 1,
                 target: str = "grads") -> InjectionSpec:
     """Uniformly random single-bit fault over a pytree (for campaigns)."""

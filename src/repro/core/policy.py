@@ -1,15 +1,20 @@
-"""Protection-strategy advisor (paper Secs. 3.4 + 4.4).
+"""Protection policy: strategy advisor + the engine factory.
 
-Given measured execution parameters (f_d, t_cs, t_ca, ...) and the system
-MTBE, pick the SEDAR level + checkpoint interval that minimizes the Average
-Execution Time (Eq. 11), and compute the dynamic-protection schedule from the
-Sec.-4.4 analysis ("when to start checkpointing").
+Two halves:
+  * `advise()` (paper Secs. 3.4 + 4.4): given measured execution parameters
+    (f_d, t_cs, t_ca, ...) and the system MTBE, pick the SEDAR level +
+    checkpoint interval that minimizes the Average Execution Time (Eq. 11).
+  * `make_engine()` / `make_trainer()` / `make_server()`: the single
+    composition point that turns a SedarConfig + workload step functions
+    into a `SedarEngine` (executor × schedule × recovery × watchdog ×
+    injection). Every launcher and runtime constructs engines here, so the
+    detection/recovery protocol is configured in exactly one place.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 from repro.core import temporal_model as tm
 
@@ -65,3 +70,79 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         keep_two_checkpoints_at=tm.min_progress_for_k(p_sys, 1),
         notes="; ".join(notes),
     )
+
+
+# ---------------------------------------------------------------------------
+# Engine factory — the one place engines are assembled
+# ---------------------------------------------------------------------------
+
+def make_engine(sedar_cfg, *, backend: Optional[str] = None,
+                step_fn: Optional[Callable] = None,
+                state_fp_fn: Optional[Callable] = None,
+                fast_state_fp_fn: Optional[Callable] = None,
+                pod_step: Optional[Callable] = None,
+                pod_validate: Optional[Callable] = None,
+                pod_broadcaster: Optional[Callable] = None,
+                n_replicas: int = 2,
+                recovery: Any = None, workdir: Optional[str] = None,
+                schedule: Any = None, watchdog: Any = None,
+                inj_spec: Any = None, inj_flag: Any = None,
+                init_fn: Optional[Callable] = None,
+                notify: Optional[Callable] = None,
+                delay_source: Optional[Callable[[], dict]] = None):
+    """Assemble a `SedarEngine` for one workload.
+
+    backend: "none" | "sequential" | "pod" | "vote" (defaults to
+    sedar_cfg.replication). Sequential/plain backends need `step_fn` +
+    `state_fp_fn`; pod/vote need the prebuilt shard_map'd `pod_step` /
+    `pod_validate` (+ `pod_broadcaster` for vote). `recovery`/`schedule`/
+    `watchdog` default from the config (recovery needs `workdir`)."""
+    from repro.core.engine import (BoundarySchedule, PlainExecutor,
+                                   PodExecutor, SedarEngine,
+                                   SequentialExecutor, VoteExecutor)
+    from repro.core.detection import Watchdog
+    from repro.core.recovery import make_recovery
+
+    backend = backend or getattr(sedar_cfg, "replication", "sequential")
+    schedule = schedule or BoundarySchedule.from_config(sedar_cfg)
+    watchdog = watchdog or Watchdog(schedule.toe_timeout_s)
+    if recovery is None:
+        recovery = make_recovery(sedar_cfg, workdir)
+
+    if backend in ("pod", "vote"):
+        if pod_step is None or pod_validate is None:
+            raise ValueError(f"backend {backend!r} needs pod_step and "
+                             "pod_validate")
+        if backend == "vote":
+            if pod_broadcaster is None:
+                raise ValueError("vote backend needs pod_broadcaster")
+            executor = VoteExecutor(pod_step, pod_validate, state_fp_fn,
+                                    pod_broadcaster,
+                                    n_replicas=max(n_replicas, 3))
+        else:
+            executor = PodExecutor(pod_step, pod_validate, state_fp_fn)
+    elif backend == "none":
+        executor = PlainExecutor(step_fn, state_fp_fn)
+    else:
+        executor = SequentialExecutor(
+            step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,
+            watchdog=watchdog, toe_timeout_s=schedule.toe_timeout_s,
+            delay_source=delay_source)
+
+    return SedarEngine(executor, schedule, recovery, watchdog=watchdog,
+                       inj_spec=inj_spec, inj_flag=inj_flag, init_fn=init_fn,
+                       notify=notify)
+
+
+def make_trainer(run_cfg, workdir: str, **kw):
+    """Construct a SEDAR-protected trainer (engine assembled internally via
+    `make_engine`)."""
+    from repro.runtime.train import SedarTrainer
+    return SedarTrainer(run_cfg, workdir, **kw)
+
+
+def make_server(run_cfg, *, dual: bool = False, inj_spec: Any = None, **kw):
+    """Construct a SEDAR-protected server (engine assembled internally via
+    `make_engine`)."""
+    from repro.runtime.serve import SedarServer
+    return SedarServer(run_cfg, dual=dual, inj_spec=inj_spec, **kw)

@@ -126,12 +126,26 @@ class MultiCheckpointRecovery:
         return True
 
     def on_detection(self, event: DetectionEvent) -> RecoveryAction:
+        """Paper Alg. 1 mapping, audited against the 1-based pseudo-code:
+
+            extern_counter ∈ {1..}         (incremented before the lookup)
+            ckpt_no  = ckpt_count - extern_counter + 1     (1-based from start)
+            restore ckpt_no                 -> 0-based steps[ckpt_count - counter]
+            ckpt_no < 1  (counter > count)  -> relaunch from the beginning
+
+        First detection restores the NEWEST checkpoint (possibly dirty);
+        each re-detection walks one version further back. `store.steps()`
+        barriers pending async writes, so ckpt_count is exact even when the
+        detection lands right after an async checkpoint boundary. Versions
+        re-cut during re-execution overwrite their step slot, keeping the
+        counter↔version mapping stable across rollbacks."""
         rollbacks = self.counter.increment()
         steps = self.store.steps()
         idx = len(steps) - rollbacks          # ckpt_count - extern_counter
         if idx < 0:
-            # fault predates the first (remaining) checkpoint: relaunch from
-            # the beginning (paper Fig. 2a, particular case)
+            # extern_counter exceeded the chain: the fault predates the first
+            # remaining checkpoint — relaunch from the beginning (paper
+            # Fig. 2a, particular case). idx == 0 still restores steps[0].
             return RecoveryAction(kind="restart_scratch", rollbacks=rollbacks,
                                   event=event)
         return RecoveryAction(kind="restore", step=steps[idx],
@@ -203,6 +217,56 @@ class ValidatedCheckpointRecovery:
         """Returns the single validated state (callers re-duplicate it into
         both replicas — valid by construction)."""
         return self.store.restore(action.step, template_single)
+
+
+# ---------------------------------------------------------------------------
+# L0-style re-execution (serving / transient-only workloads)
+# ---------------------------------------------------------------------------
+
+class RetryRecovery:
+    """Pure re-execution recovery for workloads whose step is cheap to redo
+    (the serving decode path: 'recovery is trivial — recompute the step').
+
+    No checkpoints are stored; every detection yields a `retry` action,
+    recorded through the same external-counter accounting machinery as
+    L2/L3 (the optional `counter_path` persists the cumulative retry count;
+    `rollbacks` carries the CONSECUTIVE retry count for this step), so
+    drivers get retry budgeting and reporting for free instead of a bespoke
+    guard loop. The budget is consecutive-failure based: a committed step
+    resets it (`note_success`, called by the engine), so sporadic
+    transients over a long stream never exhaust it. Only `max_retries`
+    consecutive failures — a persistent divergence, not a transient fault —
+    degrade to the L1 safe stop."""
+
+    level = 0
+
+    def __init__(self, max_retries: int = 8,
+                 counter_path: Optional[str] = None):
+        self.max_retries = max_retries
+        self.counter = ExternalCounter(counter_path) if counter_path else None
+        self._consecutive = 0
+
+    def maybe_checkpoint(self, step, dual_state, fingerprints=None) -> bool:
+        return False   # nothing to store: re-execution needs no state
+
+    def reset(self) -> None:
+        self._consecutive = 0
+        if self.counter is not None:
+            self.counter.reset()
+
+    def note_success(self) -> None:
+        """A step committed: whatever failed before was transient."""
+        self._consecutive = 0
+
+    def on_detection(self, event: DetectionEvent) -> RecoveryAction:
+        self._consecutive += 1
+        if self.counter is not None:
+            self.counter.increment()        # cumulative record (failures.txt)
+        if self.max_retries and self._consecutive > self.max_retries:
+            return RecoveryAction(kind="stop", rollbacks=self._consecutive,
+                                  event=event)
+        return RecoveryAction(kind="retry", rollbacks=self._consecutive,
+                              event=event)
 
 
 def make_recovery(sedar_cfg, workdir: Optional[str] = None):

@@ -22,6 +22,8 @@ memory-bound by design and its roofline cost is one read of the state.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +36,16 @@ C3 = np.uint32(3266489917)
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 256      # (256, 128) u32 = 128 KiB per VMEM tile
+
+
+def default_interpret() -> bool:
+    """Interpret-mode auto-detection: compile the kernel for real on TPU,
+    fall back to the Python interpreter elsewhere (CPU test containers).
+    REPRO_PALLAS_INTERPRET=0/1 overrides the backend check."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
 
 
 def _fingerprint_kernel(n_valid, u_ref, h1_ref, h2_ref, s_ref, a_ref):
@@ -72,14 +84,21 @@ def _fingerprint_kernel(n_valid, u_ref, h1_ref, h2_ref, s_ref, a_ref):
 
 
 def fingerprint_pallas(x, block_rows: int = DEFAULT_BLOCK_ROWS,
-                       interpret: bool = True):
+                       interpret: Optional[bool] = None):
     """-> (4,) uint32, bit-identical to fingerprint_ref. Accepts any floating
-    dtype (exact upcast to f32 first, matching the oracle)."""
+    dtype (exact upcast to f32 first, matching the oracle) or an
+    already-packed uint32 buffer (the fused whole-state path — hashed as-is,
+    no bitcast). `interpret=None` auto-detects from the JAX backend."""
+    if interpret is None:
+        interpret = default_interpret()
     x = jnp.asarray(x)
-    if x.dtype != jnp.float32:
-        x = x.astype(jnp.float32)
-    n = x.size
-    u = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32)
+    if x.dtype == jnp.uint32:
+        u = x.reshape(-1)
+    else:
+        if x.dtype != jnp.float32:
+            x = x.astype(jnp.float32)
+        u = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32)
+    n = u.size
 
     per_block = block_rows * LANES
     nblocks = max((n + per_block - 1) // per_block, 1)

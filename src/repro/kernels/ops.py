@@ -8,26 +8,32 @@ would see.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fingerprint import fingerprint_pallas
+from repro.kernels.fingerprint import default_interpret, fingerprint_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
-
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+_interpret = default_interpret   # back-compat alias
 
 
 def fingerprint(x, block_rows: int = 256) -> jnp.ndarray:
     """Fused fingerprint of one tensor -> (4,) uint32."""
     return fingerprint_pallas(x, block_rows=block_rows,
-                              interpret=_interpret())
+                              interpret=default_interpret())
+
+
+def fingerprint_packed(u, block_rows: int = 256) -> jnp.ndarray:
+    """Fingerprint of an already-packed u32 buffer (the fused whole-state
+    path: core.fingerprint.pack_tree_u32 -> one kernel pass) -> (4,).
+
+    Float input is bit-reinterpreted by the kernel, never value-cast."""
+    u = jnp.asarray(u)
+    if u.dtype != jnp.uint32 and not jnp.issubdtype(u.dtype, jnp.floating):
+        raise TypeError(f"fingerprint_packed expects a packed uint32 buffer "
+                        f"(or a float tensor to bitcast), got {u.dtype}")
+    return fingerprint_pallas(u, block_rows=block_rows,
+                              interpret=default_interpret())
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -86,8 +86,11 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, Any]:
 
 
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# NB: the while argument may contain nested parens (older jax prints the
+# full tuple type: `while((s32[], f32[...]) %tuple.10), condition=...`), so
+# the argument is matched non-greedily up to the condition/body attributes.
 _WHILE_RE = re.compile(
-    r"while\([^)]*\)\s*,\s*(?:condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)"
+    r"\bwhile\(.*?(?:condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)"
     r"|body=%?([\w.\-]+)\s*,\s*condition=%?([\w.\-]+))")
 _CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
                       r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
@@ -171,6 +174,8 @@ def parse_collective_bytes_loopaware(hlo_text: str) -> Dict[str, Any]:
 
 def _analyze(compiled) -> Dict[str, Any]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per partition
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     coll = parse_collective_bytes(text)
     coll_loop = parse_collective_bytes_loopaware(text)

@@ -12,8 +12,16 @@ from typing import Optional, Tuple
 import jax
 
 
-def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...], devices=None):
-    devices = devices if devices is not None else jax.devices()
+def make_mesh_compat(shape: Tuple[int, ...], axes: Tuple[str, ...],
+                     devices=None):
+    """Version-compat mesh construction.
+
+    `jax.sharding.AxisType` (and the `axis_types=` kwarg of `jax.make_mesh`)
+    only exist on newer JAX; older releases (e.g. 0.4.3x) reject either.
+    Ladder: make_mesh+axis_types -> make_mesh -> plain Mesh construction.
+    All three produce an Auto-axes mesh, which is what every call site here
+    wants."""
+    devices = list(devices if devices is not None else jax.devices())
     n = 1
     for s in shape:
         n *= s
@@ -22,9 +30,26 @@ def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...], devices=None):
             f"mesh {shape} needs {n} devices, found {len(devices)} — the "
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
             "BEFORE any jax import (see launch/dryrun.py)")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    devs = devices[:n]
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    make = getattr(jax, "make_mesh", None)
+    if make is not None:
+        if axis_type is not None:
+            try:
+                return make(shape, axes, devices=devs,
+                            axis_types=(axis_type.Auto,) * len(axes))
+            except TypeError:
+                pass
+        try:
+            return make(shape, axes, devices=devs)
+        except TypeError:
+            pass
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devs).reshape(shape), axes)
+
+
+def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...], devices=None):
+    return make_mesh_compat(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import (RunConfig, TrainConfig, get_config, list_archs,
                            reduce_for_smoke)
-from repro.runtime.serve import SedarServer
+from repro.core.policy import make_server
 
 
 def main() -> None:
@@ -30,7 +30,7 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
-    srv = SedarServer(RunConfig(model=cfg, train=TrainConfig()),
+    srv = make_server(RunConfig(model=cfg, train=TrainConfig()),
                       dual=args.dual)
     params = srv.model.init(jax.random.PRNGKey(0))
     prompts = {"tokens": jnp.asarray(

@@ -21,8 +21,8 @@ from repro.configs import (RunConfig, SedarConfig, TrainConfig, get_config,
                            list_archs, reduce_for_smoke)
 from repro.core.fingerprint import pytree_fingerprint
 from repro.core.injection import InjectionSpec
+from repro.core.policy import make_trainer
 from repro.runtime.cluster import Heartbeat
-from repro.runtime.train import SedarTrainer
 
 
 def manual_vote_baseline(run_cfg: RunConfig, workdir: str, steps: int,
@@ -34,7 +34,7 @@ def manual_vote_baseline(run_cfg: RunConfig, workdir: str, steps: int,
     for inst in range(2):
         rc = dataclasses.replace(
             run_cfg, sedar=SedarConfig(level=1, replication="none"))
-        tr = SedarTrainer(rc, f"{workdir}/inst{inst}",
+        tr = make_trainer(rc, f"{workdir}/inst{inst}",
                           inj_spec=inj_spec if inst == 1 else None)
         _, rep = tr.run(steps)
         fps.append(rep.final_state_fp[:, :2])
@@ -45,7 +45,7 @@ def manual_vote_baseline(run_cfg: RunConfig, workdir: str, steps: int,
     print("[baseline] MISMATCH — launching third instance for majority vote")
     rc = dataclasses.replace(run_cfg,
                              sedar=SedarConfig(level=1, replication="none"))
-    tr = SedarTrainer(rc, f"{workdir}/inst2")
+    tr = make_trainer(rc, f"{workdir}/inst2")
     _, rep = tr.run(steps)
     third = rep.final_state_fp[:, :2]
     winner = 0 if np.array_equal(third, fps[0]) else 1
@@ -93,7 +93,7 @@ def main() -> None:
         return
 
     hb = Heartbeat(os.path.join(args.workdir, "heartbeats"), args.host_id)
-    trainer = SedarTrainer(rc, args.workdir, inj_spec=inj)
+    trainer = make_trainer(rc, args.workdir, inj_spec=inj)
     dual, rep = trainer.run(args.steps)
     hb.beat(rep.steps_completed)
     print(rep.summary())

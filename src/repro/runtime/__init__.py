@@ -1,3 +1,4 @@
 from repro.runtime.train import SedarTrainer, TrainReport
+from repro.runtime.serve import SedarServer, ServeReport
 
-__all__ = ["SedarTrainer", "TrainReport"]
+__all__ = ["SedarTrainer", "TrainReport", "SedarServer", "ServeReport"]

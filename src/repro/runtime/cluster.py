@@ -113,3 +113,33 @@ def plan_elastic_remesh(data_axis: int, global_batch: int,
         dropped_hosts=lost_hosts,
         note=("per-shard batch preserved; data-axis collectives shrink; "
               "restore from last VALID checkpoint (L3) then continue"))
+
+
+def rebuild_mesh(shape, axes, devices=None):
+    """Version-compat mesh reconstruction for the elastic planner (the
+    AxisType shim lives in launch/mesh.py; this is the cluster-side entry)."""
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat(tuple(shape), tuple(axes), devices=devices)
+
+
+def elastic_restart(run_cfg, workdir: str, lost_hosts: List[int], *,
+                    hosts_per_data_shard: int = 1, mesh=None, **trainer_kw):
+    """Host-loss recovery: shrink the data axis past the lost hosts and
+    rebuild the training engine via the policy factory.
+
+    Returns (plan, trainer). The trainer's engine restores from the last
+    valid checkpoint on its first detection-free boundary (L3 guarantees
+    validity); callers resume with `trainer.run(remaining_steps)`."""
+    import dataclasses as _dc
+
+    from repro.core.policy import make_trainer
+
+    plan = plan_elastic_remesh(run_cfg.mesh.shape[0]
+                               if run_cfg.mesh.shape else 1,
+                               run_cfg.train.global_batch, lost_hosts,
+                               hosts_per_data_shard=hosts_per_data_shard)
+    new_cfg = _dc.replace(
+        run_cfg, train=_dc.replace(run_cfg.train,
+                                   global_batch=plan.new_global_batch))
+    trainer = make_trainer(new_cfg, workdir, mesh=mesh, **trainer_kw)
+    return plan, trainer

@@ -1,14 +1,27 @@
-"""Batched serving loop with optional SEDAR detection on the decode path.
+"""Batched serving loop — a thin driver over the unified SEDAR engine.
 
 Serving follows the paper's inference-side story: decoding is deterministic
 (greedy or fixed-seed sampling), so a dual-replica serve step can compare
 logits fingerprints before emitting tokens — "validate the message before
-sending it to the user". Recovery for serving is trivial (recompute the
-step), so only detection (L1) applies.
+sending it to the user". The decode step runs through the SAME
+`SedarEngine.run_protected_step()` as training: each replica owns a full
+decode state image ({cache, tok, pos}), the TDC commit gate withholds the
+token on a mismatch, and recovery is the L0 `RetryRecovery` policy
+(re-execute the step; transient faults do not repeat), which gives serving
+the same external retry accounting the L2/L3 levels use instead of a
+bespoke guard loop.
+
+DMR attribution limit: with two replicas a PERSISTENT state divergence
+(e.g. an SDC committed into one replica's KV cache that only manifests at
+later positions) cannot be attributed to the faulty replica, so it is not
+repairable — after `max_retries` consecutive failed re-executions the
+stream safe-stops rather than emit an unvalidated token (the paper's L1
+guarantee; re-seeding one replica from the other would risk silently
+emitting the corrupted stream). Sporadic transients never hit the budget:
+a committed step resets the consecutive count (DESIGN.md §8).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -18,16 +31,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
-from repro.core.fingerprint import fingerprints_equal, pytree_fingerprint
-from repro.core.injection import InjectionSpec, inject_tree
+from repro.core.detection import DetectionEvent, SedarSafeStop
+from repro.core.engine import BoundarySchedule, SedarEngine
+from repro.core.fingerprint import (pytree_fingerprint,
+                                    pytree_fingerprint_fused)
+from repro.core.injection import InjectionSpec, MemoryInjectionFlag, \
+    inject_tree
+from repro.core.policy import make_engine
+from repro.core.recovery import RetryRecovery
 from repro.models import build_model
 
 
 @dataclass
 class ServeReport:
     tokens_emitted: int = 0
-    detections: List[int] = field(default_factory=list)   # positions
+    detections: List[DetectionEvent] = field(default_factory=list)
     retries: int = 0
+    stopped: bool = False          # retry budget exhausted (safe stop)
     wall_s: float = 0.0
 
 
@@ -35,29 +55,60 @@ class SedarServer:
     """Prefill once, then decode step-by-step (optionally dual-executed)."""
 
     def __init__(self, run_cfg: RunConfig, dual: bool = False,
-                 inj_spec: Optional[InjectionSpec] = None):
+                 inj_spec: Optional[InjectionSpec] = None,
+                 max_retries: int = 8):
         self.cfg = run_cfg
         self.model = build_model(run_cfg.model)
         self.dual = dual
         self.inj_spec = inj_spec
-        self._decode = jax.jit(self._decode_fn)
+        self.inj_flag = MemoryInjectionFlag()
         self._prefill = jax.jit(self._prefill_fn, static_argnums=(2,))
+        self._decode = jax.jit(self._decode_fn)
+        # Serving boundaries: TDC commit gate on every decode step; no FSC /
+        # checkpoint boundaries (the only mutable state is the KV cache,
+        # recomputable from the prompt — recovery is re-execution).
+        self.engine: SedarEngine = make_engine(
+            run_cfg.sedar,
+            backend=("sequential" if dual else "none"),
+            step_fn=self._decode,
+            state_fp_fn=jax.jit(lambda s: pytree_fingerprint(
+                {"tok": s["tok"]})),
+            fast_state_fp_fn=jax.jit(lambda s: pytree_fingerprint_fused(
+                {"tok": s["tok"]})),
+            schedule=BoundarySchedule(
+                commit_interval=1, validate_interval=0,
+                checkpoint_interval=0,
+                toe_timeout_s=run_cfg.sedar.toe_timeout_s),
+            recovery=RetryRecovery(max_retries=max_retries),
+            inj_spec=inj_spec, inj_flag=self.inj_flag,
+            notify=lambda e: None)
 
     def _prefill_fn(self, params, batch, max_len):
         return self.model.prefill(params, batch, max_len)
 
-    def _decode_fn(self, params, cache, tokens, pos, replica_id, armed):
+    def _decode_fn(self, state, params, replica_id, armed):
+        """Engine step_fn: (decode state, params-as-batch, rid, armed) ->
+        (candidate state, logits fingerprint, logits)."""
         if self.inj_spec is not None:
-            params = inject_tree(params, self.inj_spec, step=pos,
+            params = inject_tree(params, self.inj_spec, step=state["pos"],
                                  replica_id=replica_id, armed=armed)
-        logits, cache = self.model.decode_step(params, cache, tokens, pos)
-        fp = pytree_fingerprint({"logits": logits})
-        return logits, cache, fp
+        logits, cache = self.model.decode_step(params, state["cache"],
+                                               state["tok"], state["pos"])
+        fp = pytree_fingerprint_fused({"logits": logits})
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cand = {"cache": cache, "tok": tok, "pos": state["pos"] + 1}
+        return cand, fp, logits
 
     def generate(self, params, prompt_batch: Dict[str, Any], steps: int,
-                 max_len: Optional[int] = None) -> "tuple[np.ndarray, ServeReport]":
+                 max_len: Optional[int] = None
+                 ) -> "tuple[np.ndarray, ServeReport]":
         rep = ServeReport()
         t0 = time.time()
+        eng = self.engine
+        eng.reset()
+        self.inj_flag.reset()
+        if isinstance(eng.recovery, RetryRecovery):
+            eng.recovery.reset()
         B, S = prompt_batch["tokens"].shape
         P = (self.cfg.model.frontend_seq
              if (self.cfg.model.frontend and self.cfg.model.family == "vlm") else 0)
@@ -66,27 +117,27 @@ class SedarServer:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [np.asarray(tok)]
         pos = S + P
-        armed = jnp.asarray(True)
-        guard = 0
-        while len(out) < steps and guard < 4 * steps:
-            guard += 1
-            l0, c0, fp0 = self._decode(params, cache, tok, jnp.asarray(pos),
-                                       jnp.asarray(0), armed)
-            if self.dual:
-                l1, _, fp1 = self._decode(params, cache, tok, jnp.asarray(pos),
-                                          jnp.asarray(1), armed)
-                if not bool(np.asarray(fingerprints_equal(fp0, fp1))):
-                    # SDC on the serve path: validate-before-send — the token
-                    # is NOT emitted; the step re-executes (transient faults
-                    # do not repeat)
-                    rep.detections.append(pos)
-                    rep.retries += 1
-                    armed = jnp.asarray(False)
-                    continue
-            cache = c0
-            tok = jnp.argmax(l0, axis=-1).astype(jnp.int32)
-            out.append(np.asarray(tok))
+        dual = eng.executor.init_dual(
+            {"cache": cache, "tok": tok, "pos": jnp.asarray(pos, jnp.int32)})
+
+        while len(out) < steps:
+            outcome = eng.run_protected_step(dual, params, pos)
+            dual = outcome.dual
+            if outcome.event is not None:
+                # validate-before-send: the token is NOT emitted; the step
+                # re-executes via the engine's retry policy
+                try:
+                    dual = eng.on_detection(outcome.event, dual)
+                except SedarSafeStop:
+                    rep.stopped = True
+                    break
+                continue
+            out.append(np.asarray(dual["r0"]["tok"]))
             pos += 1
+
+        rep.detections = list(eng.detections)
+        rep.retries = sum(1 for r in eng.recoveries
+                          if r["kind"] in ("retry", "vote_retry"))
         rep.tokens_emitted = len(out) * B
         rep.wall_s = time.time() - t0
         return np.stack(out, axis=1), rep

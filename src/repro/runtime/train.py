@@ -1,27 +1,19 @@
-"""SEDAR training runtime: replicated step execution + leveled recovery.
+"""SEDAR training runtime — a thin driver over the unified engine.
 
-Execution backends (SedarConfig.replication):
-  * "none"       : plain training, no protection (half of the paper's manual
-                   baseline; see also --manual-vote in launch/train.py).
-  * "sequential" : both replicas run on the same devices one after the other
-                   (time redundancy). Each replica owns a FULL TrainState —
-                   the analogue of the paper's per-thread memory image — so
-                   FSC-class corruption is representable and detectable.
-  * "pod"        : replicas are pods of the production mesh (space
-                   redundancy): one jit'd step, state logically replicated
-                   over the "pod" axis, fingerprints exchanged with an
-                   explicit all-gather inside shard_map.
+All detection/recovery protocol (replica comparison, TDC commit gate, FSC
+validation, TOE watchdog, checkpoint boundaries, L1/L2/L3 + NMR recovery)
+lives in `repro.core.engine.SedarEngine`; this module only supplies the
+training-specific pieces:
 
-Step anatomy (sequential):
-    replica_step : grads -> [inject] -> grad fingerprint -> optimizer commit
-                   candidate; returns (candidate_state, fp, loss)
-    commit       : compare fingerprints; adopt candidates only when equal
-                   (containment: a corrupted update is never committed —
-                   the paper's validate-before-send)
-    validate     : full-state fingerprints compared every
-                   param_validate_interval steps (final-result compare)
-    checkpoint   : L2 snapshots the dual state; L3 validates-then-commits a
-                   single state (Algorithms 1 / 2 in core/recovery.py)
+  * the jit'd replica step (grads -> [inject] -> update fingerprint ->
+    optimizer commit candidate),
+  * state fingerprints (per-leaf for reports/localization; fused whole-state
+    for the hot comparison path when SedarConfig.fused_fingerprint),
+  * the pod/vote shard_map step for space redundancy, and
+  * the outer loop (data, loss bookkeeping, wall budget).
+
+Execution backends (SedarConfig.replication): "none", "sequential", "pod",
+"vote" — see core/engine.py and DESIGN.md §4 for their semantics.
 """
 from __future__ import annotations
 
@@ -38,12 +30,12 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
                                   make_pod_comparator, make_pod_injector)
-from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
-                                    pytree_fingerprint)
+from repro.core.engine import SedarEngine
+from repro.core.fingerprint import (pytree_fingerprint,
+                                    pytree_fingerprint_fused)
 from repro.core.injection import InjectionFlag, InjectionSpec, inject_tree
-from repro.core.recovery import (MultiCheckpointRecovery, RecoveryAction,
-                                 SafeStop, ValidatedCheckpointRecovery,
-                                 make_recovery)
+from repro.core.policy import make_engine
+from repro.core.recovery import make_recovery
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import apply_updates, make_optimizer
@@ -97,6 +89,19 @@ class SedarTrainer:
         self.watchdog = Watchdog(sedar.toe_timeout_s)
         self.notify = notify or (lambda e: print(str(e), flush=True))
         self._build_step_fns()
+        self.engine: SedarEngine = make_engine(
+            sedar, backend=self.backend,
+            step_fn=self._replica_step, state_fp_fn=self._state_fp,
+            fast_state_fp_fn=self._state_fp_fast,
+            pod_step=getattr(self, "_pod_step", None),
+            pod_validate=getattr(self, "_pod_validate", None),
+            pod_broadcaster=getattr(self, "_pod_bcast", None),
+            n_replicas=(self.mesh.shape[sedar.replica_axis]
+                        if self.backend in ("pod", "vote") else 2),
+            recovery=self.recovery, watchdog=self.watchdog,
+            inj_spec=inj_spec, inj_flag=self.inj_flag,
+            init_fn=self.init_dual, notify=self.notify,
+            delay_source=lambda: self.toe_delay)
 
     # -- state ---------------------------------------------------------------
 
@@ -110,20 +115,21 @@ class SedarTrainer:
         s = self.init_state(seed)
         if self.backend == "sequential":
             return {"r0": s, "r1": jax.tree.map(jnp.copy, s)}
-        return {"r0": s}   # pod / none: one logical copy
+        return {"r0": s}   # pod / vote / none: one physical copy per pod
 
-    # -- jitted step functions ---------------------------------------------------
+    # -- jitted step functions ------------------------------------------------
 
     def _build_step_fns(self):
-        model, opt, cfg = self.model, self.opt, self.cfg
+        model, opt = self.model, self.opt
         spec = self.inj_spec
-        compare_full = (self.sedar.compare == "full")
+        fused = bool(self.sedar.fused_fingerprint)
 
         def grad_fp(grads):
-            if compare_full:
-                # paper's exact mode: compare entire buffers -> fingerprint
-                # is the identity on a few probe elements + full hash anyway
-                return pytree_fingerprint(grads)
+            # fused: ONE whole-state pass over the packed update buffer
+            # (compare == "full" degenerates to the same fingerprint — the
+            # hash covers every bit either way)
+            if fused:
+                return pytree_fingerprint_fused(grads)
             return pytree_fingerprint(grads)
 
         def replica_step(state, batch, replica_id, armed):
@@ -152,14 +158,15 @@ class SedarTrainer:
             return pytree_fingerprint({"params": state["params"],
                                        "opt": state["opt"]})
 
-        self._replica_step = jax.jit(replica_step, static_argnums=())
-        self._state_fp = jax.jit(state_fp)
+        def state_fp_fast(state):
+            tree = {"params": state["params"], "opt": state["opt"]}
+            if fused:
+                return pytree_fingerprint_fused(tree)
+            return pytree_fingerprint(tree)
 
-        def commit(match, cand, old):
-            return jax.tree.map(
-                lambda a, b: jnp.where(match, a, b), cand, old)
-
-        self._commit = jax.jit(commit)
+        self._replica_step = jax.jit(replica_step)
+        self._state_fp = jax.jit(state_fp)          # per-leaf: reports
+        self._state_fp_fast = jax.jit(state_fp_fast)  # hot validation path
 
         if self.backend in ("pod", "vote"):
             assert self.mesh is not None, "pod backend requires a mesh"
@@ -200,18 +207,19 @@ class SedarTrainer:
                 return new_state, eq, fp_all, loss
 
             def pod_validate(state):
-                fp = state_fp(state)
-                return self._pod_cmp(fp)
+                return self._pod_cmp(state_fp_fast(state))
 
             self._pod_step = jax.jit(pod_step)
             self._pod_validate = jax.jit(pod_validate)
 
-    # -- driver -----------------------------------------------------------------
+    # -- driver ---------------------------------------------------------------
 
     def run(self, num_steps: int, dual=None, max_wall_steps: Optional[int] = None
             ) -> "tuple[dict, TrainReport]":
         rep = TrainReport()
         t0 = time.time()
+        eng = self.engine
+        eng.reset()
         dual = dual or self.init_dual()
         budget = max_wall_steps or (6 * num_steps + 60)
         executed = 0
@@ -224,200 +232,37 @@ class SedarTrainer:
             step = int(np.asarray(dual["r0"]["step"]))
             batch = {k: jnp.asarray(v) for k, v in
                      self.data.batch(step).items()}
-            armed = jnp.asarray(1 if self.inj_flag.arm_spec(self.inj_spec)
-                                else 0, jnp.bool_)
-            try:
-                if self.backend == "none":
-                    dual, loss = self._step_plain(dual, batch, armed)
-                elif self.backend in ("pod", "vote"):
-                    dual, loss, event = self._step_pod(dual, batch, armed, step)
-                    if event:
-                        dual = self._handle(event, dual, rep)
-                        continue
-                else:
-                    dual, loss, event = self._step_sequential(dual, batch,
-                                                              armed, step)
-                    if event:
-                        dual = self._handle(event, dual, rep)
-                        continue
-            except SedarSafeStop:
-                rep.stopped = True
-                break
-            rep.losses.append(float(np.asarray(loss)))
-            new_step = step + 1
-
-            # FSC boundary: full-state validation
-            if (self.backend in ("sequential", "pod", "vote")
-                    and new_step % self.sedar.param_validate_interval == 0):
-                event = self._validate_states(dual, new_step)
-                if event:
-                    dual = self._handle(event, dual, rep)
-                    continue
-
-            # checkpoint boundary (right after validation — minimal window
-            # of vulnerability, paper Sec. 3.2)
-            dual, ck_event = self._maybe_checkpoint(dual, new_step, rep)
-            if ck_event:
-                dual = self._handle(ck_event, dual, rep)
+            outcome = eng.run_protected_step(dual, batch, step)
+            dual = outcome.dual
+            if outcome.committed:
+                rep.losses.append(float(np.asarray(outcome.aux)))
+            if outcome.event is not None:
+                try:
+                    dual = eng.on_detection(outcome.event, dual)
+                except SedarSafeStop:
+                    rep.stopped = True
+                    break
                 continue
 
         # final validation (paper: final results comparison)
-        if self.backend in ("sequential", "pod", "vote") and not rep.stopped:
-            event = self._validate_states(dual,
-                                          int(np.asarray(dual["r0"]["step"])))
+        if not rep.stopped:
+            event = eng.validate_final(dual,
+                                       int(np.asarray(dual["r0"]["step"])))
             if event is not None:
-                event.boundary = "final"
-                dual = self._handle(event, dual, rep)
+                try:
+                    dual = eng.on_detection(event, dual)
+                except SedarSafeStop:
+                    rep.stopped = True
+        rep.detections = list(eng.detections)
+        rep.recoveries = list(eng.recoveries)
+        rep.checkpoints = list(eng.checkpoints)
         rep.steps_completed = int(np.asarray(dual["r0"]["step"]))
         rep.final_state_fp = np.asarray(self._state_fp(dual["r0"]))
+        # durability barrier: async checkpoint writers are daemon threads —
+        # without this, process exit can strand .tmp staging dirs and the
+        # on-disk chain is shorter than rep.checkpoints claims
+        store = getattr(self.recovery, "store", None)
+        if store is not None:
+            store.wait()
         rep.wall_s = time.time() - t0
         return dual, rep
-
-    # -- backend steps -------------------------------------------------------------
-
-    def _step_plain(self, dual, batch, armed):
-        cand, fp, loss = self._replica_step(dual["r0"], batch,
-                                            jnp.asarray(0), armed)
-        if self.inj_spec and not self.inj_flag.already_injected() and \
-                int(np.asarray(dual["r0"]["step"])) == self.inj_spec.step:
-            self.inj_flag.mark()
-        return {"r0": cand}, loss
-
-    def _step_sequential(self, dual, batch, armed, step):
-        outs = {}
-        exec_t = {}
-        for rid in (0, 1):
-            # one-shot scenario hook (the paper injects the delay once; the
-            # re-execution after recovery is not delayed again)
-            delay = self.toe_delay.pop((step, rid), None)
-            t_r = time.monotonic()
-            if delay:
-                time.sleep(delay)
-            outs[rid] = self._replica_step(dual[f"r{rid}"], batch,
-                                           jnp.asarray(rid), armed)
-            jax.block_until_ready(outs[rid][1])
-            exec_t[rid] = time.monotonic() - t_r
-            self.watchdog.beat(rid, step)
-        if self.inj_spec and not self.inj_flag.already_injected() and \
-                step == self.inj_spec.step:
-            self.inj_flag.mark()
-
-        # TOE: replica flow separation beyond the configured lapse
-        dt0 = exec_t[0]
-        dt1 = exec_t[1]
-        if abs(dt1 - dt0) > self.sedar.toe_timeout_s:
-            return dual, outs[0][2], DetectionEvent(
-                step=step, boundary="toe", effect="TOE",
-                detail={"dt0": dt0, "dt1": dt1,
-                        "timeout_s": self.sedar.toe_timeout_s})
-
-        (c0, fp0, loss0), (c1, fp1, loss1) = outs[0], outs[1]
-        match = bool(np.asarray(fingerprints_equal(fp0, fp1)))
-        if not match:
-            detail = {"mismatch": mismatch_report(c0["params"], fp0, fp1)[:4]}
-            return dual, loss0, DetectionEvent(step=step, boundary="commit",
-                                               effect="TDC", detail=detail)
-        new_dual = {"r0": self._commit(jnp.asarray(True), c0, dual["r0"]),
-                    "r1": self._commit(jnp.asarray(True), c1, dual["r1"])}
-        return new_dual, loss0, None
-
-    def _step_pod(self, dual, batch, armed, step):
-        new_state, eq, fp_all, loss = self._pod_step(dual["r0"], batch, armed)
-        if self.inj_spec and not self.inj_flag.already_injected() and \
-                step == self.inj_spec.step:
-            self.inj_flag.mark()
-        if not bool(np.asarray(eq)):
-            return dual, loss, DetectionEvent(step=step, boundary="commit",
-                                              effect="TDC")
-        return {"r0": new_state}, loss, None
-
-    # -- validation / checkpoint / recovery --------------------------------------------
-
-    def _validate_states(self, dual, step) -> Optional[DetectionEvent]:
-        if self.backend in ("pod", "vote"):
-            eq, fp_all = self._pod_validate(dual["r0"])
-            ok = bool(np.asarray(eq))
-            if not ok:
-                return DetectionEvent(step=step, boundary="validate",
-                                      effect="FSC",
-                                      detail={"fp_all": np.asarray(fp_all)})
-            return None
-        fp0 = self._state_fp(dual["r0"])
-        fp1 = self._state_fp(dual["r1"])
-        if bool(np.asarray(fingerprints_equal(fp0, fp1))):
-            return None
-        return DetectionEvent(step=step, boundary="validate", effect="FSC")
-
-    def _state_fingerprints(self, dual):
-        fp0 = self._state_fp(dual["r0"])
-        if self.backend == "sequential":
-            fp1 = self._state_fp(dual["r1"])
-            return fp0, fp1
-        return fp0, fp0
-
-    def _maybe_checkpoint(self, dual, step, rep):
-        r = self.recovery
-        if isinstance(r, SafeStop):
-            return dual, None
-        if isinstance(r, MultiCheckpointRecovery):
-            if r.maybe_checkpoint(step, dual,
-                                  np.asarray(self._state_fp(dual["r0"]))):
-                rep.checkpoints.append(step)
-            return dual, None
-        if isinstance(r, ValidatedCheckpointRecovery):
-            if step == 0 or step % r.interval != 0:
-                return dual, None
-            fp0, fp1 = self._state_fingerprints(dual)
-            if self.backend == "pod":
-                eq, _ = self._pod_validate(dual["r0"])
-                fp_equal = bool(np.asarray(eq))
-            else:
-                fp_equal = bool(np.asarray(fingerprints_equal(fp0, fp1)))
-            ev = r.maybe_checkpoint(step, dual, np.asarray(fp0),
-                                    fp_equal=fp_equal)
-            if ev is None:
-                rep.checkpoints.append(step)
-            return dual, ev
-        return dual, None
-
-    def _handle(self, event: DetectionEvent, dual, rep) -> dict:
-        rep.detections.append(event)
-        self.notify(event)
-        # beyond-paper N-modular redundancy: with >=3 replicas, a state
-        # divergence is repaired FORWARD by broadcasting the majority
-        # replica's state — no rollback, no recomputation (DESIGN.md §6)
-        if (self.backend == "vote" and "fp_all" in event.detail
-                and event.boundary in ("validate", "final")):
-            from repro.core.detection import majority_replica
-            src, ok = majority_replica(event.detail["fp_all"])
-            if ok:
-                repaired = self._pod_bcast(src)(dual["r0"])
-                rep.recoveries.append({"kind": "vote_repair", "step": None,
-                                       "rollbacks": 0, "at": event.step,
-                                       "src_replica": src})
-                return {"r0": repaired}
-        if self.backend == "vote" and event.boundary == "commit":
-            # transient gradient fault: simple re-execution (no rollback)
-            rep.recoveries.append({"kind": "vote_retry", "step": None,
-                                   "rollbacks": 0, "at": event.step})
-            return dual
-        action = self.recovery.on_detection(event)
-        rep.recoveries.append({"kind": action.kind, "step": action.step,
-                               "rollbacks": action.rollbacks,
-                               "at": event.step})
-        if action.kind == "stop":
-            raise SedarSafeStop(event)
-        if action.kind == "restart_scratch":
-            return self.init_dual()
-        # restore
-        if isinstance(self.recovery, ValidatedCheckpointRecovery):
-            single = self.recovery.restore(action, self._template_single(dual))
-            single = jax.tree.map(jnp.asarray, single)
-            if self.backend == "sequential":
-                return {"r0": single, "r1": jax.tree.map(jnp.copy, single)}
-            return {"r0": single}
-        restored = self.recovery.restore(action, dual)
-        return jax.tree.map(jnp.asarray, restored)
-
-    def _template_single(self, dual):
-        return dual["r0"]

@@ -1,0 +1,368 @@
+"""Unified SEDAR engine: executor x recovery-level matrix on a toy workload.
+
+The engine decouples the detection/recovery protocol from the model, so the
+full {sequential, pod, vote} x {L1, L2, L3} matrix runs on a tiny synthetic
+step function — no transformer in the loop. Pod/vote cells need >1 device
+and run in subprocesses with forced host device counts (the main pytest
+process must keep seeing 1 device).
+
+Also asserts the acceptance property of the refactor: the TRAINING driver
+and the SERVING driver emit identical DetectionEvent streams for the same
+class of injected fault, because both execute through
+`SedarEngine.run_protected_step()`.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.detection import SedarSafeStop
+from repro.core.engine import BoundarySchedule, SequentialExecutor
+from repro.core.fingerprint import pytree_fingerprint, \
+    pytree_fingerprint_fused
+from repro.core.injection import InjectionSpec, MemoryInjectionFlag, \
+    inject_tree
+from repro.core.policy import make_engine
+from repro.core.recovery import RetryRecovery
+from repro.configs import SedarConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# -- toy workload -----------------------------------------------------------
+
+def _toy_step_fn(spec):
+    """state {"x": f32[16], "step": i32} -> decayed update + optional fault."""
+
+    def step_fn(state, batch, replica_id, armed):
+        delta = 0.1 * batch - 0.01 * state["x"]
+        if spec is not None:
+            delta = inject_tree({"d": delta}, spec, step=state["step"],
+                                replica_id=replica_id, armed=armed)["d"]
+        fp = pytree_fingerprint_fused({"d": delta})
+        cand = {"x": state["x"] + delta, "step": state["step"] + 1}
+        return cand, fp, jnp.sum(cand["x"])
+
+    return jax.jit(step_fn)
+
+
+def _toy_engine(workdir, level, spec=None, backend="sequential",
+                ckpt_interval=3, validate_interval=4):
+    sedar = SedarConfig(level=level, replication=backend,
+                        validate_interval=1,
+                        param_validate_interval=validate_interval,
+                        checkpoint_interval=ckpt_interval,
+                        checkpoint_dir=os.path.join(workdir, "ckpt"),
+                        toe_timeout_s=60.0)
+    state_fp = jax.jit(lambda s: pytree_fingerprint({"x": s["x"]}))
+    fast_fp = jax.jit(lambda s: pytree_fingerprint_fused({"x": s["x"]}))
+
+    def init_single():
+        return {"x": jnp.zeros((16,), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    eng = make_engine(sedar, backend=backend, workdir=workdir,
+                      step_fn=_toy_step_fn(spec), state_fp_fn=state_fp,
+                      fast_state_fp_fn=fast_fp, inj_spec=spec,
+                      inj_flag=MemoryInjectionFlag(),
+                      init_fn=lambda: eng.executor.init_dual(init_single()),
+                      notify=lambda e: None)
+    return eng
+
+
+def _drive(eng, num_steps, max_iters=80):
+    """Minimal driver: the same protected-step loop train/serve use."""
+    dual = eng.init_dual()
+    eng.reset()
+    stopped = False
+    it = 0
+    while int(np.asarray(dual["r0"]["step"])) < num_steps:
+        it += 1
+        assert it < max_iters, "engine did not converge"
+        step = int(np.asarray(dual["r0"]["step"]))
+        batch = jnp.full((16,), float(step + 1), jnp.float32)
+        outcome = eng.run_protected_step(dual, batch, step)
+        dual = outcome.dual
+        if outcome.event is not None:
+            try:
+                dual = eng.on_detection(outcome.event, dual)
+            except SedarSafeStop:
+                stopped = True
+                break
+    return dual, stopped
+
+
+# -- sequential x {L1, L2, L3} ----------------------------------------------
+
+SPEC = InjectionSpec(leaf_idx=0, flat_idx=5, bit=20, step=4, replica=1,
+                     target="grads")
+
+
+@pytest.mark.parametrize("level,kinds", [
+    (1, ["stop"]),
+    (2, ["restore"]),
+    (3, ["restore"]),
+])
+def test_matrix_sequential(tmp_workdir, level, kinds):
+    eng = _toy_engine(tmp_workdir, level, spec=SPEC)
+    dual, stopped = _drive(eng, 8)
+    assert [e.boundary for e in eng.detections] == ["commit"]
+    assert [e.effect for e in eng.detections] == ["TDC"]
+    assert eng.detections[0].step == 4
+    assert [r["kind"] for r in eng.recoveries] == kinds
+    if level == 1:
+        assert stopped
+    else:
+        assert not stopped
+        assert eng.recoveries[0]["rollbacks"] == 1
+        assert int(np.asarray(dual["r0"]["step"])) == 8
+        # recovered trajectory == clean trajectory (bitwise)
+        clean = _toy_engine(tmp_workdir + "_clean", level)
+        dual_c, _ = _drive(clean, 8)
+        np.testing.assert_array_equal(np.asarray(dual["r0"]["x"]),
+                                      np.asarray(dual_c["r0"]["x"]))
+
+
+def test_matrix_sequential_l2_restart_scratch(tmp_workdir):
+    """Detection before the first checkpoint: Alg. 1 walks past the (empty)
+    chain and relaunches from the beginning."""
+    spec = InjectionSpec(leaf_idx=0, flat_idx=5, bit=20, step=1, replica=1,
+                         target="grads")
+    eng = _toy_engine(tmp_workdir, 2, spec=spec, ckpt_interval=5)
+    dual, stopped = _drive(eng, 6)
+    assert not stopped
+    assert eng.recoveries[0]["kind"] == "restart_scratch"
+    assert int(np.asarray(dual["r0"]["step"])) == 6
+
+
+def test_matrix_sequential_retry_policy(tmp_workdir):
+    """L0 retry policy (the serving default) through the same engine:
+    detection -> retry (no rollback) -> clean re-execution completes."""
+    eng = _toy_engine(tmp_workdir, 1, spec=SPEC)
+    eng.recovery = RetryRecovery(max_retries=4)
+    dual, stopped = _drive(eng, 8)
+    assert not stopped
+    assert [r["kind"] for r in eng.recoveries] == ["retry"]
+    assert eng.recoveries[0]["rollbacks"] == 1
+    assert int(np.asarray(dual["r0"]["step"])) == 8
+
+
+def test_retry_budget_degrades_to_safe_stop(tmp_workdir):
+    """A persistent (non-transient) divergence exhausts the retry budget and
+    degrades to the L1 safe stop instead of looping forever."""
+
+    def bad_step(state, batch, replica_id, armed):
+        delta = 0.1 * batch + jnp.where(replica_id == 1, 1e-3, 0.0)
+        fp = pytree_fingerprint_fused({"d": delta})
+        cand = {"x": state["x"] + delta, "step": state["step"] + 1}
+        return cand, fp, jnp.sum(cand["x"])
+
+    sedar = SedarConfig(level=1, replication="sequential",
+                        param_validate_interval=0, checkpoint_interval=0)
+    eng = make_engine(
+        sedar, backend="sequential", step_fn=jax.jit(bad_step),
+        state_fp_fn=jax.jit(lambda s: pytree_fingerprint({"x": s["x"]})),
+        recovery=RetryRecovery(max_retries=3),
+        init_fn=lambda: SequentialExecutor.init_dual(
+            None, {"x": jnp.zeros((16,), jnp.float32),
+                   "step": jnp.zeros((), jnp.int32)}),
+        notify=lambda e: None)
+    dual, stopped = _drive(eng, 4, max_iters=20)
+    assert stopped
+    assert [r["kind"] for r in eng.recoveries] == ["retry"] * 3 + ["stop"]
+
+
+# -- pod / vote x levels (subprocess: forced host devices) -------------------
+
+def _run(script: str, devices: int, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+_POD_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import SedarConfig
+from repro.core.detection import (SedarSafeStop, make_pod_comparator,
+                                  make_pod_broadcaster, _shard_map)
+from repro.core.fingerprint import pytree_fingerprint, pytree_fingerprint_fused
+from repro.core.injection import flip_bit
+from repro.core.policy import make_engine
+from repro.launch.mesh import make_test_mesh
+
+N_POD = %(n_pod)d
+mesh = make_test_mesh((N_POD, 2, 1), ("pod", "data", "model"))
+cmp_fp = make_pod_comparator(mesh, "pod")
+
+def pod_inject(x, step):
+    def inner(xl, st):
+        rid = jax.lax.axis_index("pod")
+        fire = jnp.logical_and(rid == 1, st == 4)
+        return jnp.where(fire, flip_bit(xl, 5, 20), xl)
+    return _shard_map(inner, mesh, in_specs=(P(), P()), out_specs=P())(
+        x, jnp.asarray(step))
+
+def pod_step(state, batch, armed):
+    delta = 0.1 * batch - 0.01 * state["x"]
+    delta = jax.lax.cond(armed, lambda d: pod_inject(d, state["step"]),
+                         lambda d: d, delta)
+    fp = pytree_fingerprint_fused({"d": delta})
+    eq, fp_all = cmp_fp(fp)
+    cand = {"x": state["x"] + delta, "step": state["step"] + 1}
+    new_state = jax.tree.map(lambda a, b: jnp.where(eq, a, b), cand, state)
+    return new_state, eq, fp_all, jnp.sum(cand["x"])
+
+def pod_validate(state):
+    return cmp_fp(pytree_fingerprint_fused({"x": state["x"]}))
+
+state_fp = jax.jit(lambda s: pytree_fingerprint({"x": s["x"]}))
+
+class Flag:
+    fired = False
+    def already_injected(self): return self.fired
+    def mark(self): self.fired = True
+    def arm_spec(self, spec): return None if self.fired else spec
+
+class Spec:   # duck-typed: the engine only reads .step
+    step = 4
+
+def drive(eng, num_steps):
+    dual = eng.init_dual()
+    eng.reset()
+    it = 0
+    while int(np.asarray(dual["r0"]["step"])) < num_steps:
+        it += 1
+        assert it < 60, "did not converge"
+        step = int(np.asarray(dual["r0"]["step"]))
+        batch = jnp.full((16,), float(step + 1), jnp.float32)
+        outcome = eng.run_protected_step(dual, batch, step)
+        dual = outcome.dual
+        if outcome.event is not None:
+            try:
+                dual = eng.on_detection(outcome.event, dual)
+            except SedarSafeStop:
+                return dual, True
+    return dual, False
+
+def build(level, backend, workdir, bcast=None):
+    sedar = SedarConfig(level=level, replication=backend,
+                        validate_interval=1, param_validate_interval=4,
+                        checkpoint_interval=3, checkpoint_dir=workdir)
+    eng = make_engine(sedar, backend=backend, workdir=workdir,
+                      state_fp_fn=state_fp, pod_step=jax.jit(pod_step),
+                      pod_validate=jax.jit(pod_validate),
+                      pod_broadcaster=bcast, n_replicas=N_POD,
+                      inj_spec=Spec(), inj_flag=Flag(),
+                      init_fn=lambda: {"r0": {
+                          "x": jnp.zeros((16,), jnp.float32),
+                          "step": jnp.zeros((), jnp.int32)}},
+                      notify=lambda e: None)
+    return eng
+"""
+
+
+def test_matrix_pod_levels(tmp_workdir):
+    """Pod backend (space redundancy) x {L1, L2, L3}: same detection step,
+    same boundary, level-appropriate recovery kinds and rollback counts."""
+    script = _POD_PRELUDE % {"n_pod": 2} + f"""
+import shutil
+with mesh:
+    for level, want in ((1, ["stop"]), (2, ["restore"]), (3, ["restore"])):
+        wd = {tmp_workdir!r} + f"/pod_l{{level}}"
+        shutil.rmtree(wd, ignore_errors=True)
+        eng = build(level, "pod", wd)
+        dual, stopped = drive(eng, 8)
+        assert [e.boundary for e in eng.detections] == ["commit"], (
+            level, eng.detections)
+        assert eng.detections[0].step == 4 and eng.detections[0].effect == "TDC"
+        assert [r["kind"] for r in eng.recoveries] == want, (
+            level, eng.recoveries)
+        assert stopped == (level == 1)
+        if level > 1:
+            assert eng.recoveries[0]["rollbacks"] == 1
+            assert int(np.asarray(dual["r0"]["step"])) == 8
+print("pod matrix OK")
+"""
+    out = _run(script, devices=4, timeout=420)
+    assert "pod matrix OK" in out
+
+
+def test_matrix_vote_forward_correction(tmp_workdir):
+    """Vote backend (NMR, 3 replicas): a commit fault re-executes with no
+    rollback at every level — the majority repairs forward."""
+    script = _POD_PRELUDE % {"n_pod": 3} + f"""
+import shutil
+bcast = make_pod_broadcaster(mesh, "pod")
+with mesh:
+    for level in (1, 2, 3):
+        wd = {tmp_workdir!r} + f"/vote_l{{level}}"
+        shutil.rmtree(wd, ignore_errors=True)
+        eng = build(level, "vote", wd, bcast=bcast)
+        dual, stopped = drive(eng, 8)
+        assert not stopped, level
+        assert [e.boundary for e in eng.detections] == ["commit"], (
+            level, eng.detections)
+        assert [r["kind"] for r in eng.recoveries] == ["vote_retry"], (
+            level, eng.recoveries)
+        assert all(r["rollbacks"] == 0 for r in eng.recoveries)
+        assert int(np.asarray(dual["r0"]["step"])) == 8
+print("vote matrix OK")
+"""
+    out = _run(script, devices=6, timeout=420)
+    assert "vote matrix OK" in out
+
+
+# -- train/serve event-stream equivalence ------------------------------------
+
+def test_train_serve_identical_event_streams(tmp_workdir):
+    """Both workload drivers run the SAME engine code path, so the same
+    class of injected fault (single bit-flip on replica 1, caught at the
+    commit boundary, retried/recovered once) must produce identical
+    DetectionEvent streams modulo the step index."""
+    from repro.configs import (RunConfig, TrainConfig, get_config,
+                               reduce_for_smoke)
+    from repro.runtime.serve import SedarServer
+    from repro.runtime.train import SedarTrainer
+
+    cfg = reduce_for_smoke(get_config("paper-testapp"))
+    rc = RunConfig(model=cfg,
+                   train=TrainConfig(global_batch=2, seq_len=8, steps=6,
+                                     warmup_steps=2, lr=1e-3),
+                   sedar=SedarConfig(level=3, replication="sequential",
+                                     validate_interval=1,
+                                     param_validate_interval=4,
+                                     checkpoint_interval=4))
+    tr_spec = InjectionSpec(leaf_idx=3, flat_idx=5, bit=20, step=4,
+                            replica=1, target="grads")
+    tr = SedarTrainer(rc, tmp_workdir, inj_spec=tr_spec)
+    _, tr_rep = tr.run(6)
+
+    srv_clean = SedarServer(rc)
+    params = srv_clean.model.init(jax.random.PRNGKey(0))
+    prompt = {"tokens": jnp.asarray(
+        np.random.RandomState(0).randint(0, 200, (2, 8)), jnp.int32)}
+    clean, _ = srv_clean.generate(params, prompt, steps=6)
+
+    srv_spec = InjectionSpec(leaf_idx=2, flat_idx=3, bit=30, step=10,
+                             replica=1, target="params")
+    srv = SedarServer(rc, dual=True, inj_spec=srv_spec)
+    toks, sv_rep = srv.generate(params, prompt, steps=6)
+
+    tr_stream = [(e.boundary, e.effect) for e in tr_rep.detections]
+    sv_stream = [(e.boundary, e.effect) for e in sv_rep.detections]
+    assert tr_stream == sv_stream == [("commit", "TDC")]
+    assert type(tr_rep.detections[0]) is type(sv_rep.detections[0])
+    # both recovered: training rolled back once, serving retried once,
+    # and neither emitted a corrupted result
+    assert tr_rep.recoveries[0]["rollbacks"] == 1
+    assert sv_rep.retries == 1
+    np.testing.assert_array_equal(toks, clean)

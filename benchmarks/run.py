@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
     table5_*   — Sec. 4.4 convenience-of-k analysis
     aet_*      — Sec. 3.4 Eq. 11 AET-vs-MTBE curves + advisor picks
     fingerprint_* — SEDAR comparison hot-spot throughput
+    abft_*     — checksummed-kernel detection vs duplicated execution
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -21,17 +22,19 @@ MODULES = [
     "benchmarks.bench_aet",
     "benchmarks.bench_scenarios",
     "benchmarks.bench_fingerprint",
+    "benchmarks.bench_abft",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
 
-# quick CI subset: analytic models + the fingerprint hot-spot (no training
-# loops, no dry-run artifacts)
+# quick CI subset: analytic models + the fingerprint hot-spot + the ABFT
+# detection-cost comparison (no training loops, no dry-run artifacts)
 SMOKE_MODULES = [
     "benchmarks.bench_strategies",
     "benchmarks.bench_convenience",
     "benchmarks.bench_aet",
     "benchmarks.bench_fingerprint",
+    "benchmarks.bench_abft",
 ]
 
 

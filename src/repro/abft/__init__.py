@@ -1,0 +1,20 @@
+"""ABFT subsystem: checksum-carrying kernels + the replica-free executor.
+
+Third detection axis beside replica count and checkpoint level (DESIGN.md
+§10): row/column checksums carried through the computation detect — and for
+single corruptions, correct — soft errors at a few percent overhead instead
+of duplicated execution.
+"""
+from repro.abft.executor import AbftExecutor
+from repro.abft.kernels import abft_flash_attention, abft_matmul, matmul_pallas
+from repro.abft.ref import (AbftReport, abft_attention_ref, abft_matmul_ref,
+                            attention_checksum_encode, attention_verify,
+                            checksum_encode, residual_threshold,
+                            verify_and_correct)
+
+__all__ = [
+    "AbftExecutor", "AbftReport", "abft_attention_ref", "abft_flash_attention",
+    "abft_matmul", "abft_matmul_ref", "attention_checksum_encode",
+    "attention_verify", "checksum_encode", "matmul_pallas",
+    "residual_threshold", "verify_and_correct",
+]

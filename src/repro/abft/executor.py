@@ -1,0 +1,187 @@
+"""Replica-free execution backend: ABFT detection through the SEDAR engine.
+
+`AbftExecutor` runs ONE instance of the workload whose protected kernels
+carry checksums (abft/kernels.py) and report per-invocation verification
+outcomes. It plugs into `SedarEngine` as backend "abft" / "hybrid"
+(core/policy.py::make_engine) and emits the SAME DetectionEvent stream as
+the sequential/pod/vote executors, so L0-retry / L1 / L2 / L3 recovery in
+`core/engine.py` work unchanged:
+
+  * detected-corrected   -- the checksums localized a single corrupted
+    element and the kernel repaired it in place. Surfaced as a commit-
+    boundary TDC event whose `repair()` commits the corrected candidate
+    FORWARD (rollbacks=0, kind="abft_correct") — the same forward-repair
+    protocol the vote executor uses, minus the 2 extra replicas.
+  * detected-uncorrectable -- residual violations that do not localize
+    (multi-element corruption): the event routes through the recovery
+    policy (retry / stop / rollback) exactly like a replica mismatch.
+  * escaped -- corruption below the residual noise floor, in an unprotected
+    kernel, or in the QK^T path of checksummed attention. Invisible to pure
+    "abft"; the "hybrid" mode catches the resident-state subset: every
+    commit fingerprints the committed state, and at the FSC cadence the
+    NEXT execute first re-fingerprints the state it is about to consume
+    and compares — at-rest corruption in the idle window is detected
+    before it can propagate (it must be caught at entry: once a step
+    executes from a corrupted state, the following commit fingerprint is
+    self-consistently corrupt). L3's validated checkpoints keep their
+    guarantee through the same `validated_fp` contract.
+
+step_fn contract: `(state, batch, replica_id, armed) -> (candidate, fp,
+aux[, report])` — the 3-tuple form of the replica backends still works
+(report=None: no ABFT-instrumented kernels in this workload, detection then
+comes only from hybrid validation), so the training/serving drivers run
+under this backend without modification; ABFT-instrumented steps append an
+`abft.ref.AbftReport`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detection import DetectionEvent
+from repro.core.engine import ReplicaExecutor
+from repro.core.fingerprint import fingerprints_equal
+
+
+def _report_summary(report) -> Dict[str, Any]:
+    return {"bad_rows": int(np.asarray(report.bad_rows)),
+            "bad_cols": int(np.asarray(report.bad_cols)),
+            "max_residual": float(np.asarray(report.max_residual))}
+
+
+class AbftExecutor(ReplicaExecutor):
+    """Single-instance executor with checksum-based detection (+ optional
+    hybrid fingerprint validation for the escaped-fault classes)."""
+
+    name = "abft"
+    n_replicas = 1
+
+    def __init__(self, step_fn: Callable, state_fp_fn: Callable,
+                 fast_state_fp_fn: Optional[Callable] = None,
+                 hybrid: bool = False, validate_interval: int = 0):
+        self.step_fn = step_fn
+        self.state_fp_fn = state_fp_fn
+        self.fast_state_fp_fn = fast_state_fp_fn or state_fp_fn
+        self.hybrid = hybrid
+        self.validate_interval = validate_interval
+        if hybrid:
+            self.name = "hybrid"
+        self.corrections: List[Dict[str, Any]] = []
+        self._pending_commit = None    # corrected candidate awaiting repair()
+        self._last_fp: Optional[np.ndarray] = None   # fp at last commit
+        self._last_fp_step = -1        # step the committed state carries
+
+    @property
+    def can_validate(self) -> bool:
+        # the engine-driven post-commit validate would compare the committed
+        # state against the fingerprint _commit() just took of that SAME
+        # state — a guaranteed-equal wasted pass. The periodic at-rest check
+        # runs at step ENTRY instead (execute()), so the engine boundary
+        # stays off even in hybrid mode...
+        return False
+
+    @property
+    def can_validate_final(self) -> bool:
+        # ...while the END-OF-RUN comparison is meaningful for hybrid: the
+        # state is idle after the last commit, and validate() catches
+        # corruption landing in that window before results are delivered
+        return self.hybrid
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def init_dual(self, single):
+        self._last_fp = None           # restored/fresh state: new baseline
+        self._last_fp_step = -1
+        self._pending_commit = None
+        return {"r0": single}
+
+    adopt_single = init_dual
+
+    # -- execution -----------------------------------------------------------
+
+    def _entry_check_due(self, step: int) -> bool:
+        # `_last_fp_step == step` guards against a stale baseline after an
+        # L2 rollback restored an OLDER state than the last commit — the
+        # comparison is only meaningful against the fingerprint of the very
+        # state this step is about to consume
+        return (self.hybrid and self.validate_interval > 0
+                and step % self.validate_interval == 0
+                and self._last_fp is not None
+                and self._last_fp_step == step)
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        # Resident-state FSC check at ENTRY: corruption of the idle state
+        # between commit and the next step would be absorbed into the
+        # trajectory by executing from it (the next commit fingerprint is
+        # then self-consistently corrupt), so the comparison against the
+        # commit-time fingerprint must happen before step_fn consumes the
+        # state. aux is None — this step did not execute.
+        if self._entry_check_due(step) and not self._resident_fp_equal(dual):
+            return dual, None, DetectionEvent(
+                step=step, boundary="validate", effect="FSC",
+                detail={"reason": "resident state diverged from its "
+                        "commit-time fingerprint"})
+        outs = self.step_fn(dual["r0"], batch, jnp.asarray(0), armed)
+        if len(outs) == 4:
+            cand, _fp, aux, report = outs
+        else:
+            cand, _fp, aux = outs
+            report = None
+
+        if report is not None and bool(np.asarray(report.detected)):
+            # ABFT verification runs on EVERY kernel invocation — unlike the
+            # replica compare it is not gated by the commit cadence
+            if bool(np.asarray(report.uncorrectable)):
+                return dual, aux, DetectionEvent(
+                    step=step, boundary="commit", effect="TDC",
+                    detail={"abft": _report_summary(report)})
+            # single-element corruption, repaired in place: commit the
+            # corrected candidate forward via repair() — no rollback
+            self._pending_commit = {"r0": cand}
+            return dual, aux, DetectionEvent(
+                step=step, boundary="commit", effect="TDC",
+                detail={"abft": _report_summary(report),
+                        "abft_corrected": True})
+        return self._commit({"r0": cand}, step + 1), aux, None
+
+    def _commit(self, dual, next_step: int):
+        if self.hybrid:
+            self._last_fp = np.asarray(self.fast_state_fp_fn(dual["r0"]))
+            self._last_fp_step = next_step
+        return dual
+
+    def repair(self, event: DetectionEvent, dual
+               ) -> Optional[Tuple[Any, Dict[str, Any]]]:
+        if event.detail.get("abft_corrected") and \
+                self._pending_commit is not None:
+            committed = self._commit(self._pending_commit, event.step + 1)
+            self._pending_commit = None
+            record = {"kind": "abft_correct", "step": None, "rollbacks": 0}
+            self.corrections.append(dict(record, at=event.step))
+            return committed, record
+        return None
+
+    # -- FSC boundary (hybrid) -----------------------------------------------
+
+    def _resident_fp_equal(self, dual) -> bool:
+        if self._last_fp is None:
+            return True
+        cur = self.fast_state_fp_fn(dual["r0"])
+        return bool(np.asarray(fingerprints_equal(
+            jnp.asarray(self._last_fp), cur)))
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        if not self.hybrid or self._resident_fp_equal(dual):
+            return None
+        return DetectionEvent(step=step, boundary="validate", effect="FSC",
+                              detail={"reason": "resident state diverged "
+                                      "from its commit-time fingerprint"})
+
+    def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
+        equal = self._resident_fp_equal(dual) if self.hybrid else True
+        return np.asarray(self.state_fp_fn(dual["r0"])), equal
+
+    def state_fp(self, dual):
+        return self.state_fp_fn(dual["r0"])

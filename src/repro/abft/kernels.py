@@ -1,0 +1,181 @@
+"""Pallas TPU kernels for the ABFT subsystem.
+
+Two checksum-carrying lowerings (jnp oracles in `abft/ref.py`):
+
+  * `abft_matmul` — C = A @ B through the full-checksum product: encode the
+    operands (O(mn + nk) jnp pass), run ONE tiled Pallas matmul on the
+    augmented (m+1, n) x (n, k+1) operands, then verify the row/column
+    residuals and repair a single corrupted element in place. The checksum
+    row/column ride the same MXU tiles as the data (m+1/k+1 round up to the
+    same tile multiples), so the detection cost is the O(mk) verification
+    pass — a few percent of the O(mnk) multiply — instead of SEDAR's 2x
+    duplicated execution.
+
+  * `abft_flash_attention` — the existing `kernels/flash_attention.py`
+    online-softmax kernel re-lowered with a checksum lane on V: the SAME
+    kernel body runs with v/out BlockSpecs widened to hd+1, and the output's
+    extra lane must equal the sum of its data lanes (attention is linear in
+    V). This protects the PV matmul + accumulate/normalize path; QK^T-path
+    corruption moves all lanes consistently and escapes to the fingerprint
+    boundary (DESIGN.md §10).
+
+Matmul grid is (nm, nk_tiles, nsteps) with the contraction innermost — TPU
+grids run sequentially per core, so the f32 accumulator tile lives in VMEM
+scratch across the contraction steps (same carry idiom as the flash kernel).
+Blocks default to 128 (MXU-aligned) and are clamped/padded for small shapes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.abft.ref import (DEFAULT_TAU_FACTOR, AbftReport,
+                            attention_checksum_encode, attention_verify,
+                            checksum_encode, verify_and_correct)
+from repro.kernels.fingerprint import default_interpret
+from repro.kernels.flash_attention import _flash_kernel, _vmem
+
+
+def _matmul_kernel(nsteps, a_ref, b_ref, o_ref, acc_ref):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                            b_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nsteps - 1)
+    def _final():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Tiled (m,n)x(n,k) matmul, f32 accumulation. Shapes are zero-padded to
+    block multiples (zero rows/cols contribute nothing to the product)."""
+    if interpret is None:
+        interpret = default_interpret()
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, n = a.shape
+    n2, k = b.shape
+    assert n == n2, (a.shape, b.shape)
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    if pn or pk:
+        b = jnp.pad(b, ((0, pn), (0, pk)))
+    nm, nk_t, nsteps = a.shape[0] // bm, b.shape[1] // bk, a.shape[1] // bn
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps),
+        grid=(nm, nk_t, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bn, bk), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.float32),
+        scratch_shapes=[_vmem((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :k]
+
+
+def abft_matmul(a: jnp.ndarray, b: jnp.ndarray, *,
+                inject: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+                tau_factor: float = DEFAULT_TAU_FACTOR,
+                block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, AbftReport]:
+    """Checksummed matmul: encode -> Pallas compute -> verify/correct.
+
+    `inject` (see `injection.make_kernel_fault`) corrupts the full-checksum
+    product between compute and verify — modeling an SDC in the MXU
+    accumulate/output path, i.e. INSIDE the protected computation, where the
+    replica-free checksums are the only detector."""
+    a_c, b_r = checksum_encode(a, b)
+    c_full = matmul_pallas(a_c, b_r, block_m=block_m, block_n=block_n,
+                           block_k=block_k, interpret=interpret)
+    if inject is not None:
+        c_full = inject(c_full)
+    return verify_and_correct(c_full, a.shape[1], tau_factor)
+
+
+# ---------------------------------------------------------------------------
+# Checksummed flash attention
+# ---------------------------------------------------------------------------
+
+def abft_flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         inject: Optional[Callable] = None,
+                         tau_factor: float = DEFAULT_TAU_FACTOR,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[jnp.ndarray, AbftReport]:
+    """q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd). Returns ((B,H,Sq,hd) f32, report).
+
+    The UNMODIFIED `_flash_kernel` body runs with V (and the output/
+    accumulator tiles) widened by the checksum lane — the online-softmax
+    carry is linear in V, so the invariant survives the m/l rescaling. The
+    widened hd+1 breaks the 128-lane alignment of the v tiles on real TPUs
+    (documented cost: pad-to-128 or accept the relayout); correctness is
+    exercised in interpret mode and on TPU via the same BlockSpecs."""
+    if interpret is None:
+        interpret = default_interpret()
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v_aug = attention_checksum_encode(jnp.asarray(v, jnp.float32))
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    hv = hd + 1
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v_aug = jnp.pad(v_aug, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nQ, nK = q.shape[2] // bq, k.shape[2] // bk
+
+    kern = functools.partial(_flash_kernel, 1.0 / math.sqrt(hd), causal,
+                             window, bq, bk, Sk)
+    out_full = pl.pallas_call(
+        kern,
+        grid=(B, H, nQ, nK),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hv),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, q.shape[2], hv), jnp.float32),
+        scratch_shapes=[
+            _vmem((bq, hv), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v_aug)
+    out_full = out_full[:, :, :Sq, :]
+    if inject is not None:
+        out_full = inject(out_full)
+    return attention_verify(out_full, Sk, tau_factor)

@@ -1,0 +1,215 @@
+"""Pure-jnp ABFT reference: checksum encode / verify / correct.
+
+Algorithm-based fault tolerance for C = A @ B (Huang & Abraham; Bosilca et
+al., arXiv:0806.3121): augment A with a column-checksum row and B with a
+row-checksum column,
+
+    A_c = [A ; 1^T A]   (m+1, n)        B_r = [B , B 1]   (n, k+1)
+
+then the single product C_f = A_c @ B_r is a FULL-checksum matrix — its last
+row/column hold the column/row sums of the data block C = C_f[:m, :k]. Any
+corruption of one data element (i, j) during the multiplication violates
+exactly the i-th row residual and the j-th column residual by the same
+delta, which both LOCATES the element and gives the exact correction — a
+forward repair, no rollback and no replica.
+
+Float roundoff makes the residuals nonzero even fault-free, so detection is
+thresholded: the checksum path and the data path each accumulate O(n + k)
+rounding terms of size eps*|term|, giving the per-row/column bound used by
+`residual_threshold`. Corruptions whose delta is below that noise floor are
+numerically harmless but ESCAPE ABFT — the hybrid backend's periodic
+fingerprint validation (and the replica backends) exist for exactly that
+class (DESIGN.md §10).
+
+Everything here is jit-able and is the interpret/CPU parity oracle for
+`abft/kernels.py`; the report is a pytree of scalars so executors can branch
+on it host-side after one device sync.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+EPS32 = float(np.finfo(np.float32).eps)
+DEFAULT_TAU_FACTOR = 16.0
+
+
+class AbftReport(NamedTuple):
+    """Verification outcome of one checksummed kernel invocation.
+
+    detected      -- any residual above the roundoff threshold.
+    corrected     -- the violation matched the single-element pattern and the
+                     output was repaired in place (includes hits in the
+                     checksum row/column itself, where the data block needs
+                     no repair).
+    uncorrectable -- violations that do not localize to one element
+                     (multi-element corruption): the output cannot be
+                     trusted; route through on_detection().
+    bad_rows/bad_cols -- residual-violation counts (diagnostics).
+    max_residual  -- largest |residual| seen (diagnostics).
+    """
+
+    detected: jnp.ndarray
+    corrected: jnp.ndarray
+    uncorrectable: jnp.ndarray
+    bad_rows: jnp.ndarray
+    bad_cols: jnp.ndarray
+    max_residual: jnp.ndarray
+
+    @staticmethod
+    def clean() -> "AbftReport":
+        f = jnp.asarray(False)
+        z = jnp.asarray(0, jnp.int32)
+        return AbftReport(f, f, f, z, z, jnp.asarray(0.0, jnp.float32))
+
+
+def checksum_encode(a: jnp.ndarray, b: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(m,n),(n,k) -> column-checksum A_c (m+1,n) and row-checksum B_r (n,k+1)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    a_c = jnp.concatenate([a, jnp.sum(a, axis=0, keepdims=True)], axis=0)
+    b_r = jnp.concatenate([b, jnp.sum(b, axis=1, keepdims=True)], axis=1)
+    return a_c, b_r
+
+
+def residual_threshold(abs_sums: jnp.ndarray, n_terms: int,
+                       tau_factor: float = DEFAULT_TAU_FACTOR) -> jnp.ndarray:
+    """Roundoff bound for a checksum residual: the data-path and checksum-path
+    sums each accumulate ~n_terms rounding errors of size eps*|term|."""
+    return jnp.float32(tau_factor * EPS32 * n_terms) * (abs_sums + 1.0)
+
+
+def verify_and_correct(c_full: jnp.ndarray, inner_dim: int,
+                       tau_factor: float = DEFAULT_TAU_FACTOR
+                       ) -> Tuple[jnp.ndarray, AbftReport]:
+    """Check the full-checksum product and repair a single corrupted element.
+
+    c_full: (m+1, k+1) as produced from checksum-encoded operands.
+    inner_dim: the contraction length n (sets the roundoff threshold).
+    Returns (C data block (m,k), AbftReport).
+    """
+    m, k = c_full.shape[0] - 1, c_full.shape[1] - 1
+    c = c_full[:m, :k]
+    row_ck = c_full[:m, k]                      # checksum column: row sums
+    col_ck = c_full[m, :k]                      # checksum row: column sums
+
+    row_res = jnp.sum(c, axis=1) - row_ck       # (m,)
+    col_res = jnp.sum(c, axis=0) - col_ck       # (k,)
+    n_terms = inner_dim + max(m, k)
+    row_tau = residual_threshold(jnp.sum(jnp.abs(c), axis=1), n_terms,
+                                 tau_factor)
+    col_tau = residual_threshold(jnp.sum(jnp.abs(c), axis=0), n_terms,
+                                 tau_factor)
+
+    row_bad = jnp.abs(row_res) > row_tau
+    col_bad = jnp.abs(col_res) > col_tau
+    n_row = jnp.sum(row_bad).astype(jnp.int32)
+    n_col = jnp.sum(col_bad).astype(jnp.int32)
+    detected = (n_row + n_col) > 0
+
+    # Single data-element corruption at (i, j) puts the SAME delta in
+    # row residual i and column residual j. The thresholds are asymmetric
+    # (row_tau scales with k-term sums, col_tau with m-term sums), so the
+    # delta may cross only one of them — locate the partner index by the
+    # largest residual on the other axis and test DELTA AGREEMENT, never
+    # infer from the one-sided violation pattern alone (a delta between the
+    # two thresholds would otherwise masquerade as a harmless checksum-entry
+    # hit while the data stays corrupted).
+    i = jnp.where(n_row >= 1, jnp.argmax(jnp.where(row_bad,
+                                                   jnp.abs(row_res), 0.0)),
+                  jnp.argmax(jnp.abs(row_res)))
+    j = jnp.where(n_col >= 1, jnp.argmax(jnp.where(col_bad,
+                                                   jnp.abs(col_res), 0.0)),
+                  jnp.argmax(jnp.abs(col_res)))
+    deltas_agree = jnp.abs(row_res[i] - col_res[j]) <= (row_tau[i] + col_tau[j])
+    single_pattern = detected & (n_row <= 1) & (n_col <= 1)
+    data_fix = single_pattern & deltas_agree
+    # one-sided violation with NO agreeing partner residual: the corruption
+    # sits in a checksum entry itself (row_ck[i] or col_ck[j]) — the data
+    # block is intact and the checksums are discarded anyway
+    ck_hit = single_pattern & ~deltas_agree & ((n_row == 1) ^ (n_col == 1))
+
+    corrected = detected & (data_fix | ck_hit)
+    uncorrectable = detected & ~corrected
+
+    fix_delta = jnp.where(n_row >= 1, row_res[i], col_res[j])
+    c = jnp.where(data_fix, c.at[i, j].add(-fix_delta), c)
+    report = AbftReport(
+        detected=detected, corrected=corrected, uncorrectable=uncorrectable,
+        bad_rows=n_row, bad_cols=n_col,
+        max_residual=jnp.maximum(jnp.max(jnp.abs(row_res)),
+                                 jnp.max(jnp.abs(col_res))).astype(jnp.float32))
+    return c, report
+
+
+def abft_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *,
+                    inject: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+                    tau_factor: float = DEFAULT_TAU_FACTOR
+                    ) -> Tuple[jnp.ndarray, AbftReport]:
+    """Checksummed matmul oracle: encode -> jnp product -> verify/correct.
+
+    `inject` (e.g. `injection.make_kernel_fault`) corrupts the full-checksum
+    product between compute and verify — the in-kernel SDC model."""
+    a_c, b_r = checksum_encode(a, b)
+    c_full = jnp.dot(a_c, b_r, preferred_element_type=jnp.float32)
+    if inject is not None:
+        c_full = inject(c_full)
+    return verify_and_correct(c_full, a.shape[1], tau_factor)
+
+
+# ---------------------------------------------------------------------------
+# Checksummed attention invariant (the PV-matmul protection)
+# ---------------------------------------------------------------------------
+
+def attention_checksum_encode(v: jnp.ndarray) -> jnp.ndarray:
+    """Append a checksum channel sum_d v[..., d] to V's head dim.
+
+    Attention output is linear in V (O = softmax(QK^T) V), so the extra
+    channel of the output must equal the sum of the data channels — per
+    (batch, head, query) row — whatever the attention weights are. This
+    protects the PV matmul and the accumulate/normalize path; a corruption
+    of the QK^T logits perturbs every channel CONSISTENTLY (checksum lane
+    included) and therefore ESCAPES this invariant — see DESIGN.md §10."""
+    return jnp.concatenate([v, jnp.sum(v, axis=-1, keepdims=True)], axis=-1)
+
+
+def attention_verify(out_full: jnp.ndarray, seq_k: int,
+                     tau_factor: float = DEFAULT_TAU_FACTOR
+                     ) -> Tuple[jnp.ndarray, AbftReport]:
+    """Check the output checksum channel; returns (out data, report).
+
+    Detection only: a row residual flags WHICH query row is corrupt but not
+    which channel, so there is no in-place correction — a violation is
+    uncorrectable and routes through recovery."""
+    out = out_full[..., :-1]
+    res = jnp.sum(out, axis=-1) - out_full[..., -1]
+    hd = out.shape[-1]
+    tau = residual_threshold(jnp.sum(jnp.abs(out), axis=-1), hd + seq_k,
+                             tau_factor)
+    bad = jnp.abs(res) > tau
+    n_bad = jnp.sum(bad).astype(jnp.int32)
+    detected = n_bad > 0
+    report = AbftReport(
+        detected=detected, corrected=jnp.asarray(False),
+        uncorrectable=detected, bad_rows=n_bad,
+        bad_cols=jnp.asarray(0, jnp.int32),
+        max_residual=jnp.max(jnp.abs(res)).astype(jnp.float32))
+    return out, report
+
+
+def abft_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                       inject: Optional[Callable] = None,
+                       tau_factor: float = DEFAULT_TAU_FACTOR
+                       ) -> Tuple[jnp.ndarray, AbftReport]:
+    """Checksummed exact attention (oracle for kernels.abft_flash_attention)."""
+    from repro.kernels.ref import mha_ref
+    v_aug = attention_checksum_encode(jnp.asarray(v, jnp.float32))
+    out_full = mha_ref(jnp.asarray(q, jnp.float32),
+                       jnp.asarray(k, jnp.float32), v_aug,
+                       causal=causal, window=window)
+    if inject is not None:
+        out_full = inject(out_full)
+    return attention_verify(out_full, k.shape[2], tau_factor)

@@ -1,3 +1,4 @@
-from repro.checkpoint.store import CheckpointStore, Manifest
+from repro.checkpoint.store import (CheckpointCorruptionError, CheckpointStore,
+                                    Manifest)
 
-__all__ = ["CheckpointStore", "Manifest"]
+__all__ = ["CheckpointCorruptionError", "CheckpointStore", "Manifest"]

@@ -40,6 +40,12 @@ class Manifest:
     fingerprint: Optional[List[List[int]]] = None
     n_leaves: int = 0
     extra: Dict[str, Any] = field(default_factory=dict)
+    # Per-leaf content digests of the bytes actually written, computed by the
+    # store itself at save time and re-checked by restore(). (The engine's
+    # `fingerprint` field above covers replica 0's params/opt at its own
+    # granularity — it is NOT leaf-comparable against the stored payload,
+    # which for L2 is the full dual state.)
+    leaf_digests: Optional[List[List[int]]] = None
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -47,6 +53,27 @@ class Manifest:
     @staticmethod
     def from_json(s: str) -> "Manifest":
         return Manifest(**json.loads(s))
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A restored leaf does not match its save-time digest: the on-disk
+    payload was corrupted after the atomic commit. L2/L3's 'valid
+    checkpoint' guarantee requires failing loudly here — silently restoring
+    a corrupted state would re-seed every replica from it."""
+
+
+def _leaf_digest(arr: np.ndarray) -> List[int]:
+    """Order-sensitive 64-bit digest of a leaf's raw bytes (the same mixing
+    constants as core.fingerprint, numpy-only so restore verification works
+    without touching a device)."""
+    b = arr.tobytes()
+    u = np.frombuffer(b + b"\0" * ((-len(b)) % 4), np.uint32)
+    idx = np.arange(u.size, dtype=np.uint32)
+    h1 = int(((u ^ (idx * np.uint32(2654435761))) *
+              np.uint32(2246822519)).sum(dtype=np.uint32))
+    t = (u + idx) * np.uint32(3266489917)
+    h2 = int((t ^ (t >> np.uint32(15))).sum(dtype=np.uint32))
+    return [h1, h2]
 
 
 def _ckpt_name(step: int) -> str:
@@ -88,6 +115,7 @@ class CheckpointStore:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
+        man.leaf_digests = [_leaf_digest(arr) for arr in host_leaves]
         for i, arr in enumerate(host_leaves):
             np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -138,7 +166,13 @@ class CheckpointStore:
 
     def restore(self, step: int, template) -> Any:
         """Rebuild the state pytree from version `step` using `template`'s
-        structure (template leaves are only used for structure/dtype checks)."""
+        structure (template leaves are only used for structure/dtype checks).
+
+        Every leaf is cross-checked against the manifest's save-time digest:
+        the recovery algorithms assume a restored checkpoint IS the state
+        that was committed, so on-disk corruption (bit rot, torn writes
+        outside the atomic rename) raises `CheckpointCorruptionError`
+        instead of silently re-seeding the replicas from garbage."""
         self.wait()
         path = os.path.join(self.dir, _ckpt_name(step))
         man = self.manifest(step)
@@ -152,6 +186,11 @@ class CheckpointStore:
             arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
             if tuple(arr.shape) != tuple(np.shape(t)):
                 raise ValueError(f"leaf {i} shape {arr.shape} != {np.shape(t)}")
+            if man.leaf_digests is not None and \
+                    _leaf_digest(arr) != man.leaf_digests[i]:
+                raise CheckpointCorruptionError(
+                    f"checkpoint {step} leaf {i}: content digest mismatch "
+                    f"(on-disk payload corrupted since save)")
             leaves.append(arr)
         return jax.tree_util.tree_unflatten(treedef, leaves)
 

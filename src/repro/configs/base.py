@@ -184,7 +184,9 @@ class SedarConfig:
     """
 
     level: int = 3
-    replication: str = "dual"         # none | dual | vote (N>=3 goes beyond paper)
+    # none | dual | vote (N>=3, beyond paper) | abft | hybrid (replica-free
+    # checksum detection, DESIGN.md §10; hybrid adds FSC fingerprint checks)
+    replication: str = "dual"
     replica_axis: str = "pod"         # mesh axis carrying replicas
     compare: str = "fingerprint"      # fingerprint | full   (full = paper's exact buffer compare)
     validate_interval: int = 1        # steps between gradient-fingerprint compares (TDC boundary)

@@ -10,7 +10,8 @@ from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
                                     pytree_fingerprint_fused,
                                     tensor_fingerprint)
 from repro.core.injection import (InjectionFlag, InjectionSpec,
-                                  MemoryInjectionFlag, flip_bit, inject_tree)
+                                  MemoryInjectionFlag, flip_bit, inject_tree,
+                                  make_kernel_fault)
 from repro.core.policy import Advice, advise, make_engine, make_server, \
     make_trainer
 from repro.core.recovery import (ExternalCounter, MultiCheckpointRecovery,
@@ -25,7 +26,8 @@ __all__ = [
     "VoteExecutor", "fingerprints_equal", "mismatch_report", "pack_tree_u32",
     "packed_fingerprint", "pytree_fingerprint", "pytree_fingerprint_fused",
     "tensor_fingerprint", "InjectionFlag", "InjectionSpec",
-    "MemoryInjectionFlag", "flip_bit", "inject_tree", "Advice", "advise",
+    "MemoryInjectionFlag", "flip_bit", "inject_tree", "make_kernel_fault",
+    "Advice", "advise",
     "make_engine", "make_server", "make_trainer", "ExternalCounter",
     "MultiCheckpointRecovery", "RecoveryAction", "RetryRecovery", "SafeStop",
     "ValidatedCheckpointRecovery", "make_recovery",

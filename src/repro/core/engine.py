@@ -27,6 +27,10 @@ Executor backends:
   * vote        -- N-modular redundancy (beyond-paper, DESIGN.md §6): >=3
                    pod replicas; a divergence is repaired FORWARD by
                    broadcasting the majority replica's state — no rollback.
+  * abft/hybrid -- replica-free: checksum-carrying kernels detect (and for
+                   single corruptions, forward-correct) in-kernel faults;
+                   hybrid adds commit-time fingerprint validation for the
+                   classes ABFT cannot see (abft/executor.py, DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -130,6 +134,21 @@ class ReplicaExecutor:
 
     name = "base"
     n_replicas = 1
+
+    @property
+    def can_validate(self) -> bool:
+        """Whether the ENGINE should drive the periodic FSC boundary by
+        calling `validate()` after commits (replica backends: compare
+        replicas). Executors that implement their own periodic check (abft
+        hybrid validates at step ENTRY) return False here and
+        `can_validate_final` True."""
+        return self.n_replicas > 1
+
+    @property
+    def can_validate_final(self) -> bool:
+        """Whether `validate()` is meaningful for the end-of-run final
+        comparison (paper Sec. 3.1)."""
+        return self.can_validate
 
     def init_dual(self, single):
         return {"r0": single}
@@ -384,7 +403,7 @@ class SedarEngine:
             note()
 
         new_step = step + 1
-        if self.executor.n_replicas > 1 and \
+        if self.executor.can_validate and \
                 self.schedule.validate_due(new_step):
             event = self.executor.validate(dual2, new_step)
             if event is not None:
@@ -398,7 +417,7 @@ class SedarEngine:
     def validate_final(self, dual, step: int) -> Optional[DetectionEvent]:
         """Final-results comparison (paper Sec. 3.1); the event is tagged
         boundary='final' so NMR repair still applies."""
-        if self.executor.n_replicas <= 1:
+        if not self.executor.can_validate_final:
             return None
         event = self.executor.validate(dual, step)
         if event is not None:

@@ -27,6 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 
+DTYPE_BITS = {"float32": 32, "int32": 32, "uint32": 32,
+              "bfloat16": 16, "float16": 16}
+
+
 @dataclass(frozen=True)
 class InjectionSpec:
     """Static description of one injection experiment.
@@ -37,33 +41,94 @@ class InjectionSpec:
     step     : training step at which to inject.
     replica  : which replica id gets the corruption (the essence of SEDAR
                detection: the *other* replica stays clean).
+    target   : grads | params | opt_state  (TDC vs FSC class) | kernel
+               (corruption INSIDE a protected kernel's compute, pre-verify —
+               the ABFT detection domain; see `make_kernel_fault`).
+    n_elems  : number of corrupted elements (>1 defeats ABFT single-element
+               correction: the detected-uncorrectable scenario class).
+    dtype    : optional target-leaf dtype name; when given, `bit` is
+               validated against the dtype's width at construction time.
     """
     leaf_idx: int
     flat_idx: int
     bit: int
     step: int
     replica: int = 1
-    target: str = "grads"     # grads | params | opt_state  (TDC vs FSC class)
+    target: str = "grads"
+    n_elems: int = 1
+    dtype: str = ""
+
+    def __post_init__(self):
+        if not 0 <= self.bit < 32:
+            raise ValueError(f"bit {self.bit} outside any supported dtype "
+                             f"(must be in [0, 32))")
+        if self.dtype:
+            width = DTYPE_BITS.get(self.dtype)
+            if width is None:
+                raise ValueError(f"unknown injection dtype {self.dtype!r}")
+            if self.bit >= width:
+                raise ValueError(
+                    f"bit {self.bit} out of range for {self.dtype} "
+                    f"(must be in [0, {width}))")
+        if self.n_elems < 1:
+            raise ValueError(f"n_elems must be >= 1, got {self.n_elems}")
 
 
 def flip_bit(x: jnp.ndarray, flat_idx, bit: int) -> jnp.ndarray:
-    """Flip one bit of one element (exact, dtype-preserving)."""
+    """Flip one bit of one element (exact, dtype-preserving).
+
+    `bit` is validated against the dtype's width — a silently clamped or
+    wrapped index would corrupt a DIFFERENT bit than the experiment recorded,
+    invalidating the campaign's predicted effect class."""
     dt = x.dtype
     shape = x.shape
     flat = x.reshape(-1)
+    nbits = 16 if dt in (jnp.bfloat16, jnp.float16) else 32
+    if not 0 <= bit < nbits:
+        raise ValueError(f"bit {bit} out of range for {dt} "
+                         f"(must be in [0, {nbits}))")
     if dt == jnp.float32:
         u = jax.lax.bitcast_convert_type(flat, jnp.uint32)
         u = u.at[flat_idx].set(u[flat_idx] ^ jnp.uint32(1 << bit))
         out = jax.lax.bitcast_convert_type(u, jnp.float32)
     elif dt == jnp.bfloat16:
         u = jax.lax.bitcast_convert_type(flat, jnp.uint16)
-        u = u.at[flat_idx].set(u[flat_idx] ^ jnp.uint16(1 << min(bit, 15)))
+        u = u.at[flat_idx].set(u[flat_idx] ^ jnp.uint16(1 << bit))
         out = jax.lax.bitcast_convert_type(u, jnp.bfloat16)
     elif dt in (jnp.int32, jnp.uint32):
         out = flat.at[flat_idx].set(flat[flat_idx] ^ jnp.asarray(1 << bit, dt))
     else:
         raise TypeError(f"injection unsupported for {dt}")
     return out.reshape(shape)
+
+
+def make_kernel_fault(spec: InjectionSpec, *, step, armed):
+    """In-kernel corruption (target='kernel'): returns fn(out) -> out' that
+    flips `spec.bit` in `spec.n_elems` elements of a protected kernel's
+    accumulated output — between compute and verify, i.e. inside the domain
+    that only ABFT checksums (not replica comparison of inputs, not state
+    fingerprints) can see at kernel granularity.
+
+    Multiple elements are spread one row AND one column apart (stride
+    width+1), so n_elems >= 2 violates >= 2 row and >= 2 column residuals —
+    the detected-uncorrectable class. step/armed are traced scalars; the
+    re-execution after recovery passes armed=0 and does not re-inject."""
+    if spec.target != "kernel":
+        raise ValueError(f"make_kernel_fault needs target='kernel', "
+                         f"got {spec.target!r}")
+
+    def apply(out: jnp.ndarray) -> jnp.ndarray:
+        flat = out.reshape(-1)
+        stride = out.shape[-1] + 1
+        corrupted = flat
+        for e in range(spec.n_elems):
+            idx = (spec.flat_idx + e * stride) % flat.size
+            corrupted = flip_bit(corrupted, idx, spec.bit)
+        fire = jnp.logical_and(jnp.asarray(armed, jnp.bool_),
+                               jnp.asarray(step) == spec.step)
+        return jnp.where(fire, corrupted, flat).reshape(out.shape)
+
+    return apply
 
 
 def inject_tree(tree, spec: Optional[InjectionSpec], *, step, replica_id,

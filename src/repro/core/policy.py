@@ -28,6 +28,10 @@ class Advice:
     start_checkpointing_at: float  # progress fraction X* (Sec. 4.4)
     keep_two_checkpoints_at: float # X* above which >=2 rollbacks pay off
     notes: str = ""
+    # detection-mechanism axis (DESIGN.md §10): "duplication" (the paper's
+    # replicated execution) vs "abft" (replica-free checksummed kernels).
+    detection_mechanism: str = "duplication"
+    abft_aet_hours: float = 0.0    # AET of the ABFT backend at the same MTBE
 
 
 def advise(p: tm.SedarParams, mtbe_hours: float,
@@ -61,6 +65,23 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         notes.append("short run: checkpointing overhead may dominate "
                      "(paper: 'if the execution is too short, checkpoints "
                      "become worthless')")
+
+    # duplication-vs-ABFT guidance (orthogonal to the checkpoint level: the
+    # abft/hybrid backends compose with L0-L3 recovery unchanged)
+    abft = tm.aet_strategy(p, "abft", mtbe_hours, X=X_expected)
+    mech = "abft" if abft < aets[best] else "duplication"
+    if mech == "abft":
+        notes.append(
+            f"ABFT detection beats duplicated execution here "
+            f"({abft:.2f}h vs {aets[best]:.2f}h AET): replica-free "
+            f"checksummed kernels with forward correction of "
+            f"{p.abft_correct_frac:.0%} of detected faults; pair with the "
+            f"'hybrid' backend so escaped faults still hit the fingerprint "
+            f"boundary")
+    else:
+        notes.append(
+            "duplicated execution wins: coverage is total (any divergence) "
+            "while ABFT only sees checksummed kernels; keep replication")
     return Advice(
         strategy=best,
         level=level,
@@ -69,6 +90,8 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         start_checkpointing_at=tm.min_progress_for_checkpointing(p_sys),
         keep_two_checkpoints_at=tm.min_progress_for_k(p_sys, 1),
         notes="; ".join(notes),
+        detection_mechanism=mech,
+        abft_aet_hours=round(abft, 4),
     )
 
 
@@ -92,11 +115,15 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                 delay_source: Optional[Callable[[], dict]] = None):
     """Assemble a `SedarEngine` for one workload.
 
-    backend: "none" | "sequential" | "pod" | "vote" (defaults to
-    sedar_cfg.replication). Sequential/plain backends need `step_fn` +
-    `state_fp_fn`; pod/vote need the prebuilt shard_map'd `pod_step` /
-    `pod_validate` (+ `pod_broadcaster` for vote). `recovery`/`schedule`/
-    `watchdog` default from the config (recovery needs `workdir`)."""
+    backend: "none" | "sequential" | "pod" | "vote" | "abft" | "hybrid"
+    (defaults to sedar_cfg.replication). Sequential/plain/abft/hybrid
+    backends need `step_fn` + `state_fp_fn`; pod/vote need the prebuilt
+    shard_map'd `pod_step` / `pod_validate` (+ `pod_broadcaster` for vote).
+    abft/hybrid run replica-free: step_fn may return a 4th element (an
+    `abft.ref.AbftReport` from checksummed kernels) and hybrid additionally
+    validates the commit-time state fingerprint at the FSC boundary.
+    `recovery`/`schedule`/`watchdog` default from the config (recovery needs
+    `workdir`)."""
     from repro.core.engine import (BoundarySchedule, PlainExecutor,
                                    PodExecutor, SedarEngine,
                                    SequentialExecutor, VoteExecutor)
@@ -121,6 +148,15 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                                     n_replicas=max(n_replicas, 3))
         else:
             executor = PodExecutor(pod_step, pod_validate, state_fp_fn)
+    elif backend in ("abft", "hybrid"):
+        if step_fn is None or state_fp_fn is None:
+            raise ValueError(f"backend {backend!r} needs step_fn and "
+                             "state_fp_fn")
+        from repro.abft.executor import AbftExecutor
+        executor = AbftExecutor(step_fn, state_fp_fn,
+                                fast_state_fp_fn=fast_state_fp_fn,
+                                hybrid=(backend == "hybrid"),
+                                validate_interval=schedule.validate_interval)
     elif backend == "none":
         executor = PlainExecutor(step_fn, state_fp_fn)
     else:

@@ -331,3 +331,108 @@ def run_campaign(n: int = 8, workers: int = 2):
                       and obs.correct_result),
         })
     return rows
+
+
+# ---------------------------------------------------------------------------
+# ABFT scenario classes (DESIGN.md §10): in-kernel corruption vs checksums
+# ---------------------------------------------------------------------------
+#
+# The replica campaign above corrupts MEMORY between phases; the ABFT
+# campaign corrupts the KERNEL's accumulated output (injection target
+# "kernel") and classifies what the checksums see:
+#
+#   corrected     -- single element, delta above the roundoff floor: the
+#                    row+column residual pair localizes it; forward repair.
+#   uncorrectable -- multiple elements: residual violations do not localize;
+#                    the output is untrusted and recovery must act.
+#   escaped_fsc   -- delta below the residual noise floor (low-order mantissa
+#                    bit): numerically harmless for the result, invisible to
+#                    ABFT — exactly the class the hybrid backend's FSC
+#                    fingerprint boundary (or replication) exists for.
+
+ABFT_CLASSES = ("corrected", "uncorrectable", "escaped_fsc")
+
+
+@dataclass(frozen=True)
+class AbftScenario:
+    sid: int
+    bit: int              # flipped bit of the f32 pattern
+    n_elems: int          # corrupted output elements
+    predicted: str        # one of ABFT_CLASSES
+
+
+def abft_scenarios() -> List[AbftScenario]:
+    """12 scenarios x 3 classes: high-mantissa single flips (corrected),
+    multi-element flips (uncorrectable), low-order mantissa flips (escaped).
+
+    The flip lands on the LARGEST-magnitude output element (plus diagonal
+    neighbours for multi-element), so a bit >= 21 moves the value by
+    >= |c_max|/4 — far above the residual noise floor — while bits <= 3
+    move it by a few ulps — far below it. The class boundary is therefore
+    derivable from (bit, n_elems) alone, like the paper's Table-2 predictor
+    derives effects from liveness alone."""
+    out, sid = [], 1
+    for bit in (21, 22, 23, 21):
+        out.append(AbftScenario(sid, bit, 1, "corrected"))
+        sid += 1
+    for bit, n_elems in ((21, 2), (22, 3), (23, 4), (21, 3)):
+        out.append(AbftScenario(sid, bit, n_elems, "uncorrectable"))
+        sid += 1
+    for bit in (0, 1, 2, 3):
+        out.append(AbftScenario(sid, bit, 1, "escaped_fsc"))
+        sid += 1
+    return out
+
+
+def classify_abft(report, c, clean) -> str:
+    """Observed class from a kernel report + output vs the clean product."""
+    if bool(np.asarray(report.uncorrectable)):
+        return "uncorrectable"
+    if bool(np.asarray(report.corrected)):
+        return "corrected"
+    if not np.array_equal(np.asarray(c), np.asarray(clean)):
+        return "escaped_fsc"
+    return "clean"
+
+
+def run_abft_campaign(m: int = 24, n: int = 16, k: int = 20, seed: int = 0):
+    """Run every ABFT scenario through the checksummed matmul (jnp reference
+    lowering — the Pallas path is bit-compatible, see tests/test_abft.py);
+    returns predicted-vs-observed rows like `run_campaign`."""
+    import jax.numpy as jnp
+
+    from repro.abft.ref import abft_matmul_ref
+    from repro.core.injection import InjectionSpec, make_kernel_fault
+
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.randn(m, n).astype(np.float32))
+    b = jnp.asarray(rng.randn(n, k).astype(np.float32))
+    clean, _ = abft_matmul_ref(a, b)
+    # anchor every flip at the largest data element whose diagonal spread
+    # (n_elems - 1 steps of (+1 row, +1 col)) stays INSIDE the data block —
+    # otherwise a multi-element fault could land in the checksum row/column
+    # (or wrap), breaking the uncorrectable prediction near the matrix edge
+    spread = max(s.n_elems for s in abft_scenarios()) - 1
+    assert m > spread and k > spread, (m, k, spread)
+    interior = np.abs(np.asarray(clean))[:m - spread, :k - spread]
+    i0, j0 = np.unravel_index(int(np.argmax(interior)), interior.shape)
+    target = i0 * (k + 1) + j0                             # data -> full idx
+    rows = []
+    for s in abft_scenarios():
+        spec = InjectionSpec(leaf_idx=0, flat_idx=target, bit=s.bit,
+                             step=0, target="kernel", n_elems=s.n_elems,
+                             dtype="float32")
+        inject = make_kernel_fault(spec, step=0, armed=True)
+        c, report = abft_matmul_ref(a, b, inject=inject)
+        obs = classify_abft(report, c, clean)
+        correct = bool(np.allclose(np.asarray(c), np.asarray(clean),
+                                   atol=1e-3))
+        rows.append({
+            "sid": s.sid, "bit": s.bit, "n_elems": s.n_elems,
+            "pred": s.predicted, "obs": obs,
+            # corrected/clean outputs must match the clean product; an
+            # uncorrectable output is untrusted (no claim either way)
+            "match": (obs == s.predicted
+                      and (correct if obs != "uncorrectable" else True)),
+        })
+    return rows

@@ -14,6 +14,21 @@ All times in HOURS unless suffixed _s. Parameter names follow paper Table 1:
     t_ca    : application-level checkpoint store time (t_ca < t_cs)
     T_compA : application-level checkpoint validation time
 
+Beyond-paper ABFT terms (DESIGN.md §10 — detection by checksum-carrying
+kernels instead of duplicated execution):
+
+    f_a     : ABFT checksum overhead factor (encode + verify, a few percent)
+    abft_correct_frac : fraction of detected faults the checksums localize
+              and forward-correct in place (single-element corruptions)
+    redundancy_wall   : wall-clock ratio of the duplicated execution to ONE
+              instance. T_prog is defined as two instances IN PARALLEL
+              (space redundancy: same wall as one instance, 2x resources),
+              so the default is 1.0 — ABFT's fault-free WALL matches
+              duplication's, its win there is halved resources plus forward
+              correction on the faulty path. Set 2.0 explicitly when
+              modeling the time-redundant sequential backend (duplication
+              doubles the wall and ABFT's single instance halves it back).
+
 Validated against the paper's published Tables 4 and 5 in
 tests/test_temporal_model.py.
 """
@@ -36,6 +51,9 @@ class SedarParams:
     T_compA: float           # hours
     t_i: float = 1.0         # hours
     n: Optional[int] = None  # checkpoints; default derived from Eq. 3 / t_i
+    f_a: float = 0.03        # ABFT checksum overhead factor (beyond paper)
+    abft_correct_frac: float = 0.8   # detected faults corrected in place
+    redundancy_wall: float = 1.0     # duplicated wall / single-instance wall
 
     def n_ckpts(self) -> int:
         """Paper: n = time of the detection-only strategy (Eq. 3) / t_i."""
@@ -99,6 +117,34 @@ def single_ckpt_fp(p: SedarParams) -> float:
 
 
 # ---------------------------------------------------------------------------
+# ABFT: replica-free checksum detection (beyond paper, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def abft_fa(p: SedarParams) -> float:
+    """Fault-free time of the ABFT-protected SINGLE instance: one execution
+    carrying checksums (f_a analogue of f_d) plus the residual-verification
+    pass (bounded by T_comp — both are one pass over the results)."""
+    return (p.T_prog / p.redundancy_wall) * (1.0 + p.f_a) + p.T_comp
+
+
+def abft_fp(p: SedarParams, X: float) -> float:
+    """Time with one fault at progress X. Detected-corrected faults (frac
+    abft_correct_frac) are repaired FORWARD at negligible cost; the
+    uncorrectable remainder relaunches, mirroring Eq. (4) with the
+    single-instance progression time."""
+    t = (p.T_prog / p.redundancy_wall) * (1.0 + p.f_a)
+    relaunch = t * (X + 1.0) + p.T_rest + p.T_comp
+    return p.abft_correct_frac * abft_fa(p) \
+        + (1.0 - p.abft_correct_frac) * relaunch
+
+
+def hybrid_fa(p: SedarParams, validations: int = 0) -> float:
+    """ABFT + periodic fingerprint validation (the escaped-fault backstop):
+    each validation is one T_comp-class pass over the state."""
+    return abft_fa(p) + validations * p.T_comp
+
+
+# ---------------------------------------------------------------------------
 # Average execution time — Eqs. (9)-(11)
 # ---------------------------------------------------------------------------
 
@@ -115,12 +161,13 @@ def aet(t_fp: float, t_fa: float, T_prog: float, mtbe: float) -> float:
 
 def aet_strategy(p: SedarParams, strategy: str, mtbe: float,
                  X: float = 0.5, k: int = 0) -> float:
-    """AET for one of: baseline | detection | multi_ckpt | single_ckpt."""
+    """AET for one of: baseline | detection | multi_ckpt | single_ckpt | abft."""
     table = {
         "baseline": (baseline_fa(p), baseline_fp(p)),
         "detection": (detection_fa(p), detection_fp(p, X)),
         "multi_ckpt": (multi_ckpt_fa(p), multi_ckpt_fp(p, k)),
         "single_ckpt": (single_ckpt_fa(p), single_ckpt_fp(p)),
+        "abft": (abft_fa(p), abft_fp(p, X)),
     }
     fa, fp = table[strategy]
     return aet(fp, fa, p.T_prog, mtbe)

@@ -56,7 +56,7 @@ class SedarServer:
 
     def __init__(self, run_cfg: RunConfig, dual: bool = False,
                  inj_spec: Optional[InjectionSpec] = None,
-                 max_retries: int = 8):
+                 max_retries: int = 8, backend: Optional[str] = None):
         self.cfg = run_cfg
         self.model = build_model(run_cfg.model)
         self.dual = dual
@@ -64,19 +64,29 @@ class SedarServer:
         self.inj_flag = MemoryInjectionFlag()
         self._prefill = jax.jit(self._prefill_fn, static_argnums=(2,))
         self._decode = jax.jit(self._decode_fn)
-        # Serving boundaries: TDC commit gate on every decode step; no FSC /
-        # checkpoint boundaries (the only mutable state is the KV cache,
-        # recomputable from the prompt — recovery is re-execution).
+        # Serving boundaries: TDC commit gate on every decode step; no
+        # checkpoint boundary (the only mutable state is the KV cache,
+        # recomputable from the prompt — recovery is re-execution). The
+        # replica-free backends ("abft"/"hybrid", DESIGN.md §10) serve from
+        # ONE decode state; hybrid additionally re-fingerprints the resident
+        # {cache, tok} at the FSC cadence to catch at-rest cache corruption
+        # that checksummed kernels cannot see.
+        backend = backend or ("sequential" if dual else "none")
+        self.backend = backend
+        fsc_interval = (int(run_cfg.sedar.param_validate_interval)
+                        if backend == "hybrid" else 0)
+        fp_tree = ((lambda s: {"cache": s["cache"], "tok": s["tok"]})
+                   if backend in ("abft", "hybrid")
+                   else (lambda s: {"tok": s["tok"]}))
         self.engine: SedarEngine = make_engine(
             run_cfg.sedar,
-            backend=("sequential" if dual else "none"),
+            backend=backend,
             step_fn=self._decode,
-            state_fp_fn=jax.jit(lambda s: pytree_fingerprint(
-                {"tok": s["tok"]})),
+            state_fp_fn=jax.jit(lambda s: pytree_fingerprint(fp_tree(s))),
             fast_state_fp_fn=jax.jit(lambda s: pytree_fingerprint_fused(
-                {"tok": s["tok"]})),
+                fp_tree(s))),
             schedule=BoundarySchedule(
-                commit_interval=1, validate_interval=0,
+                commit_interval=1, validate_interval=fsc_interval,
                 checkpoint_interval=0,
                 toe_timeout_s=run_cfg.sedar.toe_timeout_s),
             recovery=RetryRecovery(max_retries=max_retries),
@@ -125,12 +135,18 @@ class SedarServer:
             dual = outcome.dual
             if outcome.event is not None:
                 # validate-before-send: the token is NOT emitted; the step
-                # re-executes via the engine's retry policy
+                # re-executes via the engine's retry policy. (NB if the
+                # decode step is ever ABFT-instrumented, a forward-corrected
+                # commit advances the decode state here — emit its token
+                # instead of re-executing; see abft/executor.py.)
                 try:
                     dual = eng.on_detection(outcome.event, dual)
                 except SedarSafeStop:
                     rep.stopped = True
                     break
+                if int(np.asarray(dual["r0"]["pos"])) > pos:
+                    out.append(np.asarray(dual["r0"]["tok"]))
+                    pos += 1
                 continue
             out.append(np.asarray(dual["r0"]["tok"]))
             pos += 1

@@ -13,7 +13,11 @@ training-specific pieces:
   * the outer loop (data, loss bookkeeping, wall budget).
 
 Execution backends (SedarConfig.replication): "none", "sequential", "pod",
-"vote" — see core/engine.py and DESIGN.md §4 for their semantics.
+"vote", "abft", "hybrid" — see core/engine.py, abft/executor.py and
+DESIGN.md §4/§10 for their semantics. The replica-free abft/hybrid backends
+run this driver unchanged (single state image; detection comes from
+checksummed kernels in the step — when instrumented — plus hybrid's
+commit-time fingerprint validation).
 """
 from __future__ import annotations
 
@@ -115,6 +119,10 @@ class SedarTrainer:
         s = self.init_state(seed)
         if self.backend == "sequential":
             return {"r0": s, "r1": jax.tree.map(jnp.copy, s)}
+        if self.backend in ("abft", "hybrid") and hasattr(self, "engine"):
+            # route through the executor so its hybrid fingerprint baseline
+            # resets along with the state (restart-from-scratch path)
+            return self.engine.executor.init_dual(s)
         return {"r0": s}   # pod / vote / none: one physical copy per pod
 
     # -- jitted step functions ------------------------------------------------
@@ -234,7 +242,9 @@ class SedarTrainer:
                      self.data.batch(step).items()}
             outcome = eng.run_protected_step(dual, batch, step)
             dual = outcome.dual
-            if outcome.committed:
+            # aux is None when the executor refused the step before running
+            # it (hybrid resident-state check) — there is no loss to record
+            if outcome.committed and outcome.aux is not None:
                 rep.losses.append(float(np.asarray(outcome.aux)))
             if outcome.event is not None:
                 try:
@@ -242,6 +252,12 @@ class SedarTrainer:
                 except SedarSafeStop:
                     rep.stopped = True
                     break
+                # an ABFT forward correction COMMITS the (repaired) step:
+                # keep the loss record aligned with committed steps
+                if (eng.recoveries
+                        and eng.recoveries[-1]["kind"] == "abft_correct"
+                        and outcome.aux is not None):
+                    rep.losses.append(float(np.asarray(outcome.aux)))
                 continue
 
         # final validation (paper: final results comparison)

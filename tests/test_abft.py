@@ -1,0 +1,463 @@
+"""ABFT subsystem: checksummed kernels, the replica-free executor, and the
+detected-corrected / detected-uncorrectable / escaped scenario classes.
+
+Acceptance properties (ISSUE 2):
+  * the checksummed matmul detects an injected in-kernel single-element
+    corruption and corrects it IN PLACE — no rollback, the run continues and
+    finishes bitwise identical to a clean run;
+  * uncorrectable multi-element corruption routes through the existing
+    on_detection() L1/L2/L3 paths;
+  * Pallas lowering == jnp reference (interpret/CPU parity).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.abft import (AbftExecutor, abft_attention_ref, abft_flash_attention,
+                        abft_matmul, abft_matmul_ref, matmul_pallas)
+from repro.configs import SedarConfig
+from repro.core.detection import SedarSafeStop
+from repro.core.fingerprint import (pytree_fingerprint,
+                                    pytree_fingerprint_fused)
+from repro.core.injection import (InjectionSpec, MemoryInjectionFlag, flip_bit,
+                                  make_kernel_fault)
+from repro.core.policy import make_engine
+from repro.core.recovery import RetryRecovery
+from repro.core.scenarios import run_abft_campaign
+from repro.kernels.ref import mha_ref
+
+RS = np.random.RandomState(0)
+
+
+def _ab(m=24, n=16, k=20):
+    a = jnp.asarray(RS.randn(m, n).astype(np.float32))
+    b = jnp.asarray(RS.randn(n, k).astype(np.float32))
+    return a, b
+
+
+def _fault(flat_idx=37, bit=21, n_elems=1, step=0):
+    spec = InjectionSpec(leaf_idx=0, flat_idx=flat_idx, bit=bit, step=step,
+                         target="kernel", n_elems=n_elems, dtype="float32")
+    return make_kernel_fault(spec, step=jnp.asarray(step),
+                             armed=jnp.asarray(True))
+
+
+# -- kernel parity -----------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k,bm", [
+    (24, 16, 20, 8),      # non-multiples of the block everywhere
+    (32, 32, 32, 16),
+    (7, 5, 3, 8),         # smaller than one block
+])
+def test_matmul_pallas_parity(m, n, k, bm):
+    a, b = _ab(m, n, k)
+    c = matmul_pallas(a, b, block_m=bm, block_n=bm, block_k=bm,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b), atol=1e-4)
+
+
+def test_abft_matmul_clean_no_detection():
+    a, b = _ab()
+    for impl in (lambda: abft_matmul_ref(a, b),
+                 lambda: abft_matmul(a, b, block_m=8, block_n=8, block_k=8,
+                                     interpret=True)):
+        c, report = impl()
+        assert not bool(np.asarray(report.detected))
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   atol=1e-4)
+
+
+def test_abft_matmul_detects_and_corrects_single_flip():
+    a, b = _ab()
+    clean, _ = abft_matmul_ref(a, b)
+    c, report = abft_matmul(a, b, inject=_fault(), block_m=8, block_n=8,
+                            block_k=8, interpret=True)
+    assert bool(np.asarray(report.corrected))
+    assert not bool(np.asarray(report.uncorrectable))
+    # corrected IN PLACE: the output matches the clean product
+    np.testing.assert_allclose(np.asarray(c), np.asarray(clean), atol=1e-3)
+
+
+def test_abft_matmul_multi_flip_uncorrectable():
+    a, b = _ab()
+    c, report = abft_matmul(a, b, inject=_fault(n_elems=3), block_m=8,
+                            block_n=8, block_k=8, interpret=True)
+    assert bool(np.asarray(report.uncorrectable))
+    assert int(np.asarray(report.bad_rows)) >= 2
+    assert int(np.asarray(report.bad_cols)) >= 2
+
+
+def test_abft_corrects_one_sided_threshold_crossing():
+    """Regression: on a tall-thin product the row/column thresholds are
+    asymmetric; a data-element delta crossing ONLY the row threshold must
+    still be localized by delta agreement and repaired — not misread as a
+    harmless checksum-entry hit while the output stays corrupted."""
+    rs = np.random.RandomState(3)
+    a = jnp.asarray(rs.randn(128, 16).astype(np.float32))
+    b = jnp.asarray(rs.randn(16, 8).astype(np.float32))
+    clean, _ = abft_matmul_ref(a, b)
+
+    from repro.abft.ref import residual_threshold
+    row_tau = float(residual_threshold(
+        jnp.sum(jnp.abs(clean), axis=1), 16 + 128)[0])
+    col_tau = float(residual_threshold(
+        jnp.sum(jnp.abs(clean), axis=0), 16 + 128)[0])
+    delta = 0.5 * (row_tau + col_tau)          # between the two thresholds
+    assert row_tau < delta < col_tau
+
+    def inject(c_full):
+        return c_full.at[0, 0].add(delta)
+
+    c, report = abft_matmul_ref(a, b, inject=inject)
+    assert bool(np.asarray(report.corrected))
+    assert not bool(np.asarray(report.uncorrectable))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(clean), atol=1e-4)
+
+
+def test_abft_checksum_entry_hit_leaves_data_intact():
+    """A flip landing in the checksum column itself: one-sided violation
+    with no agreeing partner residual — data block intact, no repair."""
+    a, b = _ab()
+    clean, _ = abft_matmul_ref(a, b)
+    k = b.shape[1]
+
+    def inject(c_full):
+        return c_full.at[2, k].add(1.0)        # row-checksum entry
+
+    c, report = abft_matmul_ref(a, b, inject=inject)
+    assert bool(np.asarray(report.detected))
+    assert bool(np.asarray(report.corrected))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(clean))
+
+
+def test_abft_matmul_low_bit_escapes():
+    """Corruption below the roundoff floor is invisible to ABFT (and
+    numerically harmless) — the class hybrid fingerprints exist for."""
+    a, b = _ab()
+    clean, _ = abft_matmul_ref(a, b)
+    c, report = abft_matmul_ref(a, b, inject=_fault(bit=0))
+    assert not bool(np.asarray(report.detected))
+    assert not np.array_equal(np.asarray(c), np.asarray(clean))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(clean), atol=1e-4)
+
+
+def test_abft_scenario_campaign():
+    rows = run_abft_campaign()
+    assert len(rows) == 12
+    assert all(r["match"] for r in rows), \
+        [r for r in rows if not r["match"]]
+
+
+# -- checksummed flash attention ---------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,hd", [
+    (1, 2, 1, 32, 32, 16),
+    (1, 4, 2, 48, 48, 16),     # GQA group 2, non-multiple of block
+])
+def test_abft_attention_parity(B, H, KV, Sq, Sk, hd):
+    q = jnp.asarray(RS.randn(B, H, Sq, hd).astype(np.float32))
+    k = jnp.asarray(RS.randn(B, KV, Sk, hd).astype(np.float32))
+    v = jnp.asarray(RS.randn(B, KV, Sk, hd).astype(np.float32))
+    o, rep = abft_flash_attention(q, k, v, causal=True, block_q=16,
+                                  block_k=16, interpret=True)
+    assert not bool(np.asarray(rep.detected))
+    np.testing.assert_allclose(np.asarray(o),
+                               np.asarray(mha_ref(q, k, v, causal=True)),
+                               atol=2e-5)
+    o2, rep2 = abft_attention_ref(q, k, v, causal=True)
+    assert not bool(np.asarray(rep2.detected))
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o), atol=2e-5)
+
+
+def test_abft_attention_detects_pv_corruption():
+    q = jnp.asarray(RS.randn(1, 2, 32, 16).astype(np.float32))
+    k = jnp.asarray(RS.randn(1, 1, 32, 16).astype(np.float32))
+    v = jnp.asarray(RS.randn(1, 1, 32, 16).astype(np.float32))
+    o, rep = abft_flash_attention(q, k, v, causal=True, block_q=16,
+                                  block_k=16, inject=_fault(bit=23),
+                                  interpret=True)
+    assert bool(np.asarray(rep.detected))
+    assert bool(np.asarray(rep.uncorrectable))   # detection-only invariant
+
+
+def test_abft_attention_qk_corruption_escapes():
+    """QK^T-path corruption moves every output lane consistently (checksum
+    lane included): the V-checksum invariant holds while the output is
+    wrong — the documented escape class (DESIGN.md §10)."""
+    q = jnp.asarray(RS.randn(1, 2, 32, 16).astype(np.float32))
+    k = jnp.asarray(RS.randn(1, 1, 32, 16).astype(np.float32))
+    v = jnp.asarray(RS.randn(1, 1, 32, 16).astype(np.float32))
+    clean = np.asarray(mha_ref(q, k, v, causal=True))
+    o, rep = abft_flash_attention(flip_bit(q, 55, 22), k, v, causal=True,
+                                  block_q=16, block_k=16, interpret=True)
+    assert not bool(np.asarray(rep.detected))
+    assert not np.allclose(np.asarray(o), clean, atol=1e-5)
+
+
+# -- executor x engine x recovery levels -------------------------------------
+
+W = jnp.asarray(np.random.RandomState(7).randn(16, 16).astype(np.float32)
+                * 0.01)
+
+
+def _abft_step_fn(spec):
+    """Toy step whose update runs through the checksummed matmul."""
+
+    def step_fn(state, batch, replica_id, armed):
+        inj = (make_kernel_fault(spec, step=state["step"], armed=armed)
+               if spec is not None else None)
+        delta, report = abft_matmul_ref(state["x"], W, inject=inj)
+        fp = pytree_fingerprint_fused({"d": delta})
+        cand = {"x": state["x"] + 0.1 * batch - delta,
+                "step": state["step"] + 1}
+        return cand, fp, jnp.sum(cand["x"]), report
+
+    return jax.jit(step_fn)
+
+
+def _abft_engine(workdir, level, spec=None, backend="abft",
+                 ckpt_interval=3, validate_interval=4):
+    sedar = SedarConfig(level=level, replication=backend, validate_interval=1,
+                        param_validate_interval=validate_interval,
+                        checkpoint_interval=ckpt_interval,
+                        checkpoint_dir=os.path.join(workdir, "ckpt"))
+    from repro.core.engine import BoundarySchedule
+    schedule = BoundarySchedule(commit_interval=1,
+                                validate_interval=validate_interval,
+                                checkpoint_interval=ckpt_interval)
+    state_fp = jax.jit(lambda s: pytree_fingerprint({"x": s["x"]}))
+    fast_fp = jax.jit(lambda s: pytree_fingerprint_fused({"x": s["x"]}))
+
+    def init_single():
+        return {"x": jnp.ones((16, 16), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    eng = make_engine(sedar, backend=backend, workdir=workdir,
+                      schedule=schedule, step_fn=_abft_step_fn(spec),
+                      state_fp_fn=state_fp, fast_state_fp_fn=fast_fp,
+                      inj_spec=spec, inj_flag=MemoryInjectionFlag(),
+                      init_fn=lambda: eng.executor.init_dual(init_single()),
+                      notify=lambda e: None)
+    return eng
+
+
+def _drive(eng, num_steps, max_iters=60, corrupt_at=None):
+    dual = eng.init_dual()
+    eng.reset()
+    it = 0
+    corrupted = False
+    while int(np.asarray(dual["r0"]["step"])) < num_steps:
+        it += 1
+        assert it < max_iters, "engine did not converge"
+        step = int(np.asarray(dual["r0"]["step"]))
+        batch = jnp.full((16, 16), float(step + 1), jnp.float32)
+        outcome = eng.run_protected_step(dual, batch, step)
+        dual = outcome.dual
+        if outcome.event is not None:
+            try:
+                dual = eng.on_detection(outcome.event, dual)
+            except SedarSafeStop:
+                return dual, True
+            continue
+        if corrupt_at is not None and not corrupted and \
+                int(np.asarray(dual["r0"]["step"])) == corrupt_at:
+            # silent at-rest corruption in the idle window between steps
+            corrupted = True
+            dual = {"r0": dict(dual["r0"],
+                               x=flip_bit(dual["r0"]["x"], 5, 20))}
+    return dual, False
+
+
+SPEC1 = InjectionSpec(leaf_idx=0, flat_idx=37, bit=21, step=4,
+                      target="kernel", dtype="float32")
+SPEC3 = InjectionSpec(leaf_idx=0, flat_idx=37, bit=21, step=4,
+                      target="kernel", n_elems=3, dtype="float32")
+
+
+@pytest.mark.parametrize("level", [1, 2, 3])
+def test_abft_forward_correction_no_rollback(tmp_workdir, level):
+    """Single in-kernel corruption: detected at the commit boundary,
+    corrected FORWARD (kind=abft_correct, rollbacks=0) at every recovery
+    level, and the finished run is bitwise identical to a clean one."""
+    eng = _abft_engine(os.path.join(tmp_workdir, f"l{level}"), level,
+                       spec=SPEC1)
+    dual, stopped = _drive(eng, 8)
+    assert not stopped
+    assert [e.boundary for e in eng.detections] == ["commit"]
+    assert eng.detections[0].step == 4
+    assert eng.detections[0].detail.get("abft_corrected")
+    assert [r["kind"] for r in eng.recoveries] == ["abft_correct"]
+    assert eng.recoveries[0]["rollbacks"] == 0
+    assert int(np.asarray(dual["r0"]["step"])) == 8
+
+    clean = _abft_engine(os.path.join(tmp_workdir, f"l{level}c"), level)
+    dual_c, _ = _drive(clean, 8)
+    np.testing.assert_array_equal(np.asarray(dual["r0"]["x"]),
+                                  np.asarray(dual_c["r0"]["x"]))
+
+
+@pytest.mark.parametrize("level,kinds", [
+    (1, ["stop"]),
+    (2, ["restore"]),
+    (3, ["restore"]),
+])
+def test_abft_uncorrectable_routes_through_recovery(tmp_workdir, level,
+                                                    kinds):
+    """Multi-element corruption defeats localization: the event goes through
+    the same on_detection() L1/L2/L3 machinery as a replica mismatch."""
+    eng = _abft_engine(os.path.join(tmp_workdir, f"u{level}"), level,
+                       spec=SPEC3)
+    dual, stopped = _drive(eng, 8)
+    assert [e.boundary for e in eng.detections] == ["commit"]
+    assert "abft" in eng.detections[0].detail
+    assert [r["kind"] for r in eng.recoveries] == kinds
+    assert stopped == (level == 1)
+    if level > 1:
+        assert eng.recoveries[0]["rollbacks"] == 1
+        assert int(np.asarray(dual["r0"]["step"])) == 8
+        clean = _abft_engine(os.path.join(tmp_workdir, f"u{level}c"), level)
+        dual_c, _ = _drive(clean, 8)
+        np.testing.assert_array_equal(np.asarray(dual["r0"]["x"]),
+                                      np.asarray(dual_c["r0"]["x"]))
+
+
+def test_abft_uncorrectable_retry_policy(tmp_workdir):
+    """L0 retry (serving style): the uncorrectable step re-executes clean."""
+    eng = _abft_engine(tmp_workdir, 1, spec=SPEC3)
+    eng.recovery = RetryRecovery(max_retries=4)
+    dual, stopped = _drive(eng, 8)
+    assert not stopped
+    assert [r["kind"] for r in eng.recoveries] == ["retry"]
+    assert int(np.asarray(dual["r0"]["step"])) == 8
+
+
+def test_hybrid_catches_at_rest_corruption(tmp_workdir):
+    """The escaped-to-FSC class: corruption of the RESIDENT state between
+    steps is invisible to kernel checksums; the hybrid backend's entry-time
+    fingerprint check detects it at the FSC cadence and L2 rolls back."""
+    eng = _abft_engine(tmp_workdir, 2, backend="hybrid")
+    dual, stopped = _drive(eng, 8, corrupt_at=4)
+    assert not stopped
+    assert [(e.boundary, e.effect) for e in eng.detections] == \
+        [("validate", "FSC")]
+    assert eng.detections[0].step == 4
+    assert [r["kind"] for r in eng.recoveries] == ["restore"]
+    clean = _abft_engine(tmp_workdir + "_clean", 2, backend="hybrid")
+    dual_c, _ = _drive(clean, 8)
+    np.testing.assert_array_equal(np.asarray(dual["r0"]["x"]),
+                                  np.asarray(dual_c["r0"]["x"]))
+
+
+def test_pure_abft_misses_at_rest_corruption(tmp_workdir):
+    """Same corruption, pure 'abft' backend: nothing detects it — the run
+    finishes with a diverged state. This asymmetry IS the hybrid rationale."""
+    eng = _abft_engine(tmp_workdir, 2, backend="abft")
+    dual, stopped = _drive(eng, 8, corrupt_at=4)
+    assert not stopped and not eng.detections
+    clean = _abft_engine(tmp_workdir + "_clean", 2, backend="abft")
+    dual_c, _ = _drive(clean, 8)
+    assert not np.array_equal(np.asarray(dual["r0"]["x"]),
+                              np.asarray(dual_c["r0"]["x"]))
+
+
+def test_abft_executor_unreported_step_fn(tmp_workdir):
+    """The 3-tuple step_fn contract of the replica backends still works:
+    existing drivers run under backend='abft' without modification."""
+
+    def step_fn(state, batch, replica_id, armed):
+        delta = 0.1 * batch - 0.01 * state["x"]
+        fp = pytree_fingerprint_fused({"d": delta})
+        cand = {"x": state["x"] + delta, "step": state["step"] + 1}
+        return cand, fp, jnp.sum(cand["x"])
+
+    ex = AbftExecutor(jax.jit(step_fn),
+                      jax.jit(lambda s: pytree_fingerprint({"x": s["x"]})))
+    dual = ex.init_dual({"x": jnp.zeros((16, 16), jnp.float32),
+                         "step": jnp.zeros((), jnp.int32)})
+    batch = jnp.ones((16, 16), jnp.float32)
+    dual, aux, event = ex.execute(dual, batch, 0, jnp.asarray(False), True)
+    assert event is None
+    assert int(np.asarray(dual["r0"]["step"])) == 1
+
+
+@pytest.mark.parametrize("backend", ["abft", "hybrid"])
+def test_trainer_runs_replica_free_backends(tmp_workdir, backend):
+    """Config plumbing: SedarConfig.replication='abft'/'hybrid' drives the
+    UNMODIFIED training runtime (single state image, 3-tuple step_fn)."""
+    from repro.configs import (RunConfig, TrainConfig, get_config,
+                               reduce_for_smoke)
+    from repro.runtime.train import SedarTrainer
+
+    cfg = reduce_for_smoke(get_config("paper-testapp"))
+    rc = RunConfig(model=cfg,
+                   train=TrainConfig(global_batch=2, seq_len=8, steps=4,
+                                     warmup_steps=2, lr=1e-3),
+                   sedar=SedarConfig(level=2, replication=backend,
+                                     validate_interval=1,
+                                     param_validate_interval=2,
+                                     checkpoint_interval=2))
+    tr = SedarTrainer(rc, tmp_workdir)
+    assert tr.engine.executor.name == backend
+    dual, rep = tr.run(4)
+    assert rep.steps_completed == 4
+    assert not rep.detections and not rep.stopped
+    assert len(rep.losses) == 4
+    assert rep.checkpoints == [2, 4]
+
+
+# -- temporal model + advisor ------------------------------------------------
+
+def test_temporal_model_abft_terms():
+    import dataclasses
+
+    from repro.core import temporal_model as tm
+    p = tm.PAPER_TABLE3["JACOBI"]
+    # space redundancy (default wall=1.0): same wall as duplication modulo
+    # the f_a-vs-f_d overhead gap — NOT a free 2x; the fault-free times must
+    # be within that overhead band of each other
+    assert tm.abft_fa(p) == pytest.approx(
+        tm.detection_fa(p) * (1 + p.f_a) / (1 + p.f_d), rel=1e-3)
+    # forward correction makes the faulty case cheaper than detect+relaunch
+    assert tm.abft_fp(p, 0.5) < tm.detection_fp(p, 0.5)
+    # time redundancy (sequential backend, wall=2.0): the single ABFT
+    # instance genuinely halves the wall
+    p2 = dataclasses.replace(p, redundancy_wall=2.0)
+    assert tm.abft_fa(p2) < tm.detection_fa(p2)
+    assert tm.hybrid_fa(p, validations=4) > tm.abft_fa(p)
+    assert tm.aet_strategy(p, "abft", 5.0) > 0
+
+
+def test_advise_reports_detection_mechanism():
+    from repro.core import temporal_model as tm
+    from repro.core.policy import advise
+    p = tm.PAPER_TABLE3["JACOBI"]
+    a = advise(p, mtbe_hours=5.0)
+    assert a.detection_mechanism in ("duplication", "abft")
+    assert a.abft_aet_hours > 0
+    assert "ABFT" in a.notes or "duplicated execution wins" in a.notes
+
+
+# -- injection validation (satellite regression) -----------------------------
+
+def test_injection_spec_validates_bit_against_dtype():
+    with pytest.raises(ValueError, match="out of range for bfloat16"):
+        InjectionSpec(leaf_idx=0, flat_idx=0, bit=20, step=0,
+                      dtype="bfloat16")
+    with pytest.raises(ValueError, match="outside any supported dtype"):
+        InjectionSpec(leaf_idx=0, flat_idx=0, bit=32, step=0)
+    # in-range construction is unaffected
+    InjectionSpec(leaf_idx=0, flat_idx=0, bit=15, step=0, dtype="bfloat16")
+    InjectionSpec(leaf_idx=0, flat_idx=0, bit=31, step=0, dtype="float32")
+
+
+def test_flip_bit_rejects_out_of_range_for_bf16():
+    """Regression: the bf16 path used to CLAMP bit to 15 silently, flipping
+    a different bit than the experiment recorded."""
+    x = jnp.ones((4,), jnp.bfloat16)
+    with pytest.raises(ValueError, match="out of range"):
+        flip_bit(x, 0, 20)
+    y = flip_bit(x, 0, 15)         # sign bit: valid, value actually changes
+    assert float(np.asarray(y, np.float32)[0]) == -1.0

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint import CheckpointStore
+from repro.checkpoint import CheckpointCorruptionError, CheckpointStore
 
 
 def _state(seed=0, n=5):
@@ -68,6 +68,41 @@ def test_gc_keep_last(tmp_path):
         store.save(s, _state(s))
     store.gc_keep_last(2)
     assert store.steps() == [4, 5]
+
+
+def test_restore_detects_on_disk_corruption(tmp_path):
+    """L3's 'valid checkpoint' guarantee must hold against bit rot: a byte
+    flipped in a saved leaf AFTER the atomic commit is caught by the
+    manifest's save-time digest, not silently restored."""
+    store = CheckpointStore(str(tmp_path))
+    s = _state(3)
+    store.save(10, s, valid=True)
+    template = jax.tree.map(np.asarray, s)
+    store.restore(10, template)        # pristine payload restores fine
+
+    leaf = os.path.join(str(tmp_path), "ckpt_00000010", "leaf_00000.npy")
+    arr = np.load(leaf)
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[7] ^= 0x20                    # deliberate byte flip in the payload
+    np.save(leaf, arr)
+    with pytest.raises(CheckpointCorruptionError, match="digest mismatch"):
+        store.restore(10, template)
+
+
+def test_restore_accepts_pre_digest_manifests(tmp_path):
+    """Checkpoints written before leaf_digests existed (manifest without the
+    field) still restore — verification is skipped, not failed."""
+    import json
+    store = CheckpointStore(str(tmp_path))
+    s = _state(1)
+    store.save(5, s)
+    man_path = os.path.join(str(tmp_path), "ckpt_00000005", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    del man["leaf_digests"]
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    store.restore(5, jax.tree.map(np.asarray, s))
 
 
 def test_restore_shape_mismatch_raises(tmp_path):

@@ -51,13 +51,14 @@ def _toy_step_fn(spec):
 
 
 def _toy_engine(workdir, level, spec=None, backend="sequential",
-                ckpt_interval=3, validate_interval=4):
+                ckpt_interval=3, validate_interval=4, toe_timeout_s=60.0,
+                delay_source=None):
     sedar = SedarConfig(level=level, replication=backend,
                         validate_interval=1,
                         param_validate_interval=validate_interval,
                         checkpoint_interval=ckpt_interval,
                         checkpoint_dir=os.path.join(workdir, "ckpt"),
-                        toe_timeout_s=60.0)
+                        toe_timeout_s=toe_timeout_s)
     state_fp = jax.jit(lambda s: pytree_fingerprint({"x": s["x"]}))
     fast_fp = jax.jit(lambda s: pytree_fingerprint_fused({"x": s["x"]}))
 
@@ -70,7 +71,7 @@ def _toy_engine(workdir, level, spec=None, backend="sequential",
                       fast_state_fp_fn=fast_fp, inj_spec=spec,
                       inj_flag=MemoryInjectionFlag(),
                       init_fn=lambda: eng.executor.init_dual(init_single()),
-                      notify=lambda e: None)
+                      notify=lambda e: None, delay_source=delay_source)
     return eng
 
 
@@ -121,6 +122,51 @@ def test_matrix_sequential(tmp_workdir, level, kinds):
         assert eng.recoveries[0]["rollbacks"] == 1
         assert int(np.asarray(dual["r0"]["step"])) == 8
         # recovered trajectory == clean trajectory (bitwise)
+        clean = _toy_engine(tmp_workdir + "_clean", level)
+        dual_c, _ = _drive(clean, 8)
+        np.testing.assert_array_equal(np.asarray(dual["r0"]["x"]),
+                                      np.asarray(dual_c["r0"]["x"]))
+
+
+def test_matrix_plain_baseline(tmp_workdir):
+    """backend='none' is the UNPROTECTED baseline: a corruption on the one
+    executing instance commits silently — zero detections, diverged state.
+    This is the control row of the matrix (what SEDAR exists to prevent)."""
+    spec = InjectionSpec(leaf_idx=0, flat_idx=5, bit=20, step=4, replica=0,
+                        target="grads")
+    eng = _toy_engine(tmp_workdir, 1, spec=spec, backend="none")
+    dual, stopped = _drive(eng, 8)
+    assert not stopped
+    assert eng.detections == [] and eng.recoveries == []
+    assert int(np.asarray(dual["r0"]["step"])) == 8
+    clean = _toy_engine(tmp_workdir + "_clean", 1, backend="none")
+    dual_c, _ = _drive(clean, 8)
+    assert not np.array_equal(np.asarray(dual["r0"]["x"]),
+                              np.asarray(dual_c["r0"]["x"]))
+
+
+@pytest.mark.parametrize("level,kinds,stops", [
+    (1, ["stop"], True),
+    (2, ["restore"], False),
+])
+def test_matrix_sequential_toe_watchdog_timeout(tmp_workdir, level, kinds,
+                                                stops):
+    """TOE boundary: one replica's execution delayed past the configured
+    lapse (the paper's replica flow separation). The delay hook is one-shot
+    — the re-execution after recovery is not delayed again — so L2 finishes
+    while L1 safe-stops. The lapse is wide enough that jit-compile skew on
+    the first replica execution cannot trip it spuriously."""
+    delays = {(4, 1): 2.5}
+    eng = _toy_engine(tmp_workdir, level, toe_timeout_s=1.0,
+                      delay_source=lambda: delays)
+    dual, stopped = _drive(eng, 8)
+    assert [e.boundary for e in eng.detections] == ["toe"]
+    assert [e.effect for e in eng.detections] == ["TOE"]
+    assert eng.detections[0].step == 4
+    assert [r["kind"] for r in eng.recoveries] == kinds
+    assert stopped == stops
+    if not stops:
+        assert int(np.asarray(dual["r0"]["step"])) == 8
         clean = _toy_engine(tmp_workdir + "_clean", level)
         dual_c, _ = _drive(clean, 8)
         np.testing.assert_array_equal(np.asarray(dual["r0"]["x"]),

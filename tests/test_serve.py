@@ -10,10 +10,10 @@ from repro.core.injection import InjectionSpec
 from repro.runtime.serve import SedarServer
 
 
-def _setup(dual=False, inj=None):
+def _setup(dual=False, inj=None, backend=None):
     cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
     rc = RunConfig(model=cfg, train=TrainConfig(global_batch=2, seq_len=8))
-    srv = SedarServer(rc, dual=dual, inj_spec=inj)
+    srv = SedarServer(rc, dual=dual, inj_spec=inj, backend=backend)
     params = srv.model.init(jax.random.PRNGKey(0))
     prompt = {"tokens": jnp.asarray(
         np.random.RandomState(0).randint(0, 200, (2, 8)), jnp.int32)}
@@ -33,6 +33,20 @@ def test_generate_deterministic():
     t1, _ = srv.generate(params, prompt, steps=5)
     t2, _ = srv.generate(params, prompt, steps=5)
     np.testing.assert_array_equal(t1, t2)
+
+
+@pytest.mark.parametrize("backend", ["abft", "hybrid"])
+def test_replica_free_serve_backends(backend):
+    """The abft/hybrid backends serve from ONE decode state through the
+    same engine path and emit the same tokens as the plain server."""
+    srv_c, params, prompt = _setup()
+    clean, _ = srv_c.generate(params, prompt, steps=6)
+    srv, _, _ = _setup(backend=backend)
+    assert srv.engine.executor.name == backend
+    assert srv.engine.executor.n_replicas == 1
+    toks, rep = srv.generate(params, prompt, steps=6)
+    assert not rep.detections and not rep.stopped
+    np.testing.assert_array_equal(toks, clean)
 
 
 def test_dual_serve_detects_and_retries():

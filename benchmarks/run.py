@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
     aet_*      — Sec. 3.4 Eq. 11 AET-vs-MTBE curves + advisor picks
     fingerprint_* — SEDAR comparison hot-spot throughput
     abft_*     — checksummed-kernel detection vs duplicated execution
+    protected_step_* — hot-path steps/s + host-syncs/step (DESIGN.md §11);
+                 --json additionally writes BENCH_protected_step.json
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -23,6 +25,7 @@ MODULES = [
     "benchmarks.bench_scenarios",
     "benchmarks.bench_fingerprint",
     "benchmarks.bench_abft",
+    "benchmarks.bench_protected_step",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -35,6 +38,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_aet",
     "benchmarks.bench_fingerprint",
     "benchmarks.bench_abft",
+    "benchmarks.bench_protected_step",
 ]
 
 
@@ -43,7 +47,13 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="quick subset for CI (analytic + fingerprint)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_protected_step.json next to the CSV "
+                         "output (consumed by the CI perf-artifact upload)")
     args = ap.parse_args()
+    if args.json:
+        import benchmarks.bench_protected_step as bps
+        bps.JSON_PATH = "BENCH_protected_step.json"
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:

@@ -92,9 +92,21 @@ class CheckpointStore:
     def save(self, step: int, state, *, kind: str = "system",
              valid: Optional[bool] = None, fingerprint=None,
              async_: bool = False, extra: Optional[dict] = None) -> None:
-        """Snapshot `state` (pytree of arrays) as version `step`."""
+        """Snapshot `state` (pytree of arrays) as version `step`.
+
+        The device->host copy is ONE transfer batch: non-blocking
+        `copy_to_host_async` starts every leaf's DMA concurrently, then a
+        single batched `jax.device_get` of the whole leaf list awaits them
+        (vs the old per-leaf loop: one blocking round-trip per leaf). The
+        copy completes on the calling thread — before the caller's next
+        step may DONATE the very buffers being snapshotted — and only
+        serialization + fsync + rename run on the background writer."""
+        # function-level import: repro.core.recovery imports this module, so
+        # a module-level `from repro.core import hostsync` would make
+        # `import repro.checkpoint` circular in a fresh interpreter
+        from repro.core import hostsync
         leaves = jax.tree_util.tree_flatten(state)[0]
-        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        host_leaves = hostsync.batched_get(leaves, label="checkpoint_save")
         man = Manifest(step=step, kind=kind, valid=valid,
                        fingerprint=None if fingerprint is None
                        else np.asarray(fingerprint).astype(np.int64).tolist(),
@@ -207,11 +219,25 @@ class CheckpointStore:
             if s != keep_step:
                 self.delete(s)
 
-    def gc_keep_last(self, n: int) -> None:
-        """Bounded-chain mode (SedarConfig.max_checkpoints > 0)."""
+    def gc_keep_last(self, n: int, keep_floor: Optional[int] = None) -> None:
+        """Bounded-chain mode (SedarConfig.max_checkpoints > 0).
+
+        `keep_floor` implements the deferred-validation retention rule
+        (DESIGN.md §11): the newest version with step <= keep_floor — the
+        last checkpoint older than every unvalidated step — is exempt from
+        pruning, so a fault anywhere inside the deferred window always has
+        a rollback target that predates it."""
+        if n <= 0:
+            return
         steps = self.steps()
-        for s in steps[:-n] if n > 0 else []:
-            self.delete(s)
+        keep = set(steps[-n:])
+        if keep_floor is not None:
+            anchored = [s for s in steps if s <= keep_floor]
+            if anchored and not any(s <= keep_floor for s in keep):
+                keep.add(anchored[-1])
+        for s in steps:
+            if s not in keep:
+                self.delete(s)
 
     def clear(self) -> None:
         self.wait()

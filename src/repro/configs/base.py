@@ -184,12 +184,19 @@ class SedarConfig:
     """
 
     level: int = 3
-    # none | dual | vote (N>=3, beyond paper) | abft | hybrid (replica-free
-    # checksum detection, DESIGN.md §10; hybrid adds FSC fingerprint checks)
+    # none | dual | sequential | fused (single-launch time redundancy,
+    # DESIGN.md §11) | vote (N>=3, beyond paper) | abft | hybrid (replica-
+    # free checksum detection, DESIGN.md §10; hybrid adds FSC fingerprint
+    # checks)
     replication: str = "dual"
     replica_axis: str = "pod"         # mesh axis carrying replicas
     compare: str = "fingerprint"      # fingerprint | full   (full = paper's exact buffer compare)
     validate_interval: int = 1        # steps between gradient-fingerprint compares (TDC boundary)
+    # deferred validation window D (DESIGN.md §11): commit predicates stay
+    # on device and are read back every D compares. 1 = classic sync-per-
+    # compare; >=8 makes the fault-free protected step host-sync-free at a
+    # detection latency of <= D steps (requires a checkpointing level).
+    validate_lag: int = 1
     param_validate_interval: int = 50 # steps between param/opt-state compares (FSC boundary)
     checkpoint_interval: int = 50     # steps between checkpoints (t_i analogue)
     checkpoint_dir: str = "/tmp/sedar_ckpt"

@@ -1,7 +1,9 @@
 """SEDAR core — the paper's contribution as composable JAX modules."""
+from repro.core import hostsync
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
                                   make_pod_comparator, make_pod_injector)
-from repro.core.engine import (BoundarySchedule, PlainExecutor, PodExecutor,
+from repro.core.engine import (BoundarySchedule, FusedSequentialExecutor,
+                               PlainExecutor, PodExecutor,
                                ReplicaExecutor, SedarEngine,
                                SequentialExecutor, StepOutcome, VoteExecutor)
 from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
@@ -20,8 +22,10 @@ from repro.core.recovery import (ExternalCounter, MultiCheckpointRecovery,
 from repro.core import scenarios, temporal_model
 
 __all__ = [
+    "hostsync",
     "DetectionEvent", "SedarSafeStop", "Watchdog", "make_pod_comparator",
-    "make_pod_injector", "BoundarySchedule", "PlainExecutor", "PodExecutor",
+    "make_pod_injector", "BoundarySchedule", "FusedSequentialExecutor",
+    "PlainExecutor", "PodExecutor",
     "ReplicaExecutor", "SedarEngine", "SequentialExecutor", "StepOutcome",
     "VoteExecutor", "fingerprints_equal", "mismatch_report", "pack_tree_u32",
     "packed_fingerprint", "pytree_fingerprint", "pytree_fingerprint_fused",

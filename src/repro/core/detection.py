@@ -161,6 +161,16 @@ class Watchdog:
         self.last_beat: Dict[int, float] = {r: time.monotonic()
                                             for r in range(n_replicas)}
         self.step_time: Dict[int, float] = {}
+        # per-replica wall-clock separation needs a device sync after each
+        # replica launch; executors only pay it while the watchdog is armed
+        # (scenario delays arm it implicitly; see SequentialExecutor)
+        self.armed: bool = False
+
+    def arm(self) -> None:
+        self.armed = True
+
+    def disarm(self) -> None:
+        self.armed = False
 
     def beat(self, replica: int, step: int) -> None:
         now = time.monotonic()

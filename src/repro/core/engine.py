@@ -22,6 +22,10 @@ Executor backends:
   * plain       -- no redundancy (the unprotected baseline).
   * sequential  -- time redundancy: both replicas run on the same devices
                    one after the other, each owning a full state image.
+  * fused       -- time redundancy in ONE launch (DESIGN.md §11): replica
+                   state stacked on a leading axis, both replicas stepped by
+                   a single vmapped jit that also computes the equality
+                   predicate on device — the zero-sync hot path backend.
   * pod         -- space redundancy: replicas are pods of the production
                    mesh; fingerprints exchanged via all-gather in shard_map.
   * vote        -- N-modular redundancy (beyond-paper, DESIGN.md §6): >=3
@@ -31,6 +35,15 @@ Executor backends:
                    single corruptions, forward-correct) in-kernel faults;
                    hybrid adds commit-time fingerprint validation for the
                    classes ABFT cannot see (abft/executor.py, DESIGN.md §10).
+
+Deferred validation (DESIGN.md §11): with `BoundarySchedule.validate_lag=D`
+> 1 the engine stops reading the per-step match predicate back to the host.
+Executors that `supports_deferred` commit optimistically and hand back the
+ON-DEVICE predicate; the engine parks it in a small device-resident ring and
+forces one readback every D commits (and at validate/checkpoint/final
+boundaries). Detection latency is bounded by D steps; recovery routes
+through the unchanged L1/L2/L3 policies, and checkpoints are only cut after
+a clean flush, so every stored version predates the oldest unvalidated step.
 """
 from __future__ import annotations
 
@@ -42,12 +55,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hostsync
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
                                   majority_replica)
 from repro.core.fingerprint import (fingerprints_equal, mismatch_report,
                                     pytree_fingerprint)
 from repro.core.recovery import (MultiCheckpointRecovery, RecoveryAction,
-                                 ValidatedCheckpointRecovery)
+                                 RetryRecovery, ValidatedCheckpointRecovery)
 
 
 # ---------------------------------------------------------------------------
@@ -63,19 +77,26 @@ class BoundarySchedule:
     validate_interval   -- FSC boundary: full-state fingerprint compare.
     checkpoint_interval -- L2/L3 checkpoint cadence (t_i analogue).
     toe_timeout_s       -- replica flow-separation lapse (TOE boundary).
+    validate_lag        -- deferred validation window D (DESIGN.md §11):
+                           commit predicates stay on device and are only
+                           read back every D commits. 1 = the classic
+                           sync-per-compare behavior; >1 trades detection
+                           latency (<= D steps) for a sync-free hot path.
     """
 
     commit_interval: int = 1
     validate_interval: int = 0
     checkpoint_interval: int = 0
     toe_timeout_s: float = 120.0
+    validate_lag: int = 1
 
     @classmethod
     def from_config(cls, sedar) -> "BoundarySchedule":
         return cls(commit_interval=max(int(sedar.validate_interval), 1),
                    validate_interval=int(sedar.param_validate_interval),
                    checkpoint_interval=int(sedar.checkpoint_interval),
-                   toe_timeout_s=float(sedar.toe_timeout_s))
+                   toe_timeout_s=float(sedar.toe_timeout_s),
+                   validate_lag=max(int(getattr(sedar, "validate_lag", 1)), 1))
 
     @staticmethod
     def _due(step: int, interval: int) -> bool:
@@ -107,6 +128,33 @@ class StepOutcome:
                                                                  "toe")
 
 
+class _EqCache:
+    """One-slot memo for the last state-equality reduction, keyed on the id
+    of the committed state object. validate() and validated_fp() land on
+    the same state within one engine iteration — the reduction must not run
+    twice. Executors invalidate on every execute, so a recycled id can
+    never alias a stale entry."""
+
+    __slots__ = ("_key", "_value")
+
+    def __init__(self):
+        self._key = None
+        self._value = None
+
+    def invalidate(self) -> None:
+        self._key = None
+        self._value = None
+
+    def get(self, state_obj):
+        """Cached value, or None on miss (cached values are never None)."""
+        return self._value if self._key == id(state_obj) else None
+
+    def put(self, state_obj, value):
+        self._key = id(state_obj)
+        self._value = value
+        return value
+
+
 def _default_localizer(c0, c1) -> List[Dict[str, Any]]:
     """Leaf-level localization for a commit mismatch: per-leaf fingerprints
     of the two candidate states (the fused compare fingerprint is a single
@@ -123,17 +171,26 @@ class ReplicaExecutor:
     """Protocol for redundant-execution backends.
 
     execute(dual, batch, step, armed, compare)
-        -> (dual', aux, event | None); dual' == dual when event is not None.
+        -> (dual', aux, event | None); dual' == dual (by value) when event
+           is not None.
+    execute_deferred(dual, batch, step, armed, compare)
+        -> (dual', aux, pred) where `pred` is the ON-DEVICE bool predicate
+           "this step's replicas matched" and the commit is OPTIMISTIC
+           (candidates adopted without reading pred — the engine's deferred
+           ring decides when to sync). Only when `supports_deferred`.
     validate(dual, step)      -> DetectionEvent | None  (FSC boundary)
     validated_fp(dual)        -> (per-leaf fp of r0 [np], replicas_equal)
     init_dual(single)         -> dual state from one logical state
     adopt_single(single)      -> dual state from a restored L3 checkpoint
+    primary(dual)             -> replica 0's logical state (the view drivers
+                                 read tokens/steps from and L3 checkpoints)
     state_fp(dual)            -> per-leaf fingerprint of r0 (reporting)
     repair(event, dual)       -> (dual', record) | None  (forward correction)
     """
 
     name = "base"
     n_replicas = 1
+    supports_deferred = False
 
     @property
     def can_validate(self) -> bool:
@@ -155,6 +212,20 @@ class ReplicaExecutor:
 
     def adopt_single(self, single):
         return {"r0": single}
+
+    def primary(self, dual):
+        return dual["r0"]
+
+    def peek(self, dual, key: str):
+        """Replica-0 view of ONE top-level state entry — what drivers read
+        tokens/step counters through (cheaper than `primary()`, which slices
+        every leaf)."""
+        return dual["r0"][key]
+
+    def execute_deferred(self, dual, batch, step: int, armed,
+                         compare: bool = True):
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support deferred validation")
 
     def repair(self, event: DetectionEvent, dual
                ) -> Optional[Tuple[Any, Dict[str, Any]]]:
@@ -196,6 +267,7 @@ class SequentialExecutor(ReplicaExecutor):
 
     name = "sequential"
     n_replicas = 2
+    supports_deferred = True
 
     def __init__(self, step_fn: Callable, state_fp_fn: Callable,
                  fast_state_fp_fn: Optional[Callable] = None,
@@ -210,15 +282,27 @@ class SequentialExecutor(ReplicaExecutor):
         self.toe_timeout_s = toe_timeout_s
         self.delay_source = delay_source or (lambda: {})
         self.localizer = localizer
+        # EMA of the UNSYNCED per-step dispatch wall (jit-level cost): the
+        # fast path never calls block_until_ready just to measure time
+        self.ema_step_s: Optional[float] = None
+        self._val_cache = _EqCache()
 
     def init_dual(self, single):
         return {"r0": single, "r1": jax.tree.map(jnp.copy, single)}
 
     adopt_single = init_dual   # a validated single state seeds both replicas
 
-    def execute(self, dual, batch, step: int, armed, compare: bool):
+    def _timing_armed(self, delays: dict) -> bool:
+        """Per-replica wall-clock separation (the TOE lapse) requires a
+        device sync after EACH replica; pay it only when the boundary can
+        actually fire — a scenario delay is pending or the watchdog was
+        armed explicitly. Otherwise replica launches overlap freely."""
+        return bool(delays) or (self.watchdog is not None
+                                and getattr(self.watchdog, "armed", False))
+
+    def _launch(self, dual, batch, step: int, armed, timed: bool,
+                delays: dict):
         outs, exec_t = {}, {}
-        delays = self.delay_source() or {}
         for rid in range(self.n_replicas):
             # one-shot scenario hook (the paper injects the delay once; the
             # re-execution after recovery is not delayed again)
@@ -228,41 +312,214 @@ class SequentialExecutor(ReplicaExecutor):
                 time.sleep(delay)
             outs[rid] = self.step_fn(dual[f"r{rid}"], batch,
                                      jnp.asarray(rid), armed)
-            jax.block_until_ready(outs[rid][1])
+            if timed:
+                jax.block_until_ready(outs[rid][1])
             exec_t[rid] = time.monotonic() - t_r
             if self.watchdog is not None:
                 self.watchdog.beat(rid, step)
+        self._val_cache.invalidate()
+        return outs, exec_t
 
-        # TOE: replica flow separation beyond the configured lapse
-        if abs(exec_t[1] - exec_t[0]) > self.toe_timeout_s:
+    def _note_wall(self, t0: float) -> None:
+        dt = time.monotonic() - t0
+        self.ema_step_s = dt if self.ema_step_s is None else \
+            0.9 * self.ema_step_s + 0.1 * dt
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        delays = self.delay_source() or {}
+        timed = self._timing_armed(delays)
+        t0 = time.monotonic()
+        outs, exec_t = self._launch(dual, batch, step, armed, timed, delays)
+        self._note_wall(t0)
+
+        # TOE: replica flow separation beyond the configured lapse (only
+        # meaningful when the per-replica walls were actually synced)
+        if timed and abs(exec_t[1] - exec_t[0]) > self.toe_timeout_s:
             return dual, outs[0][2], DetectionEvent(
                 step=step, boundary="toe", effect="TOE",
                 detail={"dt0": exec_t[0], "dt1": exec_t[1],
                         "timeout_s": self.toe_timeout_s})
 
         (c0, fp0, aux0), (c1, fp1, _aux1) = outs[0], outs[1]
-        if compare and not bool(np.asarray(fingerprints_equal(fp0, fp1))):
+        if compare and not hostsync.read_bool(fingerprints_equal(fp0, fp1),
+                                              label="commit_compare"):
             detail = {"mismatch": self.localizer(c0, c1)}
             return dual, aux0, DetectionEvent(step=step, boundary="commit",
                                               effect="TDC", detail=detail)
         # containment held (or compare skipped this step): adopt candidates
         return {"r0": c0, "r1": c1}, aux0, None
 
-    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+    def execute_deferred(self, dual, batch, step: int, armed,
+                         compare: bool = True):
+        """Optimistic commit: both candidates adopted, the match predicate
+        stays on device for the engine's deferred ring. No TOE timing (it
+        would reintroduce the per-replica sync this path exists to avoid)."""
+        delays = self.delay_source() or {}
+        t0 = time.monotonic()
+        outs, _ = self._launch(dual, batch, step, armed, False, delays)
+        self._note_wall(t0)
+        (c0, fp0, aux0), (c1, fp1, _aux1) = outs[0], outs[1]
+        pred = fingerprints_equal(fp0, fp1)
+        return {"r0": c0, "r1": c1}, aux0, pred
+
+    def _resident_eq(self, dual) -> bool:
+        """Full-state replica comparison, cached per dual object (_EqCache):
+        re-reducing it between validate() and validated_fp() would double
+        the FSC cost."""
+        hit = self._val_cache.get(dual.get("r0"))
+        if hit is not None:
+            return hit
         fp0 = self.fast_state_fp_fn(dual["r0"])
         fp1 = self.fast_state_fp_fn(dual["r1"])
-        if bool(np.asarray(fingerprints_equal(fp0, fp1))):
+        equal = hostsync.read_bool(fingerprints_equal(fp0, fp1),
+                                   label="state_validate")
+        return self._val_cache.put(dual.get("r0"), equal)
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        if self._resident_eq(dual):
             return None
         return DetectionEvent(step=step, boundary="validate", effect="FSC")
 
     def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
-        fp0 = self.fast_state_fp_fn(dual["r0"])
-        fp1 = self.fast_state_fp_fn(dual["r1"])
-        equal = bool(np.asarray(fingerprints_equal(fp0, fp1)))
-        return np.asarray(self.state_fp_fn(dual["r0"])), equal
+        return (hostsync.read_scalar(self.state_fp_fn(dual["r0"]),
+                                     label="validated_fp"),
+                self._resident_eq(dual))
 
     def state_fp(self, dual):
         return self.state_fp_fn(dual["r0"])
+
+
+class FusedSequentialExecutor(ReplicaExecutor):
+    """Time redundancy in ONE launch (DESIGN.md §11): replica state is
+    stacked on a leading axis and both replicas are stepped by a single
+    vmapped jit that also computes the replica-equality predicate on device.
+
+    Versus `SequentialExecutor` this removes, per protected step: one kernel
+    dispatch (two launches fuse into one), two `block_until_ready` syncs and
+    — with the in-jit commit gate or the deferred ring — the per-step host
+    readback of the compare bit. With buffer donation the stacked state is
+    updated in place, so the dual image stops doubling peak memory on copy.
+
+    The commit gate mirrors the pod backend: candidates are committed only
+    `where(eq)`, so a mismatch returns the pre-step values and L0 retry
+    re-executes from them even though the input buffers were donated.
+    Deferred mode runs the SAME compiled program (one executable for both
+    lag modes keeps trajectories bitwise-identical across `validate_lag`
+    settings — a second lowering would reassociate float ops) and merely
+    skips the predicate readback: a deferred mismatch freezes the replicas
+    in place, later steps run batch-skewed until the ring flush localizes
+    the faulty step, and checkpoint rollback repairs the skew. Per-replica
+    TOE timing is not representable — the replicas share one launch; the
+    TOE boundary needs the sequential backend."""
+
+    name = "fused"
+    n_replicas = 2
+    supports_deferred = True
+
+    def __init__(self, step_fn: Callable, state_fp_fn: Callable,
+                 fast_state_fp_fn: Optional[Callable] = None,
+                 watchdog: Optional[Watchdog] = None, donate: bool = True):
+        self.step_fn = step_fn
+        self.state_fp_fn = state_fp_fn
+        self.fast_state_fp_fn = fast_state_fp_fn or state_fp_fn
+        self.watchdog = watchdog
+        self._val_cache = _EqCache()
+        n = self.n_replicas
+
+        def _core(stacked, batch, armed):
+            rids = jnp.arange(n, dtype=jnp.int32)
+            cands, fps, auxs = jax.vmap(
+                step_fn, in_axes=(0, None, 0, None))(stacked, batch, rids,
+                                                     armed)
+            eq = fingerprints_equal(fps[0], fps[1])
+            return cands, eq, jax.tree.map(lambda a: a[0], auxs)
+
+        def _gated(stacked, batch, armed, compare):
+            cands, eq, aux0 = _core(stacked, batch, armed)
+            # scalar-predicate commit gate as a lax.cond, NOT a per-leaf
+            # jnp.where: select lowers to a full elementwise pass over both
+            # operands of every leaf (~3x the whole step on CPU), while the
+            # conditional just forwards the chosen pytree. The gate only
+            # bites on compare steps: off-boundary steps must adopt the
+            # candidates unconditionally (like the sequential backend) or a
+            # divergence there would be silently REVERTED and never reach a
+            # detection boundary.
+            commit = jnp.logical_or(eq, jnp.logical_not(compare))
+            new = jax.lax.cond(commit, lambda c, s: c, lambda c, s: s,
+                               cands, stacked)
+            return new, eq, aux0
+
+        def _validate(stacked):
+            fps = jax.vmap(self.fast_state_fp_fn)(stacked)
+            return fingerprints_equal(fps[0], fps[1])
+
+        # donation is skipped on CPU (XLA:CPU cannot alias; donating only
+        # produces "donated buffer unusable" warnings in the test container)
+        donate_args = (0,) if (donate and jax.default_backend() != "cpu") \
+            else ()
+        self._step_gated = jax.jit(_gated, donate_argnums=donate_args)
+        self._validate_jit = jax.jit(_validate)
+
+    def init_dual(self, single):
+        return {"s": jax.tree.map(
+            lambda x: jnp.stack([jnp.asarray(x)] * self.n_replicas), single)}
+
+    adopt_single = init_dual
+
+    def primary(self, dual):
+        return jax.tree.map(lambda x: x[0], dual["s"])
+
+    def peek(self, dual, key: str):
+        return jax.tree.map(lambda x: x[0], dual["s"][key])
+
+    def _beat(self, step: int) -> None:
+        if self.watchdog is not None:
+            for rid in range(self.n_replicas):
+                self.watchdog.beat(rid, step)
+
+    def _launch(self, dual, batch, step: int, armed, compare: bool):
+        new, eq, aux = self._step_gated(dual["s"], batch, armed,
+                                        jnp.asarray(compare, jnp.bool_))
+        self._val_cache.invalidate()
+        self._beat(step)
+        return {"s": new}, eq, aux
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        dual2, eq, aux = self._launch(dual, batch, step, armed, compare)
+        if compare and not hostsync.read_bool(eq, label="commit_compare"):
+            # gated: dual2 carries the pre-step values (leaf-level
+            # localization would need the discarded candidates; the fused
+            # hot path trades it away — the sequential backend keeps it)
+            return dual2, aux, DetectionEvent(step=step, boundary="commit",
+                                              effect="TDC",
+                                              detail={"fused": True})
+        return dual2, aux, None
+
+    def execute_deferred(self, dual, batch, step: int, armed,
+                         compare: bool = True):
+        dual2, eq, aux = self._launch(dual, batch, step, armed, compare)
+        return dual2, aux, eq
+
+    def _resident_eq(self, dual) -> bool:
+        hit = self._val_cache.get(dual.get("s"))
+        if hit is not None:
+            return hit
+        equal = hostsync.read_bool(self._validate_jit(dual["s"]),
+                                   label="state_validate")
+        return self._val_cache.put(dual.get("s"), equal)
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        if self._resident_eq(dual):
+            return None
+        return DetectionEvent(step=step, boundary="validate", effect="FSC")
+
+    def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
+        return (hostsync.read_scalar(self.state_fp_fn(self.primary(dual)),
+                                     label="validated_fp"),
+                self._resident_eq(dual))
+
+    def state_fp(self, dual):
+        return self.state_fp_fn(self.primary(dual))
 
 
 class PodExecutor(ReplicaExecutor):
@@ -276,30 +533,55 @@ class PodExecutor(ReplicaExecutor):
 
     name = "pod"
     n_replicas = 2
+    supports_deferred = True
 
     def __init__(self, pod_step: Callable, pod_validate: Callable,
                  state_fp_fn: Callable):
         self.pod_step = pod_step
         self.pod_validate = pod_validate
         self.state_fp_fn = state_fp_fn
+        # last pod_validate reduction (_EqCache): validate() and
+        # validated_fp() hit the same committed state in one engine
+        # iteration — the all-gather compare must not run twice
+        self._val_cache = _EqCache()
 
     def execute(self, dual, batch, step: int, armed, compare: bool):
         new_state, eq, fp_all, aux = self.pod_step(dual["r0"], batch, armed)
-        if compare and not bool(np.asarray(eq)):
+        self._val_cache.invalidate()
+        if compare and not hostsync.read_bool(eq, label="commit_compare"):
             return dual, aux, DetectionEvent(step=step, boundary="commit",
                                              effect="TDC")
         return {"r0": new_state}, aux, None
 
-    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+    def execute_deferred(self, dual, batch, step: int, armed,
+                         compare: bool = True):
+        """pod_step gates the commit in-jit, so a deferred mismatch FREEZES
+        the state rather than diverging it; the ring flush still localizes
+        the faulty step and rollback repairs the (batch-skewed) replay."""
+        new_state, eq, fp_all, aux = self.pod_step(dual["r0"], batch, armed)
+        self._val_cache.invalidate()
+        return {"r0": new_state}, aux, eq
+
+    def _state_eq(self, dual):
+        hit = self._val_cache.get(dual.get("r0"))
+        if hit is not None:
+            return hit
         eq, fp_all = self.pod_validate(dual["r0"])
-        if bool(np.asarray(eq)):
+        eqb = hostsync.read_bool(eq, label="state_validate")
+        return self._val_cache.put(dual.get("r0"), (eqb, fp_all))
+
+    def validate(self, dual, step: int) -> Optional[DetectionEvent]:
+        eqb, fp_all = self._state_eq(dual)
+        if eqb:
             return None
         return DetectionEvent(step=step, boundary="validate", effect="FSC",
-                              detail={"fp_all": np.asarray(fp_all)})
+                              detail={"fp_all": hostsync.read_scalar(
+                                  fp_all, label="fp_all")})
 
     def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
-        eq, _ = self.pod_validate(dual["r0"])
-        return np.asarray(self.state_fp_fn(dual["r0"])), bool(np.asarray(eq))
+        eqb, _ = self._state_eq(dual)
+        return (hostsync.read_scalar(self.state_fp_fn(dual["r0"]),
+                                     label="validated_fp"), eqb)
 
     def state_fp(self, dual):
         return self.state_fp_fn(dual["r0"])
@@ -311,9 +593,12 @@ class VoteExecutor(PodExecutor):
     A state divergence is repaired FORWARD by broadcasting the majority
     replica's state (no rollback, no recomputation); a transient commit
     mismatch simply re-executes. Falls back to the engine's recovery policy
-    when no strict majority exists."""
+    when no strict majority exists. Deferred validation is disabled: the
+    forward-repair protocol consumes the per-step predicate (and fp_all)
+    immediately."""
 
     name = "vote"
+    supports_deferred = False
 
     def __init__(self, pod_step: Callable, pod_validate: Callable,
                  state_fp_fn: Callable, broadcaster: Callable,
@@ -366,6 +651,25 @@ class SedarEngine:
         self.detections: List[DetectionEvent] = []
         self.recoveries: List[Dict[str, Any]] = []
         self.checkpoints: List[int] = []
+        # -- deferred validation window (DESIGN.md §11) ---------------------
+        # The effective lag degrades to 1 (classic sync-per-compare) when the
+        # executor cannot hand back an on-device predicate, or when recovery
+        # is L0 re-execution: a retry can only rewind the CURRENT step, and
+        # with optimistic commits the faulty step is up to D steps in the
+        # past — only checkpoint rollback (or a stop) can reach it.
+        lag = max(int(getattr(schedule, "validate_lag", 1)), 1)
+        if lag > 1 and not getattr(executor, "supports_deferred", False):
+            lag = 1
+        if lag > 1 and isinstance(recovery, RetryRecovery):
+            lag = 1
+        self.validate_lag = lag
+        self._ring: List[Tuple[int, Any]] = []   # device-resident predicates
+        self.validated_frontier = 0              # first step NOT yet validated
+
+    @property
+    def pending_validation(self) -> bool:
+        """True while deferred predicates are parked in the device ring."""
+        return bool(self._ring)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -373,6 +677,8 @@ class SedarEngine:
         self.detections.clear()
         self.recoveries.clear()
         self.checkpoints.clear()
+        self._ring.clear()
+        self.validated_frontier = 0
 
     def init_dual(self):
         if self.init_fn is None:
@@ -383,14 +689,19 @@ class SedarEngine:
 
     def run_protected_step(self, dual, batch, step: int) -> StepOutcome:
         """Execute one redundant step at `step`: inject (if armed) ->
-        execute replicas -> TDC commit gate -> FSC validation boundary ->
-        checkpoint boundary. Returns the state to continue from plus the
-        detection event, if any (feed it to `on_detection`)."""
+        execute replicas -> TDC commit gate (immediate or deferred) -> FSC
+        validation boundary -> checkpoint boundary. Returns the state to
+        continue from plus the detection event, if any (feed it to
+        `on_detection`)."""
         armed = jnp.asarray(
             1 if (self.inj_flag is not None
                   and self.inj_flag.arm_spec(self.inj_spec) is not None)
             else 0, jnp.bool_)
         compare = self.schedule.commit_due(step)
+
+        if self.validate_lag > 1:
+            return self._run_deferred(dual, batch, step, armed, compare)
+
         dual2, aux, event = self.executor.execute(dual, batch, step, armed,
                                                   compare)
         self._mark_injected(step)
@@ -401,6 +712,8 @@ class SedarEngine:
         note = getattr(self.recovery, "note_success", None)
         if note is not None:
             note()
+        if compare:
+            self.validated_frontier = step + 1
 
         new_step = step + 1
         if self.executor.can_validate and \
@@ -414,9 +727,71 @@ class SedarEngine:
         event = self._maybe_checkpoint(dual2, new_step)
         return StepOutcome(dual=dual2, aux=aux, event=event)
 
+    def _run_deferred(self, dual, batch, step: int, armed,
+                      compare: bool) -> StepOutcome:
+        """Zero-sync hot path: the commit is optimistic, the match predicate
+        joins the device-resident ring, and the host only reads the ring
+        back every `validate_lag` commits or at a validate/checkpoint
+        boundary. A fault-free steady-state step performs NO device->host
+        transfer (asserted by tests via `hostsync.count_transfers`)."""
+        dual2, aux, pred = self.executor.execute_deferred(dual, batch, step,
+                                                          armed, compare)
+        self._mark_injected(step)
+        if compare:
+            self._ring.append((step, pred))
+
+        new_step = step + 1
+        boundary_due = (self.schedule.validate_due(new_step)
+                        or self.schedule.checkpoint_due(new_step))
+        if len(self._ring) >= self.validate_lag or boundary_due:
+            event = self.flush_deferred()
+            if event is not None:
+                return StepOutcome(dual=dual2, aux=aux, event=event)
+            note = getattr(self.recovery, "note_success", None)
+            if note is not None:
+                note()
+
+        if self.executor.can_validate and \
+                self.schedule.validate_due(new_step):
+            event = self.executor.validate(dual2, new_step)
+            if event is not None:
+                return StepOutcome(dual=dual2, aux=aux, event=event)
+
+        event = self._maybe_checkpoint(dual2, new_step)
+        return StepOutcome(dual=dual2, aux=aux, event=event)
+
+    def flush_deferred(self) -> Optional[DetectionEvent]:
+        """Force the deferred-window readback: ONE host read of the combined
+        ring predicate; only a failed flush pays a second read to localize
+        the first mismatched step. Clean flush advances the validated
+        frontier. Drivers call this at end of run; the engine calls it every
+        `validate_lag` commits and before validate/checkpoint boundaries."""
+        if not self._ring:
+            return None
+        steps_, preds = zip(*self._ring)
+        ok = hostsync.read_bool(jnp.all(jnp.stack(list(preds))),
+                                label="deferred_flush")
+        if ok:
+            self.validated_frontier = steps_[-1] + 1
+            self._ring.clear()
+            return None
+        vals = hostsync.batched_get(list(preds), label="deferred_ring")
+        bad = [s for s, v in zip(steps_, vals) if not bool(np.all(v))]
+        detected_at = steps_[-1] + 1
+        self._ring.clear()
+        return DetectionEvent(
+            step=bad[0], boundary="deferred", effect="TDC",
+            detail={"detected_at": detected_at, "lag": detected_at - bad[0],
+                    "faulty_steps": bad[:8]})
+
     def validate_final(self, dual, step: int) -> Optional[DetectionEvent]:
         """Final-results comparison (paper Sec. 3.1); the event is tagged
-        boundary='final' so NMR repair still applies."""
+        boundary='final' so NMR repair still applies. Flushes the deferred
+        window first — unvalidated optimistic commits must not reach the
+        final comparison unexamined."""
+        event = self.flush_deferred()
+        if event is not None:
+            return event
         if not self.executor.can_validate_final:
             return None
         event = self.executor.validate(dual, step)
@@ -429,6 +804,10 @@ class SedarEngine:
     def on_detection(self, event: DetectionEvent, dual):
         """Record + notify + recover. Returns the state to continue from;
         raises SedarSafeStop when the policy is (or degrades to) L1."""
+        # predicates parked for steps at/after the detection are stale: the
+        # recovery target predates them, and a restored trajectory re-runs
+        # (and re-validates) those steps
+        self._ring.clear()
         self.detections.append(event)
         self.notify(event)
 
@@ -448,10 +827,14 @@ class SedarEngine:
         if action.kind == "retry":
             return dual          # transient fault: re-execute the same step
         if action.kind == "restart_scratch":
+            self.validated_frontier = 0
             return self.init_dual()
+        if action.step is not None:
+            self.validated_frontier = min(self.validated_frontier,
+                                          action.step)
         if isinstance(self.recovery, ValidatedCheckpointRecovery):
             # L3 stores ONE validated state; re-seed every replica from it
-            single = self.recovery.restore(action, dual["r0"])
+            single = self.recovery.restore(action, self.executor.primary(dual))
             single = jax.tree.map(jnp.asarray, single)
             return self.executor.adopt_single(single)
         restored = self.recovery.restore(action, dual)
@@ -468,15 +851,24 @@ class SedarEngine:
     def _maybe_checkpoint(self, dual, step: int) -> Optional[DetectionEvent]:
         r = self.recovery
         if isinstance(r, MultiCheckpointRecovery):
-            if r.maybe_checkpoint(step, dual,
-                                  np.asarray(self.executor.state_fp(dual))):
+            if step == 0 or r.interval <= 0 or step % r.interval != 0:
+                # the cadence check runs HERE so the off-boundary steps do
+                # not pay the state-fingerprint readback (it used to sync
+                # every step just to hand maybe_checkpoint an unused array)
+                return None
+            fp = hostsync.read_scalar(self.executor.state_fp(dual),
+                                      label="checkpoint_fp")
+            if r.maybe_checkpoint(step, dual, fp,
+                                  validated_floor=self.validated_frontier):
                 self.checkpoints.append(step)
             return None
         if isinstance(r, ValidatedCheckpointRecovery):
             if step == 0 or step % r.interval != 0:
                 return None
             fp0, fp_equal = self.executor.validated_fp(dual)
-            ev = r.maybe_checkpoint(step, dual, fp0, fp_equal=fp_equal)
+            ev = r.maybe_checkpoint(step,
+                                    {"r0": self.executor.primary(dual)},
+                                    fp0, fp_equal=fp_equal)
             if ev is None:
                 self.checkpoints.append(step)
             return ev

@@ -1,0 +1,107 @@
+"""Host-sync accounting: every device->host readback flows through here.
+
+The zero-sync hot path (DESIGN.md §11) is a *property*, not an aspiration:
+the engine, the executors, the checkpoint store and the workload drivers
+perform every device->host transfer through this module, so a test (or a
+production canary) can wrap a region in `count_transfers()` and ASSERT that
+a fault-free protected step with `validate_lag >= D` performs zero
+readbacks between validation flushes.
+
+Two kinds of counted operations:
+
+  * `read_scalar` / `read_bool`  -- one small readback (a predicate, a step
+    counter, a fingerprint row). Counted as 1 transfer, 1 batch.
+  * `batched_get`                -- ONE logical transfer batch covering many
+    leaves (`jax.device_get` on the whole list: the transfers are issued
+    together and awaited once, instead of one blocking round-trip per
+    leaf). Counted as 1 batch, len(leaves) items.
+
+`copy_to_host_async` starts non-blocking D2H DMA for every leaf (where the
+runtime supports it) so a later `batched_get` only *waits* instead of
+serializing issue->wait per leaf; it performs no readback itself and is not
+counted.
+
+Counting is thread-local by design choice: background checkpoint writers
+receive host arrays, so all counted calls happen on the driver thread and a
+plain list of active counters suffices.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclass
+class TransferStats:
+    """Counts of device->host readbacks inside a `count_transfers` region."""
+
+    transfers: int = 0          # individual arrays read back
+    batches: int = 0            # transfer batches issued (1 per counted call)
+    by_label: Dict[str, int] = field(default_factory=dict)
+
+    def note(self, label: str, items: int = 1) -> None:
+        self.transfers += items
+        self.batches += 1
+        self.by_label[label] = self.by_label.get(label, 0) + items
+
+
+_active: List[TransferStats] = []
+
+
+@contextlib.contextmanager
+def count_transfers() -> Iterator[TransferStats]:
+    """Count every device->host readback issued inside the block."""
+    st = TransferStats()
+    _active.append(st)
+    try:
+        yield st
+    finally:
+        _active.remove(st)
+
+
+def _note(label: str, items: int = 1) -> None:
+    for st in _active:
+        st.note(label, items)
+
+
+def read_scalar(x, label: str = "scalar") -> np.ndarray:
+    """One counted readback of a small array (predicate/counter/row)."""
+    _note(label)
+    return np.asarray(jax.device_get(x))
+
+
+def read_bool(x, label: str = "predicate") -> bool:
+    return bool(read_scalar(x, label=label))
+
+
+def read_int(x, label: str = "counter") -> int:
+    return int(read_scalar(x, label=label))
+
+
+def copy_to_host_async(leaves: Sequence[Any]) -> None:
+    """Start non-blocking D2H copies for every leaf (best effort: CPU arrays
+    and non-jax leaves have nothing to overlap). Not counted — no readback
+    completes here."""
+    for l in leaves:
+        start = getattr(l, "copy_to_host_async", None)
+        if start is not None:
+            try:
+                start()
+            except Exception:   # noqa: BLE001 — committed arrays only
+                pass
+
+
+def batched_get(leaves: Sequence[Any], label: str = "batch") -> List[Any]:
+    """ONE transfer batch for a list of arrays: issue all copies, wait once.
+
+    `jax.device_get` on a list fetches every leaf in a single call (and any
+    DMA started by `copy_to_host_async` merely completes here), so a
+    100-leaf state costs one batch — not 100 blocking round-trips."""
+    leaves = list(leaves)
+    _note(label, items=len(leaves))
+    copy_to_host_async(leaves)
+    return [np.asarray(l) for l in jax.device_get(leaves)]

@@ -32,6 +32,10 @@ class Advice:
     # replicated execution) vs "abft" (replica-free checksummed kernels).
     detection_mechanism: str = "duplication"
     abft_aet_hours: float = 0.0    # AET of the ABFT backend at the same MTBE
+    # deferred-validation axis (DESIGN.md §11): recommended validate_lag D
+    # (1 = classic sync-per-compare) and its AET at the chosen MTBE
+    validate_lag: int = 1
+    deferred_aet_hours: float = 0.0
 
 
 def advise(p: tm.SedarParams, mtbe_hours: float,
@@ -82,6 +86,20 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         notes.append(
             "duplicated execution wins: coverage is total (any divergence) "
             "while ABFT only sees checksummed kernels; keep replication")
+
+    # deferred-validation guidance (DESIGN.md §11): how far the per-step
+    # predicate readback should lag execution. Needs the measured per-step
+    # duration and host-sync cost; D=1 (classic) when unparameterized.
+    lag = tm.optimal_validate_lag(p, mtbe_hours, X=X_expected)
+    deferred_aet = tm.aet_deferred(p, lag, mtbe_hours, X=X_expected) \
+        if lag > 1 else aets["detection"]
+    if lag > 1:
+        notes.append(
+            f"defer validation by D={lag} steps (validate_lag): saves "
+            f"{tm.deferred_sync_savings(p, lag):.3f}h of per-step syncs vs "
+            f"an expected {tm.deferred_waste(p, lag):.3f}h re-executed per "
+            f"fault; requires a checkpointing level (L2/L3) so rollback can "
+            f"reach inside the window")
     return Advice(
         strategy=best,
         level=level,
@@ -92,6 +110,8 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         notes="; ".join(notes),
         detection_mechanism=mech,
         abft_aet_hours=round(abft, 4),
+        validate_lag=lag,
+        deferred_aet_hours=round(deferred_aet, 4),
     )
 
 
@@ -112,20 +132,24 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                 inj_spec: Any = None, inj_flag: Any = None,
                 init_fn: Optional[Callable] = None,
                 notify: Optional[Callable] = None,
-                delay_source: Optional[Callable[[], dict]] = None):
+                delay_source: Optional[Callable[[], dict]] = None,
+                donate: bool = True):
     """Assemble a `SedarEngine` for one workload.
 
-    backend: "none" | "sequential" | "pod" | "vote" | "abft" | "hybrid"
-    (defaults to sedar_cfg.replication). Sequential/plain/abft/hybrid
-    backends need `step_fn` + `state_fp_fn`; pod/vote need the prebuilt
-    shard_map'd `pod_step` / `pod_validate` (+ `pod_broadcaster` for vote).
-    abft/hybrid run replica-free: step_fn may return a 4th element (an
-    `abft.ref.AbftReport` from checksummed kernels) and hybrid additionally
-    validates the commit-time state fingerprint at the FSC boundary.
-    `recovery`/`schedule`/`watchdog` default from the config (recovery needs
-    `workdir`)."""
-    from repro.core.engine import (BoundarySchedule, PlainExecutor,
-                                   PodExecutor, SedarEngine,
+    backend: "none" | "sequential" | "fused" | "pod" | "vote" | "abft" |
+    "hybrid" (defaults to sedar_cfg.replication). Sequential/fused/plain/
+    abft/hybrid backends need `step_fn` + `state_fp_fn`; pod/vote need the
+    prebuilt shard_map'd `pod_step` / `pod_validate` (+ `pod_broadcaster`
+    for vote). "fused" runs both time-redundant replicas in ONE vmapped jit
+    with the compare predicate on device (the zero-sync hot path, DESIGN.md
+    §11; `donate` controls stacked-state buffer donation); step_fn must be
+    vmappable over (state, replica_id). abft/hybrid run replica-free:
+    step_fn may return a 4th element (an `abft.ref.AbftReport` from
+    checksummed kernels) and hybrid additionally validates the commit-time
+    state fingerprint at the FSC boundary. `recovery`/`schedule`/`watchdog`
+    default from the config (recovery needs `workdir`)."""
+    from repro.core.engine import (BoundarySchedule, FusedSequentialExecutor,
+                                   PlainExecutor, PodExecutor, SedarEngine,
                                    SequentialExecutor, VoteExecutor)
     from repro.core.detection import Watchdog
     from repro.core.recovery import make_recovery
@@ -157,6 +181,12 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                                 fast_state_fp_fn=fast_state_fp_fn,
                                 hybrid=(backend == "hybrid"),
                                 validate_interval=schedule.validate_interval)
+    elif backend == "fused":
+        if step_fn is None or state_fp_fn is None:
+            raise ValueError("backend 'fused' needs step_fn and state_fp_fn")
+        executor = FusedSequentialExecutor(
+            step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,
+            watchdog=watchdog, donate=donate)
     elif backend == "none":
         executor = PlainExecutor(step_fn, state_fp_fn)
     else:

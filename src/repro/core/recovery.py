@@ -113,16 +113,24 @@ class MultiCheckpointRecovery:
         self.max_checkpoints = max_checkpoints
         self.async_ = async_
 
-    def maybe_checkpoint(self, step: int, dual_state, fingerprints=None) -> bool:
+    def maybe_checkpoint(self, step: int, dual_state, fingerprints=None,
+                         validated_floor: Optional[int] = None) -> bool:
         """Cut a system-level checkpoint right after a validated commit
         (paper: 'the best moments to take them are when the communications
-        have just been validated')."""
+        have just been validated').
+
+        `validated_floor` is the engine's validation frontier (first step
+        not yet proven fault-free). Deferred validation (DESIGN.md §11)
+        requires the bounded-chain GC to RETAIN at least one checkpoint no
+        newer than that frontier — i.e. older than every unvalidated step —
+        or a fault inside the window could outlive every rollback target."""
         if step == 0 or step % self.interval != 0:
             return False
         self.store.save(step, dual_state, kind="system", valid=None,
                         fingerprint=fingerprints, async_=self.async_)
         if self.max_checkpoints:
-            self.store.gc_keep_last(self.max_checkpoints)
+            self.store.gc_keep_last(self.max_checkpoints,
+                                    keep_floor=validated_floor)
         return True
 
     def on_detection(self, event: DetectionEvent) -> RecoveryAction:

@@ -29,6 +29,19 @@ kernels instead of duplicated execution):
               modeling the time-redundant sequential backend (duplication
               doubles the wall and ABFT's single instance halves it back).
 
+Deferred-validation terms (DESIGN.md §11 — the engine's `validate_lag=D`
+window; cf. Aupy et al., "On the Combination of Silent Error Detection and
+Checkpointing": the validation interval is a tunable independent of the
+checkpoint interval):
+
+    t_step  : duration of ONE protected step (hours)
+    t_sync  : host-sync cost the per-step predicate readback adds to a step
+              (hours) — a device->host round-trip plus the pipeline bubble
+              it forces; 0 disables the deferred model
+    D       : validate_lag. Fault-free runs save t_sync*(1 - 1/D) per step;
+              a fault detected up to D steps late discards D/2 steps of
+              work in expectation (uniform fault instant inside the window)
+
 Validated against the paper's published Tables 4 and 5 in
 tests/test_temporal_model.py.
 """
@@ -54,6 +67,8 @@ class SedarParams:
     f_a: float = 0.03        # ABFT checksum overhead factor (beyond paper)
     abft_correct_frac: float = 0.8   # detected faults corrected in place
     redundancy_wall: float = 1.0     # duplicated wall / single-instance wall
+    t_step: float = 0.0      # hours per protected step (deferred model)
+    t_sync: float = 0.0      # hours of host-sync cost per per-step readback
 
     def n_ckpts(self) -> int:
         """Paper: n = time of the detection-only strategy (Eq. 3) / t_i."""
@@ -142,6 +157,62 @@ def hybrid_fa(p: SedarParams, validations: int = 0) -> float:
     """ABFT + periodic fingerprint validation (the escaped-fault backstop):
     each validation is one T_comp-class pass over the state."""
     return abft_fa(p) + validations * p.T_comp
+
+
+# ---------------------------------------------------------------------------
+# Deferred validation window (DESIGN.md §11, beyond paper)
+# ---------------------------------------------------------------------------
+
+def n_steps(p: SedarParams) -> float:
+    """Protected steps in the detection-only run (Eq.-3 time / t_step)."""
+    if p.t_step <= 0:
+        return 0.0
+    return detection_fa(p) / p.t_step
+
+
+def deferred_sync_savings(p: SedarParams, D: int) -> float:
+    """Hours removed from the fault-free run by deferring the per-step
+    predicate readback to every D-th step: each of the n_steps steps keeps
+    1/D of the sync cost (the flush still reads the ring once per window)."""
+    if D <= 1 or p.t_sync <= 0 or p.t_step <= 0:
+        return 0.0
+    return n_steps(p) * p.t_sync * (1.0 - 1.0 / D)
+
+
+def deferred_waste(p: SedarParams, D: int) -> float:
+    """Expected work discarded per fault: detection lags the faulty step by
+    U[0, D) steps (uniform fault instant inside the window), so D/2 steps
+    of optimistic progress roll back and re-execute in expectation."""
+    if D <= 1 or p.t_step <= 0:
+        return 0.0
+    return (D / 2.0) * p.t_step
+
+
+def deferred_fa(p: SedarParams, D: int) -> float:
+    """Fault-free time of detection+deferral: Eq. (3) minus the sync wins."""
+    return detection_fa(p) - deferred_sync_savings(p, D)
+
+
+def deferred_fp(p: SedarParams, D: int, X: float) -> float:
+    """Faulty time: Eq. (4) keeps the sync wins but pays the D/2 discard."""
+    return detection_fp(p, X) - deferred_sync_savings(p, D) \
+        + deferred_waste(p, D)
+
+
+def aet_deferred(p: SedarParams, D: int, mtbe: float, X: float = 0.5) -> float:
+    """Eq. (11) with the deferred-window fa/fp pair."""
+    return aet(deferred_fp(p, D, X), deferred_fa(p, D), p.T_prog, mtbe)
+
+
+def optimal_validate_lag(p: SedarParams, mtbe: float, X: float = 0.5,
+                         candidates=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
+    """argmin_D of the deferred AET. The tension: sync savings saturate as
+    (1 - 1/D) while the per-fault discard grows as D/2, so the optimum
+    rises with t_sync/t_step and falls as MTBE shrinks. Returns 1 when the
+    deferred terms are unparameterized (t_step or t_sync unset)."""
+    if p.t_step <= 0 or p.t_sync <= 0:
+        return 1
+    return min(candidates, key=lambda D: aet_deferred(p, int(D), mtbe, X))
 
 
 # ---------------------------------------------------------------------------

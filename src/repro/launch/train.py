@@ -59,7 +59,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--level", type=int, default=3, choices=(1, 2, 3))
     ap.add_argument("--replication", default="sequential",
-                    choices=("none", "sequential", "pod"))
+                    choices=("none", "sequential", "fused", "pod"))
+    ap.add_argument("--validate-lag", type=int, default=1,
+                    help="deferred validation window D (DESIGN.md §11): "
+                         "read commit predicates back every D steps")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--global-batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=16)
@@ -79,6 +82,7 @@ def main() -> None:
                           seq_len=args.seq_len, steps=args.steps,
                           warmup_steps=max(args.steps // 10, 1), lr=1e-3),
         sedar=SedarConfig(level=args.level, replication=args.replication,
+                          validate_lag=args.validate_lag,
                           checkpoint_interval=args.ckpt_interval,
                           param_validate_interval=args.ckpt_interval))
     shutil.rmtree(args.workdir, ignore_errors=True)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
+from repro.core import hostsync
 from repro.core.detection import DetectionEvent, SedarSafeStop
 from repro.core.engine import BoundarySchedule, SedarEngine
 from repro.core.fingerprint import (pytree_fingerprint,
@@ -70,7 +71,9 @@ class SedarServer:
         # replica-free backends ("abft"/"hybrid", DESIGN.md §10) serve from
         # ONE decode state; hybrid additionally re-fingerprints the resident
         # {cache, tok} at the FSC cadence to catch at-rest cache corruption
-        # that checksummed kernels cannot see.
+        # that checksummed kernels cannot see. "fused" (DESIGN.md §11) runs
+        # both decode replicas in one launch — token emission itself is the
+        # only per-step readback left.
         backend = backend or ("sequential" if dual else "none")
         self.backend = backend
         fsc_interval = (int(run_cfg.sedar.param_validate_interval)
@@ -144,11 +147,16 @@ class SedarServer:
                 except SedarSafeStop:
                     rep.stopped = True
                     break
-                if int(np.asarray(dual["r0"]["pos"])) > pos:
-                    out.append(np.asarray(dual["r0"]["tok"]))
+                if hostsync.read_int(eng.executor.peek(dual, "pos"),
+                                     label="decode_pos") > pos:
+                    out.append(hostsync.read_scalar(
+                        eng.executor.peek(dual, "tok"), label="token_emit"))
                     pos += 1
                 continue
-            out.append(np.asarray(dual["r0"]["tok"]))
+            # token emission is the product — the ONE per-step readback the
+            # serving hot path keeps (validated by the commit gate above)
+            out.append(hostsync.read_scalar(eng.executor.peek(dual, "tok"),
+                                            label="token_emit"))
             pos += 1
 
         rep.detections = list(eng.detections)

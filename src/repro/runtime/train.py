@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
+from repro.core import hostsync
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
                                   make_pod_comparator, make_pod_injector)
 from repro.core.engine import SedarEngine
@@ -105,7 +106,8 @@ class SedarTrainer:
             recovery=self.recovery, watchdog=self.watchdog,
             inj_spec=inj_spec, inj_flag=self.inj_flag,
             init_fn=self.init_dual, notify=self.notify,
-            delay_source=lambda: self.toe_delay)
+            delay_source=lambda: self.toe_delay,
+            donate=run_cfg.train.donate_state)
 
     # -- state ---------------------------------------------------------------
 
@@ -116,14 +118,10 @@ class SedarTrainer:
                 "step": jnp.zeros((), jnp.int32)}
 
     def init_dual(self, seed: Optional[int] = None):
-        s = self.init_state(seed)
-        if self.backend == "sequential":
-            return {"r0": s, "r1": jax.tree.map(jnp.copy, s)}
-        if self.backend in ("abft", "hybrid") and hasattr(self, "engine"):
-            # route through the executor so its hybrid fingerprint baseline
-            # resets along with the state (restart-from-scratch path)
-            return self.engine.executor.init_dual(s)
-        return {"r0": s}   # pod / vote / none: one physical copy per pod
+        # the executor owns the dual representation ({"r0","r1"} images,
+        # {"s"} stacked, {"r0"} per-pod) and any baseline state it keeps
+        # (e.g. the hybrid fingerprint baseline on restart-from-scratch)
+        return self.engine.executor.init_dual(self.init_state(seed))
 
     # -- jitted step functions ------------------------------------------------
 
@@ -222,8 +220,19 @@ class SedarTrainer:
 
     # -- driver ---------------------------------------------------------------
 
+    def _host_step(self, dual) -> int:
+        """ONE readback of the authoritative (device) step counter — paid at
+        run start and after recoveries, never in the fault-free loop."""
+        return hostsync.read_int(self.engine.executor.peek(dual, "step"),
+                                 label="step_counter")
+
     def run(self, num_steps: int, dual=None, max_wall_steps: Optional[int] = None
             ) -> "tuple[dict, TrainReport]":
+        """The zero-sync outer loop (DESIGN.md §11): the step counter is
+        tracked host-side (committed outcomes advance it; recoveries resync
+        it from the device once), per-step losses stay on device in
+        `aux_buf` and drain in one batched transfer at the end — a
+        fault-free protected step performs no device->host readback."""
         rep = TrainReport()
         t0 = time.time()
         eng = self.engine
@@ -231,13 +240,48 @@ class SedarTrainer:
         dual = dual or self.init_dual()
         budget = max_wall_steps or (6 * num_steps + 60)
         executed = 0
+        step = self._host_step(dual)
+        step0 = step
+        # Loss bookkeeping: one device scalar per committed step, drained in
+        # batched transfers (never one sync per step). `drained` holds the
+        # host floats already fetched; the invariant `len(drained) +
+        # len(aux_buf) == step - step0` lets a rollback truncate the record
+        # so rep.losses matches the DELIVERED trajectory (the replay
+        # re-records the window) instead of keeping corrupted-window losses.
+        drained: List[float] = []
+        aux_buf: List[Any] = []
 
-        while int(np.asarray(dual["r0"]["step"])) < num_steps:
+        def drain():
+            drained.extend(float(a) for a in
+                           hostsync.batched_get(aux_buf, label="loss_drain"))
+            aux_buf.clear()
+
+        def truncate_to(n_keep: int):
+            if n_keep <= len(drained):
+                del drained[n_keep:]
+                aux_buf.clear()
+            else:
+                del aux_buf[n_keep - len(drained):]
+
+        while True:
+            if step >= num_steps:
+                # drain the deferred window before declaring completion: an
+                # optimistic commit inside the last D steps may still fail
+                event = eng.flush_deferred()
+                if event is None:
+                    break
+                try:
+                    dual = eng.on_detection(event, dual)
+                except SedarSafeStop:
+                    rep.stopped = True
+                    break
+                step = self._host_step(dual)
+                truncate_to(step - step0)
+                continue
             if executed >= budget:
                 rep.stopped = True
                 break
             executed += 1
-            step = int(np.asarray(dual["r0"]["step"]))
             batch = {k: jnp.asarray(v) for k, v in
                      self.data.batch(step).items()}
             outcome = eng.run_protected_step(dual, batch, step)
@@ -245,7 +289,8 @@ class SedarTrainer:
             # aux is None when the executor refused the step before running
             # it (hybrid resident-state check) — there is no loss to record
             if outcome.committed and outcome.aux is not None:
-                rep.losses.append(float(np.asarray(outcome.aux)))
+                aux_buf.append(outcome.aux)
+                step += 1
             if outcome.event is not None:
                 try:
                     dual = eng.on_detection(outcome.event, dual)
@@ -257,23 +302,31 @@ class SedarTrainer:
                 if (eng.recoveries
                         and eng.recoveries[-1]["kind"] == "abft_correct"
                         and outcome.aux is not None):
-                    rep.losses.append(float(np.asarray(outcome.aux)))
-                continue
+                    aux_buf.append(outcome.aux)
+                step = self._host_step(dual)
+                truncate_to(step - step0)
+            elif len(aux_buf) >= 4096 and not eng.pending_validation:
+                # bound the live device buffers: piggyback one batched
+                # fetch on a step whose window is already flushed (no
+                # extra sync inside a deferred window)
+                drain()
 
         # final validation (paper: final results comparison)
         if not rep.stopped:
-            event = eng.validate_final(dual,
-                                       int(np.asarray(dual["r0"]["step"])))
+            event = eng.validate_final(dual, step)
             if event is not None:
                 try:
                     dual = eng.on_detection(event, dual)
                 except SedarSafeStop:
                     rep.stopped = True
+        drain()
+        rep.losses = drained
         rep.detections = list(eng.detections)
         rep.recoveries = list(eng.recoveries)
         rep.checkpoints = list(eng.checkpoints)
-        rep.steps_completed = int(np.asarray(dual["r0"]["step"]))
-        rep.final_state_fp = np.asarray(self._state_fp(dual["r0"]))
+        rep.steps_completed = self._host_step(dual)
+        rep.final_state_fp = hostsync.read_scalar(
+            self._state_fp(eng.executor.primary(dual)), label="final_fp")
         # durability barrier: async checkpoint writers are daemon threads —
         # without this, process exit can strand .tmp staging dirs and the
         # on-disk chain is shorter than rep.checkpoints claims

@@ -122,3 +122,34 @@ def test_property_latest_is_max(tmp_path_factory, steps):
     for s in steps:
         store.save(s, _state(s))
     assert store.latest() == max(steps)
+
+
+def test_save_issues_one_transfer_batch(tmp_path):
+    """Satellite regression (DESIGN.md §11): a 100+-leaf tree is copied to
+    host in ONE transfer batch — not one blocking round-trip per leaf."""
+    from repro.core import hostsync
+    store = CheckpointStore(str(tmp_path))
+    big = {f"leaf_{i:03d}": jnp.full((4, 3), float(i), jnp.float32)
+           for i in range(120)}
+    with hostsync.count_transfers() as st:
+        store.save(7, big)
+    assert st.batches == 1
+    assert st.by_label == {"checkpoint_save": 120}
+    r = store.restore(7, jax.tree.map(np.asarray, big))
+    for k in big:
+        np.testing.assert_array_equal(np.asarray(big[k]), r[k])
+
+
+def test_async_save_transfer_completes_before_return(tmp_path):
+    """async_=True defers serialization to the writer thread but the D2H
+    copy finishes on the calling thread — the caller may donate (or delete)
+    the device buffers right after save() returns. `delete()` actually
+    invalidates the buffer (donation does on accelerators), so a regression
+    that moves the device_get onto the writer thread fails loudly here."""
+    store = CheckpointStore(str(tmp_path))
+    x = jnp.arange(64, dtype=jnp.float32)
+    store.save(3, {"x": x}, async_=True)
+    x.delete()                 # source buffer gone before the writer runs
+    store.wait()
+    r = store.restore(3, {"x": np.zeros(64, np.float32)})
+    np.testing.assert_array_equal(r["x"], np.arange(64, dtype=np.float32))

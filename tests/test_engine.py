@@ -412,3 +412,80 @@ def test_train_serve_identical_event_streams(tmp_workdir):
     assert tr_rep.recoveries[0]["rollbacks"] == 1
     assert sv_rep.retries == 1
     np.testing.assert_array_equal(toks, clean)
+
+
+# -- hot-path satellites (DESIGN.md §11) --------------------------------------
+
+def test_sequential_fast_path_never_blocks(tmp_workdir, monkeypatch):
+    """The fast path must not `block_until_ready` just to measure wall time:
+    per-replica sync happens only while the TOE machinery is armed (a
+    scenario delay is pending or the watchdog was armed explicitly)."""
+    import repro.core.engine as eng_mod
+    calls = {"n": 0}
+    real = jax.block_until_ready
+
+    def spy(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(eng_mod.jax, "block_until_ready", spy)
+    eng = _toy_engine(tmp_workdir, 1)
+    dual, stopped = _drive(eng, 4)
+    assert not stopped
+    assert calls["n"] == 0
+    assert eng.executor.ema_step_s is not None and eng.executor.ema_step_s > 0
+
+    # arming the watchdog re-enables the per-replica timing sync
+    calls["n"] = 0
+    eng2 = _toy_engine(tmp_workdir + "_armed", 1)
+    eng2.executor.watchdog.arm()
+    _drive(eng2, 2)
+    assert calls["n"] > 0
+
+
+def test_sequential_delay_source_arms_timing(tmp_workdir):
+    """A pending scenario delay implies TOE timing — the existing watchdog
+    tests exercise the detection itself; this pins the arming condition."""
+    eng = _toy_engine(tmp_workdir, 1, delay_source=lambda: {(1, 1): 0.0})
+    assert eng.executor._timing_armed({(1, 1): 0.0})
+    assert not eng.executor._timing_armed({})
+
+
+def test_pod_validated_fp_reuses_validate_reduction(tmp_workdir):
+    """Satellite bugfix: validated_fp must reuse the all-replica equality
+    reduction validate() just computed on the same state instead of
+    re-running the all-gather compare."""
+    from repro.core.engine import PodExecutor
+    calls = {"n": 0}
+
+    def pod_validate(state):
+        calls["n"] += 1
+        return jnp.asarray(True), jnp.zeros((2, 1, 4), jnp.uint32)
+
+    ex = PodExecutor(pod_step=None, pod_validate=pod_validate,
+                     state_fp_fn=lambda s: pytree_fingerprint({"x": s["x"]}))
+    dual = {"r0": {"x": jnp.zeros((4,), jnp.float32)}}
+    assert ex.validate(dual, 4) is None
+    fp0, equal = ex.validated_fp(dual)
+    assert equal and calls["n"] == 1          # ONE reduction for both calls
+    # a different committed state invalidates the cache
+    dual2 = {"r0": {"x": jnp.ones((4,), jnp.float32)}}
+    ex.validate(dual2, 8)
+    assert calls["n"] == 2
+
+
+def test_sequential_validated_fp_reuses_validate_reduction(tmp_workdir):
+    calls = {"n": 0}
+    fast = jax.jit(lambda s: pytree_fingerprint_fused({"x": s["x"]}))
+
+    def counting_fast(s):
+        calls["n"] += 1
+        return fast(s)
+
+    eng = _toy_engine(tmp_workdir, 1)
+    eng.executor.fast_state_fp_fn = counting_fast
+    dual = eng.init_dual()
+    assert eng.executor.validate(dual, 4) is None
+    _, equal = eng.executor.validated_fp(dual)
+    assert equal
+    assert calls["n"] == 2                    # one pass per replica, once

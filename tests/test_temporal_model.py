@@ -81,3 +81,52 @@ def test_advisor():
     assert a.level in (2, 3)
     a2 = advise(p, mtbe_hours=1e7)
     assert a2.strategy == "detection"
+
+
+# -- deferred validation window (DESIGN.md §11) -------------------------------
+
+def _deferred_params():
+    import dataclasses
+    p = tm.PAPER_TABLE3["JACOBI"]
+    t_step = tm.detection_fa(p) / 1e4          # 10k protected steps
+    return dataclasses.replace(p, t_step=t_step, t_sync=0.05 * t_step)
+
+
+def test_deferred_d1_is_identity():
+    """D=1 is the classic sync-per-compare strategy: no savings, no waste."""
+    p = _deferred_params()
+    assert tm.deferred_sync_savings(p, 1) == 0.0
+    assert tm.deferred_waste(p, 1) == 0.0
+    assert tm.aet_deferred(p, 1, 20.0) == tm.aet_strategy(p, "detection", 20.0)
+
+
+def test_deferred_terms_scale():
+    """Savings saturate as (1 - 1/D); expected waste grows as D/2 steps."""
+    p = _deferred_params()
+    s8, s64 = tm.deferred_sync_savings(p, 8), tm.deferred_sync_savings(p, 64)
+    assert 0 < s8 < s64 < tm.n_steps(p) * p.t_sync
+    assert tm.deferred_waste(p, 8) == 4.0 * p.t_step
+    assert tm.deferred_fa(p, 8) < tm.detection_fa(p)
+
+
+def test_optimal_lag_tradeoff():
+    """The advised window shrinks as faults get frequent (small MTBE) and
+    collapses to 1 when the sync cost is unparameterized."""
+    import dataclasses
+    p = _deferred_params()
+    d_risky = tm.optimal_validate_lag(p, 2.0)
+    d_safe = tm.optimal_validate_lag(p, 500.0)
+    assert 1 <= d_risky <= d_safe
+    assert d_safe > 1
+    assert tm.optimal_validate_lag(tm.PAPER_TABLE3["JACOBI"], 500.0) == 1
+
+
+def test_advisor_reports_validate_lag():
+    from repro.core.policy import advise
+    p = _deferred_params()
+    a = advise(p, mtbe_hours=20.0)
+    assert a.validate_lag > 1
+    assert a.deferred_aet_hours > 0
+    assert "validate_lag" in a.notes
+    # unparameterized params keep the classic recommendation
+    assert advise(tm.PAPER_TABLE3["JACOBI"], 20.0).validate_lag == 1

@@ -1,0 +1,192 @@
+"""Checkpoint-tier cost benchmark (DESIGN.md §12).
+
+Measures, on the smoke-reduced paper test-app state:
+
+  * save latency per tier (device ring copy / host ring D2H / disk full /
+    disk delta / disk compressed / partner mirror),
+  * restore latency per tier (the planner's t_r terms),
+  * delta vs full bytes written when < 1/3 of the leaves change per
+    interval (acceptance: >= 3x shrink),
+  * rollback-to-step wall time through the TieredCheckpointer planner,
+    with the disk-read count per tier (Tier 0/1 must be zero).
+
+`checkpoint_*` CSV rows always print; when `JSON_PATH` is set (run.py
+--json) the full table lands in BENCH_checkpoint.json next to the
+protected-step trajectory CI uploads per commit.
+"""
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+JSON_PATH = None          # set by run.py --json
+
+N_REPS = 5
+
+
+def _best(fn, reps=N_REPS):
+    """Best-of wall seconds (container timings are noisy)."""
+    best = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def _paper_state():
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import build_model
+    cfg = reduce_for_smoke(get_config("paper-testapp"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    leaves = jax.tree_util.tree_flatten(params)[0]
+    n_bytes = sum(np.asarray(l).nbytes for l in leaves)
+    return params, len(leaves), n_bytes
+
+
+def _mutate_fraction(state, frac):
+    """Return a copy with ~frac of the leaves changed (delta scenario)."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    n_change = max(int(len(leaves) * frac), 1)
+    out = [l + 1.0 if i < n_change else l for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out), n_change
+
+
+def main() -> None:
+    from repro.checkpoint import (CheckpointStore, DeltaCheckpointStore,
+                                  DeviceRing, HostRing, TieredCheckpointer,
+                                  TierSchedule, count_disk_reads)
+    from repro.core import hostsync
+
+    state, n_leaves, n_bytes = _paper_state()
+    template = jax.tree.map(np.asarray, state)
+    td = tempfile.mkdtemp(prefix="bench_ckpt_")
+    rows = []
+
+    def note(name, seconds, derived=""):
+        rows.append({"name": name, "us": round(seconds * 1e6, 1),
+                     "derived": derived})
+        emit(f"checkpoint_{name}", seconds * 1e6, derived)
+
+    # -- save latency per tier ------------------------------------------------
+    dev = DeviceRing(slots=4)
+    note("save_device",
+         _best(lambda: (dev.save(1, state),
+                        jax.block_until_ready(dev.restore(1)))),
+         f"ring copy+touch, {n_leaves} leaves")
+
+    host = HostRing(slots=4)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+
+    def host_save():
+        host.save(1, hostsync.batched_get(leaves, label="bench"), treedef)
+
+    note("save_host", _best(host_save), "one batched D2H, no serialization")
+
+    disk = CheckpointStore(os.path.join(td, "disk"))
+    note("save_disk_full",
+         _best(lambda: disk.save(1, state, async_=False)),
+         f"{n_bytes} logical bytes serialized+fsync")
+
+    comp = CheckpointStore(os.path.join(td, "comp"), compress=True)
+    comp.save(1, state, async_=False)
+    note("save_disk_compressed",
+         _best(lambda: comp.save(1, state, async_=False)),
+         f"bytes_on_disk={comp.manifest(1).bytes_on_disk}")
+
+    # -- delta vs full bytes (acceptance: >= 3x with < 1/3 leaves changed) ---
+    delta = DeltaCheckpointStore(os.path.join(td, "delta"))
+    delta.save(1, state, async_=False)
+    full_bytes = delta.manifest(1).bytes_on_disk
+    v2, n_changed = _mutate_fraction(state, 0.25)
+    note("save_disk_delta",
+         _best(lambda: delta.save(2, v2, async_=False)),
+         f"{n_changed}/{n_leaves} leaves changed")
+    delta_bytes = delta.manifest(2).bytes_on_disk
+    shrink = full_bytes / max(delta_bytes, 1)
+    note("delta_bytes_shrink", 0.0,
+         f"full={full_bytes}B delta={delta_bytes}B shrink={shrink:.1f}x")
+
+    # -- restore latency per tier --------------------------------------------
+    note("restore_device",
+         _best(lambda: jax.block_until_ready(
+             jax.tree_util.tree_flatten(dev.restore(1))[0])))
+    note("restore_host",
+         _best(lambda: jax.block_until_ready(
+             jax.tree_util.tree_flatten(
+                 jax.tree.map(jax.numpy.asarray,
+                              host.restore(1, template)))[0])))
+    note("restore_disk_full", _best(lambda: disk.restore(1, template)),
+         "deserialize + digest verify")
+    note("restore_disk_delta", _best(lambda: delta.restore(2, template)),
+         "chain-resolved leaves")
+    note("restore_disk_compressed", _best(lambda: comp.restore(1, template)))
+
+    # -- rollback-to-step wall time through the planner ----------------------
+    sched = TierSchedule(device=1, host=4, disk=8)
+    tc = TieredCheckpointer(sched, device_slots=4, host_slots=4,
+                            disk_store=CheckpointStore(os.path.join(td, "t")))
+    for step in range(1, 9):
+        tc.save(step, state, async_=False)
+    reads = {}
+    for tier, version in (("device", 8), ("host", 4), ("disk", 8)):
+        def rollback(v=version, t=tier):
+            with count_disk_reads() as dr:
+                st, info = tc.restore(v, template)
+                assert info["tier"] == t, info
+            reads[t] = dr.reads
+            jax.block_until_ready(jax.tree_util.tree_flatten(
+                jax.tree.map(jax.numpy.asarray, st))[0])
+
+        if tier == "host":
+            tc.device.clear()          # force the planner down a tier
+        if tier == "disk":
+            tc.host.clear()
+        note(f"rollback_{tier}", _best(rollback),
+             f"disk_reads={reads[tier]}")
+
+    shutil.rmtree(td, ignore_errors=True)
+
+    if JSON_PATH:
+        by = {r["name"]: r for r in rows}
+        payload = {
+            "bench": "checkpoint",
+            "app": "paper-testapp (smoke-reduced)",
+            "n_leaves": n_leaves,
+            "logical_bytes": n_bytes,
+            "jax_backend": jax.default_backend(),
+            "results": rows,
+            "delta_shrink_x": round(shrink, 2),
+            # acceptance: delta >= 3x smaller with < 1/3 leaves changed,
+            # and ring rollbacks never touch disk
+            "delta_meets_3x": shrink >= 3.0,
+            "ring_rollback_disk_reads": {t: reads.get(t) for t in
+                                         ("device", "host")},
+            "zero_disk_read_ring_rollback": all(
+                reads.get(t) == 0 for t in ("device", "host")),
+            "save_us_by_tier": {
+                "device": by["save_device"]["us"],
+                "host": by["save_host"]["us"],
+                "disk": by["save_disk_full"]["us"],
+                "disk_delta": by["save_disk_delta"]["us"],
+            },
+            "restore_us_by_tier": {
+                "device": by["restore_device"]["us"],
+                "host": by["restore_host"]["us"],
+                "disk": by["restore_disk_full"]["us"],
+            },
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

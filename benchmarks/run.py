@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
     abft_*     — checksummed-kernel detection vs duplicated execution
     protected_step_* — hot-path steps/s + host-syncs/step (DESIGN.md §11);
                  --json additionally writes BENCH_protected_step.json
+    checkpoint_* — per-tier save/restore latency, delta vs full bytes,
+                 rollback wall time (DESIGN.md §12); --json writes
+                 BENCH_checkpoint.json
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -26,6 +29,7 @@ MODULES = [
     "benchmarks.bench_fingerprint",
     "benchmarks.bench_abft",
     "benchmarks.bench_protected_step",
+    "benchmarks.bench_checkpoint",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -39,6 +43,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_fingerprint",
     "benchmarks.bench_abft",
     "benchmarks.bench_protected_step",
+    "benchmarks.bench_checkpoint",
 ]
 
 
@@ -52,8 +57,10 @@ def main() -> None:
                          "output (consumed by the CI perf-artifact upload)")
     args = ap.parse_args()
     if args.json:
+        import benchmarks.bench_checkpoint as bck
         import benchmarks.bench_protected_step as bps
         bps.JSON_PATH = "BENCH_protected_step.json"
+        bck.JSON_PATH = "BENCH_checkpoint.json"
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:

@@ -47,9 +47,17 @@ def run(level: int, profile: dict, workdir: str, inject: bool):
     rc = RunConfig(
         model=profile["model"],
         train=profile["train"],
+        # 3-tier checkpoint hierarchy (DESIGN.md §12): an on-device snapshot
+        # ring every step (instant rollback, zero disk reads), a host-RAM
+        # ring, and the durable async disk store with delta checkpoints —
+        # the restore planner picks the cheapest tier holding a pre-fault
+        # version
         sedar=SedarConfig(level=level, replication="sequential",
                           checkpoint_interval=profile["ckpt"],
-                          param_validate_interval=profile["validate"]))
+                          param_validate_interval=profile["validate"],
+                          ckpt_tiers="device,host,disk",
+                          device_ring_slots=4, host_ring_slots=4,
+                          ckpt_delta=True))
     spec = None
     if inject:
         spec = InjectionSpec(leaf_idx=3, flat_idx=17, bit=21,
@@ -63,8 +71,12 @@ def run(level: int, profile: dict, workdir: str, inject: bool):
         print(f"    detection: step={e.step} boundary={e.boundary} "
               f"effect={e.effect}")
     for r in rep.recoveries:
-        print(f"    recovery:  {r['kind']} -> ckpt@{r['step']} "
+        tier = f" from tier {r['tier']!r}" if r.get("tier") else ""
+        print(f"    recovery:  {r['kind']} -> ckpt@{r['step']}{tier} "
               f"(rollback #{r['rollbacks']})")
+    if inject and rep.restored_from:
+        print(f"    planner: restore served by tier(s) "
+              f"{rep.restored_from} — ring hits need zero disk reads")
     return rep
 
 

@@ -1,4 +1,10 @@
+from repro.checkpoint.delta import DeltaCheckpointStore
 from repro.checkpoint.store import (CheckpointCorruptionError, CheckpointStore,
-                                    Manifest)
+                                    DiskReadStats, Manifest, count_disk_reads)
+from repro.checkpoint.tiers import (DeviceRing, HostRing, TieredCheckpointer,
+                                    TierSchedule, make_tiered, parse_tiers)
 
-__all__ = ["CheckpointCorruptionError", "CheckpointStore", "Manifest"]
+__all__ = ["CheckpointCorruptionError", "CheckpointStore",
+           "DeltaCheckpointStore", "DeviceRing", "DiskReadStats", "HostRing",
+           "Manifest", "TierSchedule", "TieredCheckpointer",
+           "count_disk_reads", "make_tiered", "parse_tiers"]

@@ -1,0 +1,129 @@
+"""Delta checkpoints: per-leaf digest dedup against the previous version.
+
+The L2 chain re-serializes the FULL dual state every interval even when the
+step only touched a fraction of it (frozen towers, sparse expert updates,
+optimizer states on a slower cadence). `DeltaCheckpointStore` compares each
+leaf's content digest against the newest prior version at save time:
+
+  * changed leaves are written as usual;
+  * unchanged leaves become manifest REFERENCES (`Manifest.leaf_refs`):
+    `refs[str(i)] = base_step`, where `base_step` is the version that
+    physically holds the bytes. References are resolved transitively at
+    SAVE time (a ref always points at the root holder), so restore is a
+    one-hop lookup per leaf — never a chain walk — and the dependency
+    graph stays flat: version v references only physical leaves.
+
+Restore digest-checks every leaf (referenced or local) against THIS
+version's manifest, so a base that was overwritten with different bytes
+after the delta was cut raises `CheckpointCorruptionError` instead of
+silently stitching stale data in (the tiered planner then falls back to
+the partner/host tiers).
+
+GC must never strand a reference: `gc_keep_last` / `delete_others_than`
+extend their keep-set with every step referenced by a surviving manifest.
+The L2 "none of the checkpoints can be erased" default (max_checkpoints=0)
+never GCs anyway; bounded chains retain the bases as extra pinned versions
+(recorded as such — the chain is still `steps()`-complete).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.store import (CheckpointStore, Manifest, _gc_keep_set,
+                                    _leaf_digest)
+
+
+class DeltaCheckpointStore(CheckpointStore):
+    """Drop-in `CheckpointStore` whose versions share unchanged leaves."""
+
+    def __init__(self, directory: str, compress: bool = False):
+        super().__init__(directory, compress=compress)
+        # (step, digests, refs) of the newest version saved by THIS process;
+        # saves are issued from the single driver thread, so a plain
+        # attribute is race-free. Rollback replays (re-cutting a version <=
+        # the cache) and fresh processes re-derive the base from disk.
+        self._last: Optional[Tuple[int, List[List[int]], Dict[str, int]]] = None
+
+    # -- write ------------------------------------------------------------------
+
+    def _base_for(self, step: int):
+        """Newest version strictly older than `step` to delta against, as
+        (base_step, base_digests, base_refs); None -> full checkpoint."""
+        if self._last is not None and self._last[0] < step:
+            return self._last
+        prior = [s for s in self.steps() if s < step]
+        if not prior:
+            return None
+        man = self.manifest(prior[-1])
+        if man.leaf_digests is None:
+            return None                    # pre-digest base: cannot dedup
+        return prior[-1], man.leaf_digests, man.leaf_refs or {}
+
+    def save(self, step: int, state, *, kind: str = "system",
+             valid: Optional[bool] = None, fingerprint=None,
+             async_: bool = False, extra: Optional[dict] = None,
+             compress: Optional[bool] = None,
+             host_leaves: Optional[List[np.ndarray]] = None) -> None:
+        host_leaves = self._host_leaves(state, host_leaves)
+        # digests are computed on the CALLING thread (the delta plan needs
+        # them before the write is enqueued); _write sees them pre-filled
+        digests = [_leaf_digest(np.asarray(a)) for a in host_leaves]
+        refs: Dict[str, int] = {}
+        base = self._base_for(step)
+        if base is not None:
+            base_step, base_digests, base_refs = base
+            for i, d in enumerate(digests):
+                if i < len(base_digests) and d == base_digests[i]:
+                    # transitive resolution: point at the ROOT holder
+                    refs[str(i)] = int(base_refs.get(str(i), base_step))
+        man = Manifest(step=step, kind=kind, valid=valid,
+                       fingerprint=None if fingerprint is None
+                       else np.asarray(fingerprint).astype(np.int64).tolist(),
+                       n_leaves=len(host_leaves), extra=extra or {},
+                       leaf_digests=digests, leaf_refs=refs or None)
+        self._last = (step, digests, refs)
+        self._enqueue(step, host_leaves, man,
+                      self.compress if compress is None else bool(compress),
+                      async_)
+
+    # -- delete / GC ------------------------------------------------------------
+
+    def delete(self, step: int) -> None:
+        """Deleting the cached delta base must invalidate the cache, or the
+        next save would emit manifest refs to a nonexistent version (every
+        deletion path — delete_others_than, gc_keep_last, clear — funnels
+        through here)."""
+        super().delete(step)
+        if self._last is not None and self._last[0] == step:
+            self._last = None
+
+    def _bases_of(self, keep: set) -> set:
+        """Every step physically holding a leaf some kept version refs."""
+        out = set()
+        for s in keep:
+            try:
+                man = self.manifest(s)
+            except FileNotFoundError:
+                continue
+            for ref in (man.leaf_refs or {}).values():
+                out.add(int(ref))
+        return out
+
+    def delete_others_than(self, keep_step: int) -> None:
+        keep = {keep_step} | self._bases_of({keep_step})
+        for s in self.steps():
+            if s not in keep:
+                self.delete(s)
+
+    def gc_keep_last(self, n: int, keep_floor: Optional[int] = None) -> None:
+        if n <= 0:
+            return
+        steps = self.steps()
+        keep = _gc_keep_set(steps, n, keep_floor)
+        keep |= self._bases_of(keep)
+        for s in steps:
+            if s not in keep:
+                self.delete(s)

@@ -4,6 +4,7 @@ Layout:
     <dir>/ckpt_00001234/           one version per step
         manifest.json              step, kind, valid flag, fingerprint, leaf meta
         leaf_00000.npy ...         one npy per pytree leaf (tree_flatten order)
+        leaf_00000.npz ...         compressed form (save(..., compress=True))
     <dir>/ckpt_00001234.tmp/       staging dir (renamed atomically on commit)
 
 Properties required by the paper's recovery algorithms:
@@ -17,16 +18,22 @@ Properties required by the paper's recovery algorithms:
   * async mode: the device->host copy happens synchronously (cheap, and the
     on-device buffers may be donated right after), serialization + fsync +
     rename run on a background thread — compute/checkpoint overlap.
+
+Every byte read back from disk on the restore path flows through
+`count_disk_reads()` — the Tier-0/1 "zero disk reads" property of the
+tiered hierarchy (DESIGN.md §12) is asserted through this hook, exactly
+like the zero-sync property is asserted through `hostsync.count_transfers`.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
 import shutil
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
@@ -46,6 +53,16 @@ class Manifest:
     # granularity — it is NOT leaf-comparable against the stored payload,
     # which for L2 is the full dual state.)
     leaf_digests: Optional[List[List[int]]] = None
+    # Delta checkpoints (delta.py): leaves whose content is unchanged since a
+    # previous version are not rewritten — `leaf_refs[str(i)]` names the step
+    # that physically holds leaf i's bytes (always resolved to the ROOT
+    # holder at save time, so restore is one hop, never a chain walk).
+    leaf_refs: Optional[Dict[str, int]] = None
+    # Payload accounting: bytes of leaf data this version wrote to disk
+    # (delta versions only count the changed leaves) and whether the leaf
+    # files are np.savez_compressed.
+    bytes_on_disk: Optional[int] = None
+    compressed: bool = False
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -59,7 +76,45 @@ class CheckpointCorruptionError(RuntimeError):
     """A restored leaf does not match its save-time digest: the on-disk
     payload was corrupted after the atomic commit. L2/L3's 'valid
     checkpoint' guarantee requires failing loudly here — silently restoring
-    a corrupted state would re-seed every replica from it."""
+    a corrupted state would re-seed every replica from it. (The tiered
+    hierarchy catches this and falls back to the partner/host tiers —
+    checkpoint/tiers.py.)"""
+
+
+# ---------------------------------------------------------------------------
+# Disk-read accounting (the Tier-0/1 zero-disk-read property hook)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DiskReadStats:
+    """Counts of restore-path disk reads inside a `count_disk_reads` region."""
+
+    reads: int = 0
+    by_label: Dict[str, int] = field(default_factory=dict)
+
+    def note(self, label: str, items: int = 1) -> None:
+        self.reads += items
+        self.by_label[label] = self.by_label.get(label, 0) + items
+
+
+_read_active: List[DiskReadStats] = []
+
+
+@contextlib.contextmanager
+def count_disk_reads() -> Iterator[DiskReadStats]:
+    """Count every checkpoint-payload disk read issued inside the block
+    (leaf loads and manifest loads on the restore path)."""
+    st = DiskReadStats()
+    _read_active.append(st)
+    try:
+        yield st
+    finally:
+        _read_active.remove(st)
+
+
+def _note_disk_read(label: str, items: int = 1) -> None:
+    for st in _read_active:
+        st.note(label, items)
 
 
 def _leaf_digest(arr: np.ndarray) -> List[int]:
@@ -80,9 +135,42 @@ def _ckpt_name(step: int) -> str:
     return f"ckpt_{step:08d}"
 
 
+def _write_leaf(dirpath: str, i: int, arr: np.ndarray, compress: bool) -> int:
+    """Write one leaf payload; returns bytes written."""
+    stem = os.path.join(dirpath, f"leaf_{i:05d}")
+    if compress:
+        np.savez_compressed(stem + ".npz", arr=arr)
+        return os.path.getsize(stem + ".npz")
+    np.save(stem + ".npy", arr)
+    return os.path.getsize(stem + ".npy")
+
+
+def _load_leaf(dirpath: str, i: int) -> np.ndarray:
+    """Load one leaf payload (either serialization), counting the read."""
+    stem = os.path.join(dirpath, f"leaf_{i:05d}")
+    _note_disk_read("leaf")
+    if os.path.exists(stem + ".npy"):
+        return np.load(stem + ".npy")
+    with np.load(stem + ".npz") as z:
+        return z["arr"]
+
+
+def _gc_keep_set(steps: List[int], n: int,
+                 keep_floor: Optional[int]) -> set:
+    """Keep-last-n plus the deferred-validation anchor (DESIGN.md §11): the
+    newest version with step <= keep_floor is exempt from pruning."""
+    keep = set(steps[-n:])
+    if keep_floor is not None:
+        anchored = [s for s in steps if s <= keep_floor]
+        if anchored and not any(s <= keep_floor for s in keep):
+            keep.add(anchored[-1])
+    return keep
+
+
 class CheckpointStore:
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, compress: bool = False):
         self.dir = directory
+        self.compress = compress
         os.makedirs(directory, exist_ok=True)
         self._pending: List[threading.Thread] = []
         self._lock = threading.Lock()
@@ -91,7 +179,9 @@ class CheckpointStore:
 
     def save(self, step: int, state, *, kind: str = "system",
              valid: Optional[bool] = None, fingerprint=None,
-             async_: bool = False, extra: Optional[dict] = None) -> None:
+             async_: bool = False, extra: Optional[dict] = None,
+             compress: Optional[bool] = None,
+             host_leaves: Optional[List[np.ndarray]] = None) -> None:
         """Snapshot `state` (pytree of arrays) as version `step`.
 
         The device->host copy is ONE transfer batch: non-blocking
@@ -100,36 +190,63 @@ class CheckpointStore:
         (vs the old per-leaf loop: one blocking round-trip per leaf). The
         copy completes on the calling thread — before the caller's next
         step may DONATE the very buffers being snapshotted — and only
-        serialization + fsync + rename run on the background writer."""
+        serialization + fsync + rename run on the background writer.
+
+        `host_leaves` lets the tiered checkpointer share ONE batched D2H
+        transfer between the host ring and the disk/partner tiers instead
+        of each tier paying its own; when given, `state` is not touched.
+        `compress=True` stores each leaf via np.savez_compressed (digests
+        are computed on the array CONTENT, so compressed and plain versions
+        of the same state carry identical leaf digests)."""
+        host_leaves = self._host_leaves(state, host_leaves)
+        man = Manifest(step=step, kind=kind, valid=valid,
+                       fingerprint=None if fingerprint is None
+                       else np.asarray(fingerprint).astype(np.int64).tolist(),
+                       n_leaves=len(host_leaves), extra=extra or {})
+        self._enqueue(step, host_leaves, man,
+                      self.compress if compress is None else bool(compress),
+                      async_)
+
+    @staticmethod
+    def _host_leaves(state, host_leaves):
+        if host_leaves is not None:
+            return list(host_leaves)
         # function-level import: repro.core.recovery imports this module, so
         # a module-level `from repro.core import hostsync` would make
         # `import repro.checkpoint` circular in a fresh interpreter
         from repro.core import hostsync
         leaves = jax.tree_util.tree_flatten(state)[0]
-        host_leaves = hostsync.batched_get(leaves, label="checkpoint_save")
-        man = Manifest(step=step, kind=kind, valid=valid,
-                       fingerprint=None if fingerprint is None
-                       else np.asarray(fingerprint).astype(np.int64).tolist(),
-                       n_leaves=len(host_leaves), extra=extra or {})
+        return hostsync.batched_get(leaves, label="checkpoint_save")
 
+    def _enqueue(self, step: int, host_leaves, man: Manifest,
+                 compress: bool, async_: bool) -> None:
         if async_:
-            t = threading.Thread(target=self._write, args=(step, host_leaves, man),
+            t = threading.Thread(target=self._write,
+                                 args=(step, host_leaves, man, compress),
                                  daemon=True)
             with self._lock:
                 self._pending.append(t)
             t.start()
         else:
-            self._write(step, host_leaves, man)
+            self._write(step, host_leaves, man, compress)
 
-    def _write(self, step: int, host_leaves, man: Manifest) -> None:
+    def _write(self, step: int, host_leaves, man: Manifest,
+               compress: bool = False) -> None:
         final = os.path.join(self.dir, _ckpt_name(step))
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        man.leaf_digests = [_leaf_digest(arr) for arr in host_leaves]
+        if man.leaf_digests is None:
+            man.leaf_digests = [_leaf_digest(arr) for arr in host_leaves]
+        refs = man.leaf_refs or {}
+        written = 0
         for i, arr in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+            if str(i) in refs:
+                continue                    # delta: bytes live in the base
+            written += _write_leaf(tmp, i, arr, compress)
+        man.compressed = bool(compress)
+        man.bytes_on_disk = written
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             f.write(man.to_json())
             f.flush()
@@ -139,11 +256,24 @@ class CheckpointStore:
         os.rename(tmp, final)      # atomic commit
 
     def wait(self) -> None:
-        """Barrier for async writes."""
-        with self._lock:
-            pending, self._pending = self._pending, []
-        for t in pending:
-            t.join()
+        """Barrier for async writes.
+
+        Re-checks until the pending list is empty: the naive
+        pop-then-join version returned EARLY on a second concurrent caller
+        (caller A pops the list and is still joining; caller B sees an
+        empty list and proceeds while `_write` is mid-rename) — which let
+        GC scan `steps()` against a half-committed directory. Threads are
+        only removed AFTER they are joined, so every caller blocks until
+        every write issued before its call has committed."""
+        while True:
+            with self._lock:
+                pending = list(self._pending)
+            if not pending:
+                return
+            for t in pending:
+                t.join()
+            with self._lock:
+                self._pending = [t for t in self._pending if t.is_alive()]
 
     # -- read -------------------------------------------------------------------
 
@@ -167,6 +297,7 @@ class CheckpointStore:
         return len(self.steps())
 
     def manifest(self, step: int) -> Manifest:
+        _note_disk_read("manifest")
         with open(os.path.join(self.dir, _ckpt_name(step), "manifest.json")) as f:
             return Manifest.from_json(f.read())
 
@@ -184,18 +315,23 @@ class CheckpointStore:
         the recovery algorithms assume a restored checkpoint IS the state
         that was committed, so on-disk corruption (bit rot, torn writes
         outside the atomic rename) raises `CheckpointCorruptionError`
-        instead of silently re-seeding the replicas from garbage."""
+        instead of silently re-seeding the replicas from garbage. Leaves a
+        delta version references are loaded from their root holder and
+        digest-checked against THIS version's manifest — a base overwritten
+        with different bytes after the delta was cut is detected, not
+        silently stitched in."""
         self.wait()
-        path = os.path.join(self.dir, _ckpt_name(step))
         man = self.manifest(step)
         tleaves, treedef = jax.tree_util.tree_flatten(template)
         if man.n_leaves != len(tleaves):
             raise ValueError(
                 f"checkpoint {step} has {man.n_leaves} leaves, template has "
                 f"{len(tleaves)}")
+        refs = man.leaf_refs or {}
         leaves = []
         for i, t in enumerate(tleaves):
-            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            src = os.path.join(self.dir, _ckpt_name(refs.get(str(i), step)))
+            arr = _load_leaf(src, i)
             if tuple(arr.shape) != tuple(np.shape(t)):
                 raise ValueError(f"leaf {i} shape {arr.shape} != {np.shape(t)}")
             if man.leaf_digests is not None and \
@@ -230,11 +366,7 @@ class CheckpointStore:
         if n <= 0:
             return
         steps = self.steps()
-        keep = set(steps[-n:])
-        if keep_floor is not None:
-            anchored = [s for s in steps if s <= keep_floor]
-            if anchored and not any(s <= keep_floor for s in keep):
-                keep.add(anchored[-1])
+        keep = _gc_keep_set(steps, n, keep_floor)
         for s in steps:
             if s not in keep:
                 self.delete(s)

@@ -202,6 +202,20 @@ class SedarConfig:
     checkpoint_dir: str = "/tmp/sedar_ckpt"
     max_checkpoints: int = 0          # L2 chain depth; 0 = unbounded (paper: none deleted)
     async_checkpoint: bool = True
+    # -- tiered checkpoint hierarchy (DESIGN.md §12) -------------------------
+    # comma-list of tiers (device | host | disk | partner); "disk" alone is
+    # the classic flat store. device = on-device snapshot ring (instant
+    # rollback, zero D2H/disk reads); host = host-RAM ring (one batched D2H,
+    # no serialization); partner = redundant second directory with
+    # independent digests (the Tier-2 corruption fallback).
+    ckpt_tiers: str = "disk"
+    device_ring_slots: int = 4        # Tier-0 ring capacity (versions)
+    host_ring_slots: int = 4          # Tier-1 ring capacity (versions)
+    device_ckpt_interval: int = 1     # Tier-0 cadence (steps; ~free)
+    host_ckpt_interval: int = 0       # Tier-1 cadence; 0 -> checkpoint_interval
+    partner_ckpt_interval: int = 0    # Tier-3 cadence; 0 -> checkpoint_interval
+    ckpt_delta: bool = False          # L2 delta checkpoints (manifest leaf refs)
+    ckpt_compress: bool = False       # np.savez_compressed leaf payloads
     toe_timeout_s: float = 120.0      # replica-heartbeat timeout (TOE detection)
     app_level_dtype: str = "float32"  # L3 payload dtype for params ("bfloat16" halves t_ca)
     fused_fingerprint: bool = True    # fuse fingerprint into the update step (beyond-paper opt)

@@ -741,8 +741,13 @@ class SedarEngine:
             self._ring.append((step, pred))
 
         new_step = step + 1
+        # a DURABLE checkpoint tier due at new_step also forces the flush
+        # (§11 retention rule extended to the hierarchy); pure device-ring
+        # saves do not — they snapshot optimistically inside the window
+        sync_due = getattr(self.recovery, "sync_due", None)
         boundary_due = (self.schedule.validate_due(new_step)
-                        or self.schedule.checkpoint_due(new_step))
+                        or self.schedule.checkpoint_due(new_step)
+                        or (sync_due is not None and sync_due(new_step)))
         if len(self._ring) >= self.validate_lag or boundary_due:
             event = self.flush_deferred()
             if event is not None:
@@ -819,9 +824,9 @@ class SedarEngine:
             return repaired
 
         action: RecoveryAction = self.recovery.on_detection(event)
-        self.recoveries.append({"kind": action.kind, "step": action.step,
-                                "rollbacks": action.rollbacks,
-                                "at": event.step})
+        record = {"kind": action.kind, "step": action.step,
+                  "rollbacks": action.rollbacks, "at": event.step}
+        self.recoveries.append(record)
         if action.kind == "stop":
             raise SedarSafeStop(event)
         if action.kind == "retry":
@@ -835,10 +840,20 @@ class SedarEngine:
         if isinstance(self.recovery, ValidatedCheckpointRecovery):
             # L3 stores ONE validated state; re-seed every replica from it
             single = self.recovery.restore(action, self.executor.primary(dual))
+            self._merge_restore_info(record)
             single = jax.tree.map(jnp.asarray, single)
             return self.executor.adopt_single(single)
         restored = self.recovery.restore(action, dual)
+        self._merge_restore_info(record)
         return jax.tree.map(jnp.asarray, restored)
+
+    def _merge_restore_info(self, record: Dict[str, Any]) -> None:
+        """Fold the restore planner's outcome (tier, version, any corruption
+        fallbacks — DESIGN.md §12) into the already-appended recovery
+        record, so drivers report WHERE the state came back from."""
+        info = getattr(self.recovery, "last_restore_info", None)
+        if info:
+            record.update(info)
 
     # -- internals ------------------------------------------------------------
 
@@ -851,13 +866,16 @@ class SedarEngine:
     def _maybe_checkpoint(self, dual, step: int) -> Optional[DetectionEvent]:
         r = self.recovery
         if isinstance(r, MultiCheckpointRecovery):
-            if step == 0 or r.interval <= 0 or step % r.interval != 0:
+            if step == 0 or not r.due(step):
                 # the cadence check runs HERE so the off-boundary steps do
                 # not pay the state-fingerprint readback (it used to sync
                 # every step just to hand maybe_checkpoint an unused array)
                 return None
+            # fingerprint readback only when a manifest-writing tier saves:
+            # a device-ring snapshot (tiered L2, every step) stays sync-free
             fp = hostsync.read_scalar(self.executor.state_fp(dual),
-                                      label="checkpoint_fp")
+                                      label="checkpoint_fp") \
+                if r.fp_needed(step) else None
             if r.maybe_checkpoint(step, dual, fp,
                                   validated_floor=self.validated_frontier):
                 self.checkpoints.append(step)

@@ -13,7 +13,7 @@ Two halves:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 from repro.core import temporal_model as tm
@@ -36,6 +36,11 @@ class Advice:
     # (1 = classic sync-per-compare) and its AET at the chosen MTBE
     validate_lag: int = 1
     deferred_aet_hours: float = 0.0
+    # tiered-checkpoint axis (DESIGN.md §12): recommended per-tier save
+    # cadence in steps (device/host/disk/partner; empty when t_step is
+    # unparameterized) and the hierarchy's AET at the chosen MTBE
+    tier_schedule: Dict[str, int] = field(default_factory=dict)
+    tiered_aet_hours: float = 0.0
 
 
 def advise(p: tm.SedarParams, mtbe_hours: float,
@@ -100,6 +105,26 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
             f"an expected {tm.deferred_waste(p, lag):.3f}h re-executed per "
             f"fault; requires a checkpointing level (L2/L3) so rollback can "
             f"reach inside the window")
+
+    # tiered-checkpoint guidance (DESIGN.md §12): per-tier save cadence
+    # from each tier's own store cost (Daly per tier), and the hierarchy's
+    # AET — rollback is served by the cheapest tier covering the detection
+    # lag, so the flat-store t_r term mostly disappears
+    tier_costs = tm.default_tier_costs(p)
+    tier_sched = tm.optimal_tier_schedule(p, tier_costs, mtbe_hours,
+                                          lag_steps=max(lag, 1))
+    tiered_aet = 0.0
+    if tier_sched:
+        tiered_aet = tm.aet_tiered(p, tier_sched, tier_costs, mtbe_hours,
+                                   X=X_expected, lag_steps=max(lag, 1))
+        src = tm.restore_tier(tier_sched, tier_costs, max(lag, 1))
+        notes.append(
+            f"tier schedule (ckpt_tiers): device every "
+            f"{tier_sched['device']} step(s), host every "
+            f"{tier_sched['host']}, disk every {tier_sched['disk']}, "
+            f"partner every {tier_sched['partner']} — expected restores "
+            f"from the {src!r} tier, AET {tiered_aet:.2f}h vs flat-disk "
+            f"{aets['multi_ckpt']:.2f}h")
     return Advice(
         strategy=best,
         level=level,
@@ -112,6 +137,8 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         abft_aet_hours=round(abft, 4),
         validate_lag=lag,
         deferred_aet_hours=round(deferred_aet, 4),
+        tier_schedule=tier_sched,
+        tiered_aet_hours=round(tiered_aet, 4),
     )
 
 

@@ -27,7 +27,9 @@ from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
 
+from repro.checkpoint.delta import DeltaCheckpointStore
 from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.tiers import TieredCheckpointer, make_tiered
 from repro.core.detection import DetectionEvent, SedarSafeStop
 
 
@@ -100,18 +102,56 @@ class MultiCheckpointRecovery:
     The chain is never pruned (any checkpoint may be dirty); an optional
     bounded-chain mode (`max_checkpoints`) exists for storage-limited runs and
     is recorded as a deviation when used.
+
+    With `tiers` (a `TieredCheckpointer`, DESIGN.md §12) the chain spans the
+    whole hierarchy: the device/host rings hold dense recent versions, the
+    disk/partner stores the sparse durable ones. Algorithm 1's counter then
+    walks the UNION of versions that predate the detected fault, newest
+    first, and each restore routes through the cost-aware planner (cheapest
+    tier holding the target version, with corruption fallback).
     """
 
     level = 2
 
     def __init__(self, store: CheckpointStore, counter_path: str,
                  checkpoint_interval: int, max_checkpoints: int = 0,
-                 async_: bool = True):
+                 async_: bool = True,
+                 tiers: Optional[TieredCheckpointer] = None):
         self.store = store
         self.counter = ExternalCounter(counter_path)
         self.interval = checkpoint_interval
         self.max_checkpoints = max_checkpoints
         self.async_ = async_
+        self.tiers = tiers
+        # planner outcome of the most recent restore() — the engine merges
+        # this into its recovery record (tier, version, fallbacks)
+        self.last_restore_info: Optional[dict] = None
+
+    # -- cadence hooks (the engine gates fingerprint readbacks on these) -----
+
+    def due(self, step: int) -> bool:
+        if self.tiers is not None:
+            return self.tiers.due(step)
+        return self.interval > 0 and step % self.interval == 0
+
+    def fp_needed(self, step: int) -> bool:
+        """Whether this save step needs the state-fingerprint readback (a
+        host sync): only manifest-writing tiers record it. Pure ring saves
+        (Tier 0/1) never pay it — the zero-sync hot path extends through
+        device-tier checkpointing."""
+        if self.tiers is not None:
+            return self.tiers.fp_needed(step)
+        return self.due(step)
+
+    def sync_due(self, step: int) -> bool:
+        """Whether a DURABLE tier is due at `step` — the engine flushes the
+        deferred window first so every host/disk/partner version predates
+        every unvalidated step (§11 retention rule). Device-ring saves do
+        NOT force a flush: their slots may hold unvalidated state by
+        design, and the restore planner's max_step bound excludes them."""
+        if self.tiers is not None:
+            return self.tiers.sync_due(step)
+        return self.due(step)
 
     def maybe_checkpoint(self, step: int, dual_state, fingerprints=None,
                          validated_floor: Optional[int] = None) -> bool:
@@ -123,9 +163,28 @@ class MultiCheckpointRecovery:
         not yet proven fault-free). Deferred validation (DESIGN.md §11)
         requires the bounded-chain GC to RETAIN at least one checkpoint no
         newer than that frontier — i.e. older than every unvalidated step —
-        or a fault inside the window could outlive every rollback target."""
-        if step == 0 or step % self.interval != 0:
+        or a fault inside the window could outlive every rollback target.
+        Ring tiers are exempt from that rule (they snapshot optimistically
+        every cadence, unvalidated steps included — the planner's
+        `max_step` bound keeps post-fault slots out of recovery); the
+        returned bool reports whether a DURABLE version was cut (what the
+        engine logs as a checkpoint)."""
+        if step == 0 or not self.due(step):
             return False
+        if self.tiers is not None:
+            saved = self.tiers.save(step, dual_state,
+                                    fingerprint=fingerprints, kind="system",
+                                    async_=self.async_,
+                                    keep_floor=validated_floor)
+            # GC only when a DURABLE store actually grew: gc_keep_last
+            # scans steps() (a wait() barrier + listdir) — running it on
+            # every device-ring step would re-serialize the async writer
+            # into the Tier-0 hot path
+            if self.max_checkpoints and \
+                    any(t in ("disk", "partner") for t in saved):
+                self.tiers.gc_keep_last(self.max_checkpoints,
+                                        keep_floor=validated_floor)
+            return any(t != "device" for t in saved)
         self.store.save(step, dual_state, kind="system", valid=None,
                         fingerprint=fingerprints, async_=self.async_)
         if self.max_checkpoints:
@@ -146,9 +205,21 @@ class MultiCheckpointRecovery:
         barriers pending async writes, so ckpt_count is exact even when the
         detection lands right after an async checkpoint boundary. Versions
         re-cut during re-execution overwrite their step slot, keeping the
-        counter↔version mapping stable across rollbacks."""
+        counter↔version mapping stable across rollbacks.
+
+        Tiered chains additionally bound the walk at the event's faulty
+        step: ring tiers snapshot optimistically inside the deferred
+        window, so versions NEWER than the fault exist and are corrupt by
+        construction — the planner never offers them (versions <= the
+        faulty step are exactly the legal Alg.-1 targets; the flat-store
+        path needs no bound because durable versions are only cut after a
+        clean flush)."""
         rollbacks = self.counter.increment()
-        steps = self.store.steps()
+        if self.tiers is not None:
+            steps = [v for v in self.tiers.versions()
+                     if event.step is None or v <= event.step]
+        else:
+            steps = self.store.steps()
         idx = len(steps) - rollbacks          # ckpt_count - extern_counter
         if idx < 0:
             # extern_counter exceeded the chain: the fault predates the first
@@ -160,6 +231,16 @@ class MultiCheckpointRecovery:
                               rollbacks=rollbacks, event=event)
 
     def restore(self, action: RecoveryAction, template):
+        if self.tiers is not None:
+            # explicit durability barrier even when a RING serves the state:
+            # the flat path barriered implicitly (store.restore -> wait),
+            # and a replay must never re-cut a version whose original
+            # async _write is still in flight (two writers on one .tmp)
+            self.tiers.wait()
+            state, info = self.tiers.restore(action.step, template)
+            self.last_restore_info = info
+            return state
+        self.last_restore_info = {"tier": "disk", "version": action.step}
         return self.store.restore(action.step, template)
 
 
@@ -175,17 +256,26 @@ class ValidatedCheckpointRecovery:
     is committed and the previous one deleted (exactly one valid checkpoint
     exists). Different -> the would-be checkpoint is corrupted: nothing is
     stored and recovery rolls back (at most once) to the previous valid one.
+
+    With `tiers` the validated state is replicated into EVERY enabled tier
+    at the boundary and "exactly one valid checkpoint" holds PER TIER
+    (`keep_only`): restore comes from the cheapest tier (normally the
+    device ring — instant, zero disk reads), with the partner store as the
+    corruption fallback of last resort.
     """
 
     level = 3
 
     def __init__(self, store: CheckpointStore, checkpoint_interval: int,
-                 async_: bool = False):
+                 async_: bool = False,
+                 tiers: Optional[TieredCheckpointer] = None):
         # NB async_=False by default: the validity protocol commits the
         # previous-version delete only after the new version is durable.
         self.store = store
         self.interval = checkpoint_interval
         self.async_ = async_
+        self.tiers = tiers
+        self.last_restore_info: Optional[dict] = None
 
     def maybe_checkpoint(self, step: int, dual_state, fingerprints=None,
                          fp_equal: Optional[bool] = None) -> Optional[DetectionEvent]:
@@ -205,6 +295,16 @@ class ValidatedCheckpointRecovery:
                                   effect="FSC",
                                   detail={"reason": "app-level checkpoint "
                                           "hash mismatch (corrupted)"})
+        if self.tiers is not None:
+            # replicate the validated state into every tier SYNCHRONOUSLY
+            # (the per-tier previous version is only discarded once the new
+            # one is durable everywhere), then enforce one-valid-per-tier
+            self.tiers.save(step, dual_state["r0"], kind="app", valid=True,
+                            fingerprint=fingerprints, async_=False,
+                            force=True)
+            self.tiers.wait()
+            self.tiers.keep_only(step)
+            return None
         prev = self.store.latest(valid_only=True)
         self.store.save(step, dual_state["r0"], kind="app", valid=True,
                         fingerprint=fingerprints, async_=self.async_)
@@ -214,7 +314,8 @@ class ValidatedCheckpointRecovery:
         return None
 
     def on_detection(self, event: DetectionEvent) -> RecoveryAction:
-        target = self.store.latest(valid_only=True)
+        target = self.tiers.latest_valid() if self.tiers is not None \
+            else self.store.latest(valid_only=True)
         if target is None:
             return RecoveryAction(kind="restart_scratch", rollbacks=1,
                                   event=event)
@@ -224,6 +325,11 @@ class ValidatedCheckpointRecovery:
     def restore(self, action: RecoveryAction, template_single):
         """Returns the single validated state (callers re-duplicate it into
         both replicas — valid by construction)."""
+        if self.tiers is not None:
+            state, info = self.tiers.restore(action.step, template_single)
+            self.last_restore_info = info
+            return state
+        self.last_restore_info = {"tier": "disk", "version": action.step}
         return self.store.restore(action.step, template_single)
 
 
@@ -277,14 +383,28 @@ class RetryRecovery:
                               event=event)
 
 
-def make_recovery(sedar_cfg, workdir: Optional[str] = None):
+def make_recovery(sedar_cfg, workdir: Optional[str] = None,
+                  notify: Optional[Callable[[dict], None]] = None):
+    """Build the recovery policy for a SedarConfig.
+
+    Tier hierarchy (DESIGN.md §12): `ckpt_tiers` beyond the flat "disk"
+    default routes L2/L3 through a `TieredCheckpointer`; `ckpt_delta`
+    swaps the primary disk store for `DeltaCheckpointStore` (L2 only —
+    L3 keeps exactly one version, so there is nothing to delta against)
+    and `ckpt_compress` enables per-leaf compressed serialization."""
     d = workdir or sedar_cfg.checkpoint_dir
-    store = CheckpointStore(os.path.join(d, "checkpoints"))
     if sedar_cfg.level <= 1:
         return SafeStop()
+    compress = bool(getattr(sedar_cfg, "ckpt_compress", False))
+    delta = bool(getattr(sedar_cfg, "ckpt_delta", False)) \
+        and sedar_cfg.level == 2
+    store_cls = DeltaCheckpointStore if delta else CheckpointStore
+    store = store_cls(os.path.join(d, "checkpoints"), compress=compress)
+    tiers = make_tiered(sedar_cfg, d, disk_store=store, notify=notify)
     if sedar_cfg.level == 2:
         return MultiCheckpointRecovery(
             store, os.path.join(d, "rollbacks.json"),
             sedar_cfg.checkpoint_interval, sedar_cfg.max_checkpoints,
-            async_=sedar_cfg.async_checkpoint)
-    return ValidatedCheckpointRecovery(store, sedar_cfg.checkpoint_interval)
+            async_=sedar_cfg.async_checkpoint, tiers=tiers)
+    return ValidatedCheckpointRecovery(store, sedar_cfg.checkpoint_interval,
+                                       tiers=tiers)

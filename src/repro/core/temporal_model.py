@@ -216,6 +216,121 @@ def optimal_validate_lag(p: SedarParams, mtbe: float, X: float = 0.5,
 
 
 # ---------------------------------------------------------------------------
+# Tiered checkpoint hierarchy (DESIGN.md §12, beyond paper; cf. Aupy et al.
+# arXiv:1310.8486 — verification cadence coupled with a hierarchy of
+# checkpoint costs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TierCosts:
+    """Per-tier generalization of the paper's single t_cs/t_r pair.
+
+    t_save    : hours to store one version in this tier (the tier's t_cs)
+    t_restore : hours to restore one version from this tier (its t_r —
+                includes the restart-class costs that tier actually pays:
+                a device-ring restore is a few on-device copies, a disk
+                restore pays deserialization + digest verification)
+    slots     : ring capacity in versions (0 = unbounded, disk-backed)
+    """
+
+    t_save: float
+    t_restore: float
+    slots: int = 0
+
+
+def default_tier_costs(p: SedarParams) -> dict:
+    """Tier costs derived from the measured flat-store numbers: the device
+    ring is ~2 orders of magnitude cheaper than serialization (pure HBM
+    copies), the host ring ~1 order (one batched D2H, no serialization),
+    the partner tier doubles the disk cost (second independent copy).
+    Replace with bench_checkpoint.py measurements when available."""
+    return {
+        "device": TierCosts(t_save=p.t_cs / 256.0, t_restore=p.t_cs / 256.0,
+                            slots=4),
+        "host": TierCosts(t_save=p.t_cs / 16.0, t_restore=p.t_cs / 16.0,
+                          slots=4),
+        "disk": TierCosts(t_save=p.t_cs, t_restore=p.T_rest),
+        "partner": TierCosts(t_save=2.0 * p.t_cs, t_restore=2.0 * p.T_rest),
+    }
+
+
+TIER_NAMES = ("device", "host", "disk", "partner")
+
+
+def tiered_fa(p: SedarParams, schedule: dict, costs: dict) -> float:
+    """Eq. (5) generalized to the hierarchy: fault-free time = detection
+    time + Σ_tier (saves in that tier) · t_save(tier). `schedule` maps tier
+    name -> save interval in steps (0/absent = tier disabled)."""
+    steps = n_steps(p)
+    if steps <= 0:
+        return detection_fa(p)
+    extra = sum((steps / iv) * costs[t].t_save
+                for t, iv in schedule.items() if iv > 0 and t in costs)
+    return detection_fa(p) + extra
+
+
+def restore_tier(schedule: dict, costs: dict, lag_steps: int = 1) -> str:
+    """The planner's expected source tier for a fault detected `lag_steps`
+    after it happened: the cheapest tier whose retention window (slots ·
+    interval, unbounded for disk tiers) still spans a version predating the
+    fault. Mirrors TieredCheckpointer.plan's cost order."""
+    enabled = [t for t in TIER_NAMES if schedule.get(t, 0) > 0]
+    for t in enabled:
+        c = costs[t]
+        if c.slots == 0 or c.slots * schedule[t] > lag_steps:
+            return t
+    return enabled[-1] if enabled else "disk"
+
+
+def tiered_fp(p: SedarParams, schedule: dict, costs: dict, X: float = 0.5,
+              lag_steps: int = 1) -> float:
+    """Time with one fault: the planner restores from `restore_tier`, so
+    the penalty is that tier's t_restore plus the rework back to its newest
+    version predating the fault — detection lag + half the tier's interval
+    in expectation (uniform fault instant inside the interval)."""
+    t = restore_tier(schedule, costs, lag_steps)
+    rework = (lag_steps + schedule.get(t, 1) / 2.0) * p.t_step
+    return tiered_fa(p, schedule, costs) + costs[t].t_restore + rework
+
+
+def aet_tiered(p: SedarParams, schedule: dict, costs: dict, mtbe: float,
+               X: float = 0.5, lag_steps: int = 1) -> float:
+    """Eq. (11) with the tiered fa/fp pair."""
+    return aet(tiered_fp(p, schedule, costs, X, lag_steps),
+               tiered_fa(p, schedule, costs), p.T_prog, mtbe)
+
+
+def optimal_tier_schedule(p: SedarParams, costs: Optional[dict] = None,
+                          mtbe: float = 5.0, lag_steps: int = 1) -> dict:
+    """Cost-aware cadence per tier (steps between saves).
+
+    * device: every step — a ring snapshot costs ~nothing next to t_step,
+      and it is the tier that makes rollback-to-k free;
+    * host / disk: Daly's optimum interval computed against EACH tier's own
+      t_save (the whole point of the hierarchy: a cheap tier affords a
+      short interval), floored at one step and kept monotonically
+      non-decreasing down the hierarchy;
+    * partner: the disk cadence ×2 — it exists to survive store corruption,
+      not to shorten rollback distance, so it only needs to bound the
+      re-protection window.
+
+    Empty dict when the deferred terms are unparameterized (t_step unset)."""
+    if p.t_step <= 0:
+        return {}
+    costs = costs or default_tier_costs(p)
+
+    def steps_for(tier: str, floor: int) -> int:
+        iv_h = daly_interval(costs[tier].t_save, mtbe)
+        return max(int(round(iv_h / p.t_step)), floor, 1)
+
+    out = {"device": 1}
+    out["host"] = steps_for("host", out["device"])
+    out["disk"] = steps_for("disk", out["host"])
+    out["partner"] = max(2 * out["disk"], 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Average execution time — Eqs. (9)-(11)
 # ---------------------------------------------------------------------------
 

@@ -63,6 +63,20 @@ def main() -> None:
     ap.add_argument("--validate-lag", type=int, default=1,
                     help="deferred validation window D (DESIGN.md §11): "
                          "read commit predicates back every D steps")
+    ap.add_argument("--ckpt-tiers", default="disk",
+                    help="checkpoint tier hierarchy (DESIGN.md §12): comma-"
+                         "list of device,host,disk,partner. device = on-"
+                         "device snapshot ring (instant rollback, zero disk "
+                         "reads), host = host-RAM ring, partner = redundant "
+                         "second store (Tier-2 corruption fallback). "
+                         "E.g. --ckpt-tiers device,host,disk")
+    ap.add_argument("--ckpt-delta", action="store_true",
+                    help="L2 delta checkpoints: leaves unchanged since the "
+                         "previous version become manifest references "
+                         "instead of re-serialized payloads")
+    ap.add_argument("--ckpt-compress", action="store_true",
+                    help="compress leaf payloads (np.savez_compressed); "
+                         "bytes-on-disk reported in the manifest")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--global-batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=16)
@@ -84,7 +98,10 @@ def main() -> None:
         sedar=SedarConfig(level=args.level, replication=args.replication,
                           validate_lag=args.validate_lag,
                           checkpoint_interval=args.ckpt_interval,
-                          param_validate_interval=args.ckpt_interval))
+                          param_validate_interval=args.ckpt_interval,
+                          ckpt_tiers=args.ckpt_tiers,
+                          ckpt_delta=args.ckpt_delta,
+                          ckpt_compress=args.ckpt_compress))
     shutil.rmtree(args.workdir, ignore_errors=True)
 
     inj = None

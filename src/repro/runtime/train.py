@@ -56,12 +56,18 @@ class TrainReport:
     stopped: bool = False
     wall_s: float = 0.0
     final_state_fp: Optional[np.ndarray] = None
+    # which checkpoint tier each rollback restore was served from
+    # (DESIGN.md §12; empty for flat-disk configs or runs without recovery)
+    restored_from: List[str] = field(default_factory=list)
 
     def summary(self) -> str:
+        tiers = f" restored_from={self.restored_from}" \
+            if self.restored_from else ""
         return (f"steps={self.steps_completed} detections={len(self.detections)} "
                 f"recoveries={len(self.recoveries)} ckpts={len(self.checkpoints)} "
                 f"stopped={self.stopped} wall={self.wall_s:.1f}s "
-                f"loss={self.losses[-1] if self.losses else float('nan'):.4f}")
+                f"loss={self.losses[-1] if self.losses else float('nan'):.4f}"
+                f"{tiers}")
 
 
 class SedarTrainer:
@@ -325,13 +331,20 @@ class SedarTrainer:
         rep.recoveries = list(eng.recoveries)
         rep.checkpoints = list(eng.checkpoints)
         rep.steps_completed = self._host_step(dual)
+        rep.restored_from = [r["tier"] for r in rep.recoveries
+                             if r.get("tier")]
         rep.final_state_fp = hostsync.read_scalar(
             self._state_fp(eng.executor.primary(dual)), label="final_fp")
         # durability barrier: async checkpoint writers are daemon threads —
         # without this, process exit can strand .tmp staging dirs and the
-        # on-disk chain is shorter than rep.checkpoints claims
-        store = getattr(self.recovery, "store", None)
-        if store is not None:
-            store.wait()
+        # on-disk chain is shorter than rep.checkpoints claims. Tiered
+        # configs barrier every disk-backed tier (primary AND partner).
+        tiers = getattr(self.recovery, "tiers", None)
+        if tiers is not None:
+            tiers.wait()
+        else:
+            store = getattr(self.recovery, "store", None)
+            if store is not None:
+                store.wait()
         rep.wall_s = time.time() - t0
         return dual, rep

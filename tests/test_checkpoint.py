@@ -1,5 +1,8 @@
-"""Checkpoint store: roundtrip, atomicity, multi-version, GC, async."""
+"""Checkpoint store: roundtrip, atomicity, multi-version, GC, async,
+compressed serialization, and the GC-vs-async-writer race."""
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -138,6 +141,115 @@ def test_save_issues_one_transfer_batch(tmp_path):
     r = store.restore(7, jax.tree.map(np.asarray, big))
     for k in big:
         np.testing.assert_array_equal(np.asarray(big[k]), r[k])
+
+
+def test_wait_is_a_true_barrier_under_concurrent_callers(tmp_path):
+    """Satellite regression (ISSUE 4): GC entry points call `wait()` before
+    scanning `steps()`, but the old pop-then-join implementation returned
+    EARLY for a second concurrent caller (caller A pops the pending list
+    and is still joining; caller B sees it empty and proceeds while the
+    writer is mid-rename). A GC racing an async save could then scan a
+    half-committed chain and delete around it. `wait()` must block EVERY
+    caller until the in-flight write has committed."""
+    store = CheckpointStore(str(tmp_path))
+    gate = threading.Event()
+    orig = store._write
+
+    def slow_write(*args, **kw):
+        gate.wait(10)
+        orig(*args, **kw)
+
+    store._write = slow_write
+    store.save(5, _state(5), async_=True)
+
+    waiter = threading.Thread(target=store.wait)   # caller A: joins writer
+    waiter.start()
+    time.sleep(0.05)      # let A reach join() (old bug: A pops the list)
+
+    seen = []
+
+    def gc():             # caller B: GC entry point -> steps() -> wait()
+        store.gc_keep_last(1)
+        seen.append(store.steps())
+
+    g = threading.Thread(target=gc)
+    g.start()
+    time.sleep(0.1)
+    # the write has not committed: B must still be blocked inside wait()
+    assert not seen, "wait() returned before the async write committed"
+    gate.set()
+    g.join(10)
+    waiter.join(10)
+    assert seen == [[5]]
+
+
+def test_clear_waits_for_inflight_write(tmp_path):
+    """clear() racing an async writer must remove the version it was
+    waiting on, not leave it stranded post-rename."""
+    store = CheckpointStore(str(tmp_path))
+    gate = threading.Event()
+    orig = store._write
+
+    def slow_write(*args, **kw):
+        gate.wait(10)
+        orig(*args, **kw)
+
+    store._write = slow_write
+    store.save(3, _state(3), async_=True)
+    t = threading.Timer(0.05, gate.set)
+    t.start()
+    store.clear()
+    t.join()
+    assert store.steps() == []
+
+
+def test_compressed_roundtrip_and_digest_compat(tmp_path):
+    """Satellite: save(..., compress=True) stores npz leaves that restore
+    bit-identically, report bytes-on-disk in the manifest, and carry the
+    SAME content digests as the uncompressed form (the digest covers the
+    array, not the file encoding)."""
+    plain = CheckpointStore(str(tmp_path / "plain"))
+    comp = CheckpointStore(str(tmp_path / "comp"))
+    s = {"w": jnp.asarray(np.tile(np.arange(64, dtype=np.float32), 64)),
+         "b": jnp.zeros((128,), jnp.float32)}
+    plain.save(7, s)
+    comp.save(7, s, compress=True)
+    mp, mc = plain.manifest(7), comp.manifest(7)
+    assert mc.compressed and not mp.compressed
+    assert mc.leaf_digests == mp.leaf_digests
+    assert mc.bytes_on_disk is not None and mp.bytes_on_disk is not None
+    assert mc.bytes_on_disk < mp.bytes_on_disk    # repetitive payload
+    tpl = jax.tree.map(np.asarray, s)
+    r = comp.restore(7, tpl)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compressed_restore_detects_corruption(tmp_path):
+    """The digest check covers the decompressed content too."""
+    store = CheckpointStore(str(tmp_path), compress=True)
+    s = _state(3)
+    store.save(4, s)
+    leaf = os.path.join(str(tmp_path), "ckpt_00000004", "leaf_00000.npz")
+    arr = np.load(leaf)["arr"]
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[5] ^= 0x40
+    np.savez_compressed(leaf, arr=arr)
+    with pytest.raises(CheckpointCorruptionError, match="digest mismatch"):
+        store.restore(4, jax.tree.map(np.asarray, s))
+
+
+def test_count_disk_reads_hook(tmp_path):
+    """restore() reports its reads through the counting hook the Tier-0/1
+    zero-disk-read acceptance asserts with."""
+    from repro.checkpoint import count_disk_reads
+    store = CheckpointStore(str(tmp_path))
+    s = _state(1)
+    store.save(1, s)
+    with count_disk_reads() as dr:
+        store.restore(1, jax.tree.map(np.asarray, s))
+    assert dr.by_label["manifest"] == 1
+    assert dr.by_label["leaf"] == len(jax.tree.leaves(s))
 
 
 def test_async_save_transfer_completes_before_return(tmp_path):

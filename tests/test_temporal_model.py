@@ -130,3 +130,74 @@ def test_advisor_reports_validate_lag():
     assert "validate_lag" in a.notes
     # unparameterized params keep the classic recommendation
     assert advise(tm.PAPER_TABLE3["JACOBI"], 20.0).validate_lag == 1
+
+
+# -- tiered checkpoint hierarchy (DESIGN.md §12) ------------------------------
+
+def test_tiered_fa_adds_per_tier_save_cost():
+    """Eq.-5 generalization: each enabled tier contributes saves*t_save;
+    adding a near-free device tier barely moves fa, adding a second disk-
+    class tier costs a full t_cs stream."""
+    p = _deferred_params()
+    costs = tm.default_tier_costs(p)
+    disk_only = {"disk": 100}
+    with_dev = {"disk": 100, "device": 1}
+    fa0 = tm.tiered_fa(p, disk_only, costs)
+    fa1 = tm.tiered_fa(p, with_dev, costs)
+    assert fa0 > tm.detection_fa(p)
+    assert fa1 > fa0                            # device saves aren't free...
+    steps = tm.n_steps(p)
+    assert fa1 - fa0 == pytest.approx(steps * costs["device"].t_save)
+    # ...but 256x cheaper than the same cadence on disk
+    fa_disk_dense = tm.tiered_fa(p, {"disk": 1}, costs)
+    assert (fa_disk_dense - tm.detection_fa(p)) == \
+        pytest.approx(256.0 * (fa1 - fa0 + 0) / 1.0, rel=0.02)
+
+
+def test_restore_tier_follows_ring_coverage():
+    """The planner's expected source: cheapest tier whose retention window
+    covers the detection lag; beyond every ring, disk serves."""
+    p = _deferred_params()
+    costs = tm.default_tier_costs(p)            # rings hold 4 slots
+    sched = {"device": 1, "host": 8, "disk": 64}
+    assert tm.restore_tier(sched, costs, lag_steps=2) == "device"
+    assert tm.restore_tier(sched, costs, lag_steps=8) == "host"    # 4*8 > 8
+    assert tm.restore_tier(sched, costs, lag_steps=40) == "disk"
+
+
+def test_tiered_fp_cheaper_than_flat_disk_restore():
+    """With a device ring covering the lag, the faulty-case time loses the
+    t_r/T_rest-class term that dominates flat-disk rollback."""
+    p = _deferred_params()
+    costs = tm.default_tier_costs(p)
+    tiered = {"device": 1, "disk": 64}
+    flat = {"disk": 64}
+    fp_t = tm.tiered_fp(p, tiered, costs, lag_steps=1)
+    fp_f = tm.tiered_fp(p, flat, costs, lag_steps=1)
+    # same fault, same schedule class: the hierarchy restores from the ring
+    assert fp_t - tm.tiered_fa(p, tiered, costs) < \
+        fp_f - tm.tiered_fa(p, flat, costs)
+
+
+def test_optimal_tier_schedule_monotone_and_daly_scaled():
+    """device every step; host/disk by per-tier Daly (cheaper tier =>
+    shorter interval); partner a multiple of disk; empty when t_step
+    unparameterized."""
+    p = _deferred_params()
+    sched = tm.optimal_tier_schedule(p, mtbe=5.0)
+    assert sched["device"] == 1
+    assert 1 <= sched["host"] <= sched["disk"] <= sched["partner"]
+    assert sched["host"] < sched["disk"]       # 16x cheaper saves
+    assert sched["partner"] == 2 * sched["disk"]
+    assert tm.optimal_tier_schedule(tm.PAPER_TABLE3["JACOBI"],
+                                    mtbe=5.0) == {}
+
+
+def test_advisor_reports_tier_schedule():
+    from repro.core.policy import advise
+    p = _deferred_params()
+    a = advise(p, mtbe_hours=20.0)
+    assert a.tier_schedule and a.tier_schedule["device"] == 1
+    assert a.tiered_aet_hours > 0
+    assert "tier schedule" in a.notes
+    assert advise(tm.PAPER_TABLE3["JACOBI"], 20.0).tier_schedule == {}

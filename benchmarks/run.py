@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
     checkpoint_* — per-tier save/restore latency, delta vs full bytes,
                  rollback wall time (DESIGN.md §12); --json writes
                  BENCH_checkpoint.json
+    serve_*    — continuous-batching vs synchronous whole-batch serving,
+                 goodput under injected faults (DESIGN.md §13); --json
+                 writes BENCH_serve.json
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -30,6 +33,7 @@ MODULES = [
     "benchmarks.bench_abft",
     "benchmarks.bench_protected_step",
     "benchmarks.bench_checkpoint",
+    "benchmarks.bench_serve",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -44,6 +48,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_abft",
     "benchmarks.bench_protected_step",
     "benchmarks.bench_checkpoint",
+    "benchmarks.bench_serve",
 ]
 
 
@@ -59,8 +64,10 @@ def main() -> None:
     if args.json:
         import benchmarks.bench_checkpoint as bck
         import benchmarks.bench_protected_step as bps
+        import benchmarks.bench_serve as bsv
         bps.JSON_PATH = "BENCH_protected_step.json"
         bck.JSON_PATH = "BENCH_checkpoint.json"
+        bsv.JSON_PATH = "BENCH_serve.json"
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:

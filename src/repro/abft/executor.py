@@ -99,6 +99,15 @@ class AbftExecutor(ReplicaExecutor):
 
     adopt_single = init_dual
 
+    def note_external_update(self) -> None:
+        # the driver mutated the resident state via map_state (slot
+        # admission / eviction / rollback merge): the commit-time
+        # fingerprint baseline no longer describes what is resident, and
+        # comparing against it would flag the legitimate mutation as
+        # at-rest corruption
+        self._last_fp = None
+        self._last_fp_step = -1
+
     # -- execution -----------------------------------------------------------
 
     def _entry_check_due(self, step: int) -> bool:

@@ -1,10 +1,11 @@
 from repro.checkpoint.delta import DeltaCheckpointStore
 from repro.checkpoint.store import (CheckpointCorruptionError, CheckpointStore,
                                     DiskReadStats, Manifest, count_disk_reads)
-from repro.checkpoint.tiers import (DeviceRing, HostRing, TieredCheckpointer,
-                                    TierSchedule, make_tiered, parse_tiers)
+from repro.checkpoint.tiers import (DeviceRing, HostRing, SlotRing,
+                                    TieredCheckpointer, TierSchedule,
+                                    make_tiered, parse_tiers)
 
 __all__ = ["CheckpointCorruptionError", "CheckpointStore",
            "DeltaCheckpointStore", "DeviceRing", "DiskReadStats", "HostRing",
-           "Manifest", "TierSchedule", "TieredCheckpointer",
+           "Manifest", "SlotRing", "TierSchedule", "TieredCheckpointer",
            "count_disk_reads", "make_tiered", "parse_tiers"]

@@ -140,6 +140,60 @@ class DeviceRing(_Ring):
         return jax.tree.map(jnp.copy, self._get(step))
 
 
+class SlotRing:
+    """Tier-0 KEYED snapshot ring for continuous-batching serving
+    (DESIGN.md §13): one bounded device-resident version ring PER SEQUENCE
+    SLOT, holding that slot's {cache slice, token, position} image.
+
+    Same storage contract as `DeviceRing` — saves and restores are pure
+    `jnp.copy`, ZERO disk reads and ZERO host syncs — but keyed by slot so
+    a detected fault restores ONLY the affected sequence's state while the
+    other slots' rings (and live state) are untouched. Versions are decode
+    ticks; `restore(slot, max_step=k)` returns the newest snapshot at or
+    below the faulty step, exactly like the planner's `max_step` bound
+    filters post-fault versions out of recovery. Eviction on admission
+    (`evict`) drops a finished/rejected request's history so the ring never
+    resurrects state across requests sharing a slot."""
+
+    name = "device"
+
+    def __init__(self, slots_per_key: int = 4):
+        self.slots_per_key = max(int(slots_per_key), 1)
+        self._rings: Dict[int, _Ring] = {}
+        self.saves = 0
+        self.restores = 0
+
+    def save(self, key: int, step: int, state_slice) -> None:
+        ring = self._rings.setdefault(int(key), _Ring(self.slots_per_key))
+        ring._put(step, jax.tree.map(jnp.copy, state_slice), keep_floor=None)
+        self.saves += 1
+
+    def restore(self, key: int, max_step: Optional[int] = None
+                ) -> Tuple[int, Any]:
+        """Newest version at-or-below `max_step` for `key` ->
+        (version, state slice copy). KeyError when nothing qualifies."""
+        ring = self._rings.get(int(key))
+        if ring is None:
+            raise KeyError(f"no snapshots for slot {key}")
+        cands = [s for s in ring.versions()
+                 if max_step is None or s <= max_step]
+        if not cands:
+            raise KeyError(f"no slot-{key} snapshot at or below {max_step}")
+        version = max(cands)
+        self.restores += 1
+        return version, jax.tree.map(jnp.copy, ring._get(version))
+
+    def versions(self, key: int) -> List[int]:
+        ring = self._rings.get(int(key))
+        return ring.versions() if ring is not None else []
+
+    def evict(self, key: int) -> None:
+        self._rings.pop(int(key), None)
+
+    def clear(self) -> None:
+        self._rings.clear()
+
+
 class HostRing(_Ring):
     """Tier 1: host-RAM ring. One batched D2H per save (counted through
     hostsync as `tier_host_save` unless the transfer is shared with the

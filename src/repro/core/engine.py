@@ -222,6 +222,21 @@ class ReplicaExecutor:
         every leaf)."""
         return dual["r0"][key]
 
+    def map_state(self, fn, dual, *others):
+        """Apply `fn` to EVERY replica's logical state (driver-side state
+        surgery: slot admission / eviction / per-slot rollback merges in the
+        serving path, DESIGN.md §13). `others` are additional duals whose
+        matching replica states are passed as extra positional args. The
+        transformation must be replica-symmetric — applying anything
+        divergent would manufacture a detection."""
+        return {"r0": fn(dual["r0"], *[o["r0"] for o in others])}
+
+    def note_external_update(self) -> None:
+        """Drivers call this after `map_state` mutated the resident state
+        outside a protected step, so executors that cache state-derived
+        baselines (e.g. the hybrid commit-time fingerprint) can drop them
+        instead of flagging the legitimate mutation as corruption."""
+
     def execute_deferred(self, dual, batch, step: int, armed,
                          compare: bool = True):
         raise NotImplementedError(
@@ -325,20 +340,26 @@ class SequentialExecutor(ReplicaExecutor):
         self.ema_step_s = dt if self.ema_step_s is None else \
             0.9 * self.ema_step_s + 0.1 * dt
 
-    def execute(self, dual, batch, step: int, armed, compare: bool):
+    def _launch_with_toe(self, dual, batch, step: int, armed):
+        """Timed dual launch + TOE boundary, shared by the plain and
+        slotted sequential executors. Returns (outs, toe_event | None);
+        TOE only fires when the per-replica walls were actually synced."""
         delays = self.delay_source() or {}
         timed = self._timing_armed(delays)
         t0 = time.monotonic()
         outs, exec_t = self._launch(dual, batch, step, armed, timed, delays)
         self._note_wall(t0)
-
-        # TOE: replica flow separation beyond the configured lapse (only
-        # meaningful when the per-replica walls were actually synced)
         if timed and abs(exec_t[1] - exec_t[0]) > self.toe_timeout_s:
-            return dual, outs[0][2], DetectionEvent(
+            return outs, DetectionEvent(
                 step=step, boundary="toe", effect="TOE",
                 detail={"dt0": exec_t[0], "dt1": exec_t[1],
                         "timeout_s": self.toe_timeout_s})
+        return outs, None
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        outs, toe = self._launch_with_toe(dual, batch, step, armed)
+        if toe is not None:
+            return dual, outs[0][2], toe
 
         (c0, fp0, aux0), (c1, fp1, _aux1) = outs[0], outs[1]
         if compare and not hostsync.read_bool(fingerprints_equal(fp0, fp1),
@@ -388,6 +409,94 @@ class SequentialExecutor(ReplicaExecutor):
     def state_fp(self, dual):
         return self.state_fp_fn(dual["r0"])
 
+    def map_state(self, fn, dual, *others):
+        return {"r0": fn(dual["r0"], *[o["r0"] for o in others]),
+                "r1": fn(dual["r1"], *[o["r1"] for o in others])}
+
+
+# ---------------------------------------------------------------------------
+# Slot-granular executors (continuous-batching serving, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _slot_eq(fp0, fp1) -> jnp.ndarray:
+    """Per-slot replica equality from PER-SLOT fingerprints (N, 4): exact
+    match on the hash words, one bool per sequence slot."""
+    return jnp.all(fp0[..., :2] == fp1[..., :2], axis=-1)
+
+
+def _slot_mismatch_event(eq, step: int,
+                         extra: Optional[Dict[str, Any]] = None
+                         ) -> DetectionEvent:
+    """Fault-path localization shared by the slotted backends: ONE extra
+    readback resolves the per-slot equality vector into the event's slot
+    list (`detail={slots, partial, ...}`)."""
+    eq_h = hostsync.read_scalar(eq, label="slot_compare")
+    bad = [int(i) for i in np.nonzero(~np.asarray(eq_h, bool))[0]]
+    detail: Dict[str, Any] = {"slots": bad, "partial": True}
+    if extra:
+        detail.update(extra)
+    return DetectionEvent(step=step, boundary="commit", effect="TDC",
+                          detail=detail)
+
+
+def slot_select(mask, new, old, n_slots: int, axis: int = 0):
+    """Per-slot pytree merge: `where(mask)` along the slot axis for leaves
+    that carry it (shape[axis] == n_slots); leaves WITHOUT a slot axis
+    (e.g. the global decode tick) adopt `new` unconditionally."""
+    def sel(a, b):
+        if a.ndim > axis and a.shape[axis] == n_slots:
+            m = jnp.reshape(mask, (1,) * axis + (n_slots,)
+                            + (1,) * (a.ndim - axis - 1))
+            return jnp.where(m, a, b)
+        return a
+    return jax.tree.map(sel, new, old)
+
+
+class SlottedSequentialExecutor(SequentialExecutor):
+    """Time redundancy over a PACKED sequence batch (DESIGN.md §13): the
+    step_fn's fingerprint carries a leading slot axis (N, 4), so a commit
+    mismatch is LOCALIZED to sequence slots and the matching slots'
+    candidates are PARTIALLY COMMITTED — one corrupted sequence no longer
+    gates the whole batch. Faulty slots keep their pre-step image (their
+    per-slot position does not advance), so the next protected step simply
+    re-decodes them while the committed slots stream on: the rework quantum
+    is the affected sequence, not the batch (cf. Samfass & Weinzierl,
+    task-local redundancy)."""
+
+    name = "slotted"
+
+    def __init__(self, *args, n_slots: int = 1, **kw):
+        super().__init__(*args, **kw)
+        self.n_slots = int(n_slots)
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        outs, toe = self._launch_with_toe(dual, batch, step, armed)
+        if toe is not None:
+            return dual, outs[0][2], toe
+        (c0, fp0, aux0), (c1, fp1, _aux1) = outs[0], outs[1]
+        if not compare:
+            return {"r0": c0, "r1": c1}, aux0, None
+        eq = _slot_eq(fp0, fp1)
+        if hostsync.read_bool(jnp.all(eq), label="commit_compare"):
+            return {"r0": c0, "r1": c1}, aux0, None
+        # fault path: the matching slots commit and only the faulty ones
+        # stay pre-step
+        merged = {"r0": slot_select(eq, c0, dual["r0"], self.n_slots),
+                  "r1": slot_select(eq, c1, dual["r1"], self.n_slots)}
+        return merged, aux0, _slot_mismatch_event(eq, step)
+
+    def execute_deferred(self, dual, batch, step: int, armed,
+                         compare: bool = True):
+        """Optimistic per-slot commit: the (N,) match-predicate VECTOR joins
+        the engine's deferred ring, so a failed flush localizes both the
+        step and the slots."""
+        delays = self.delay_source() or {}
+        t0 = time.monotonic()
+        outs, _ = self._launch(dual, batch, step, armed, False, delays)
+        self._note_wall(t0)
+        (c0, fp0, aux0), (c1, fp1, _aux1) = outs[0], outs[1]
+        return {"r0": c0, "r1": c1}, aux0, _slot_eq(fp0, fp1)
+
 
 class FusedSequentialExecutor(ReplicaExecutor):
     """Time redundancy in ONE launch (DESIGN.md §11): replica state is
@@ -424,6 +533,25 @@ class FusedSequentialExecutor(ReplicaExecutor):
         self.fast_state_fp_fn = fast_state_fp_fn or state_fp_fn
         self.watchdog = watchdog
         self._val_cache = _EqCache()
+        self._build_programs(step_fn, donate)
+
+    # -- overridable reduction/commit hooks (the slotted subclass swaps
+    # ONLY these two; the launch/validate/donation machinery is shared) ----
+
+    def _replica_eq(self, fps):
+        """Traced replica-equality reduction over the stacked fps."""
+        return fingerprints_equal(fps[0], fps[1])
+
+    def _commit_gate(self, commit, cands, stacked):
+        """Traced commit: adopt `cands` where `commit` holds, else keep
+        `stacked` (pre-step). Scalar-predicate gate as a lax.cond, NOT a
+        per-leaf jnp.where: select lowers to a full elementwise pass over
+        both operands of every leaf (~3x the whole step on CPU), while the
+        conditional just forwards the chosen pytree."""
+        return jax.lax.cond(jnp.all(commit), lambda c, s: c,
+                            lambda c, s: s, cands, stacked)
+
+    def _build_programs(self, step_fn: Callable, donate: bool) -> None:
         n = self.n_replicas
 
         def _core(stacked, batch, armed):
@@ -431,23 +559,17 @@ class FusedSequentialExecutor(ReplicaExecutor):
             cands, fps, auxs = jax.vmap(
                 step_fn, in_axes=(0, None, 0, None))(stacked, batch, rids,
                                                      armed)
-            eq = fingerprints_equal(fps[0], fps[1])
-            return cands, eq, jax.tree.map(lambda a: a[0], auxs)
+            return cands, self._replica_eq(fps), \
+                jax.tree.map(lambda a: a[0], auxs)
 
         def _gated(stacked, batch, armed, compare):
             cands, eq, aux0 = _core(stacked, batch, armed)
-            # scalar-predicate commit gate as a lax.cond, NOT a per-leaf
-            # jnp.where: select lowers to a full elementwise pass over both
-            # operands of every leaf (~3x the whole step on CPU), while the
-            # conditional just forwards the chosen pytree. The gate only
-            # bites on compare steps: off-boundary steps must adopt the
-            # candidates unconditionally (like the sequential backend) or a
-            # divergence there would be silently REVERTED and never reach a
-            # detection boundary.
+            # the gate only bites on compare steps: off-boundary steps must
+            # adopt the candidates unconditionally (like the sequential
+            # backend) or a divergence there would be silently REVERTED and
+            # never reach a detection boundary
             commit = jnp.logical_or(eq, jnp.logical_not(compare))
-            new = jax.lax.cond(commit, lambda c, s: c, lambda c, s: s,
-                               cands, stacked)
-            return new, eq, aux0
+            return self._commit_gate(commit, cands, stacked), eq, aux0
 
         def _validate(stacked):
             fps = jax.vmap(self.fast_state_fp_fn)(stacked)
@@ -520,6 +642,63 @@ class FusedSequentialExecutor(ReplicaExecutor):
 
     def state_fp(self, dual):
         return self.state_fp_fn(self.primary(dual))
+
+    def map_state(self, fn, dual, *others):
+        """Unstack -> apply per replica -> restack. Driver-side surgery is
+        off the hot path, so the extra copies are acceptable; fn must be
+        replica-symmetric (see the base-class contract)."""
+        outs = []
+        for i in range(self.n_replicas):
+            args = [jax.tree.map(lambda x, i=i: x[i], d["s"])
+                    for d in (dual,) + tuple(others)]
+            outs.append(fn(*args))
+        return {"s": jax.tree.map(lambda *xs: jnp.stack(list(xs)), *outs)}
+
+
+class SlottedFusedExecutor(FusedSequentialExecutor):
+    """Single-launch time redundancy over a packed sequence batch
+    (DESIGN.md §13): per-slot fingerprints, and the in-jit commit gate is
+    PER SLOT — a `lax.cond` keeps the fault-free path free of the per-leaf
+    select (all slots matched -> forward the candidate pytree), and only a
+    mismatching step pays the slot-masked merge. Deferred mode runs the
+    SAME compiled program and parks the (N,) predicate in the engine ring."""
+
+    name = "slotted_fused"
+
+    def __init__(self, step_fn: Callable, state_fp_fn: Callable,
+                 fast_state_fp_fn: Optional[Callable] = None,
+                 watchdog: Optional[Watchdog] = None, donate: bool = True,
+                 n_slots: int = 1):
+        self.n_slots = int(n_slots)     # before _build_programs traces
+        super().__init__(step_fn, state_fp_fn,
+                         fast_state_fp_fn=fast_state_fp_fn,
+                         watchdog=watchdog, donate=donate)
+
+    def _replica_eq(self, fps):
+        return _slot_eq(fps[0], fps[1])              # (n_slots,)
+
+    def _commit_gate(self, commit, cands, stacked):
+        # per-slot gate; slot axis is 1 (leaves stacked (replica, slot, …)).
+        # lax.cond keeps the all-matched fault-free path free of the
+        # per-leaf slot_select pass
+        return jax.lax.cond(
+            jnp.all(commit), lambda c, s: c,
+            lambda c, s: slot_select(commit, c, s, self.n_slots, axis=1),
+            cands, stacked)
+
+    def execute(self, dual, batch, step: int, armed, compare: bool):
+        dual2, eq, aux = self._launch(dual, batch, step, armed, compare)
+        if compare and not hostsync.read_bool(jnp.all(eq),
+                                              label="commit_compare"):
+            # dual2 already carries the per-slot partial commit (in-jit)
+            return dual2, aux, _slot_mismatch_event(eq, step,
+                                                    {"fused": True})
+        return dual2, aux, None
+
+    def execute_deferred(self, dual, batch, step: int, armed,
+                         compare: bool = True):
+        dual2, eq, aux = self._launch(dual, batch, step, armed, compare)
+        return dual2, aux, eq
 
 
 class PodExecutor(ReplicaExecutor):
@@ -784,10 +963,23 @@ class SedarEngine:
         bad = [s for s, v in zip(steps_, vals) if not bool(np.all(v))]
         detected_at = steps_[-1] + 1
         self._ring.clear()
-        return DetectionEvent(
-            step=bad[0], boundary="deferred", effect="TDC",
-            detail={"detected_at": detected_at, "lag": detected_at - bad[0],
-                    "faulty_steps": bad[:8]})
+        detail = {"detected_at": detected_at, "lag": detected_at - bad[0],
+                  "faulty_steps": bad[:8]}
+        # slot-granular localization (DESIGN.md §13): vector predicates
+        # carry one bool per sequence slot, so a failed flush also reports
+        # WHICH slots diverged and at which step each first went bad — the
+        # per-request recovery rolls back only those slots
+        if any(np.ndim(v) for v in vals):
+            slot_first: Dict[int, int] = {}
+            for s, v in zip(steps_, vals):
+                v = np.asarray(v)
+                if v.ndim and not v.all():
+                    for i in np.nonzero(~v)[0]:
+                        slot_first.setdefault(int(i), s)
+            detail["slots"] = sorted(slot_first)
+            detail["slot_first_bad"] = slot_first
+        return DetectionEvent(step=bad[0], boundary="deferred", effect="TDC",
+                              detail=detail)
 
     def validate_final(self, dual, step: int) -> Optional[DetectionEvent]:
         """Final-results comparison (paper Sec. 3.1); the event is tagged
@@ -858,7 +1050,11 @@ class SedarEngine:
     # -- internals ------------------------------------------------------------
 
     def _mark_injected(self, step: int) -> None:
+        # persistent (stuck-bit) specs are never marked: the fault
+        # re-manifests on every step by definition, so recovery
+        # re-executions MUST re-inject (DESIGN.md §13 rejection path)
         if (self.inj_spec is not None and self.inj_flag is not None
+                and not getattr(self.inj_spec, "persistent", False)
                 and not self.inj_flag.already_injected()
                 and step == self.inj_spec.step):
             self.inj_flag.mark()

@@ -48,6 +48,12 @@ class InjectionSpec:
                correction: the detected-uncorrectable scenario class).
     dtype    : optional target-leaf dtype name; when given, `bit` is
                validated against the dtype's width at construction time.
+    persistent : model a PERMANENT fault (stuck bit) instead of a transient
+               SDC: the corruption fires on EVERY step >= `step` (the
+               once-only injection flag is never marked, so re-executions
+               after recovery re-inject). Detection then repeats until the
+               consecutive-failure budget degrades to the L1 response —
+               for serving, per-request rejection (DESIGN.md §13).
     """
     leaf_idx: int
     flat_idx: int
@@ -57,6 +63,7 @@ class InjectionSpec:
     target: str = "grads"
     n_elems: int = 1
     dtype: str = ""
+    persistent: bool = False
 
     def __post_init__(self):
         if not 0 <= self.bit < 32:
@@ -125,10 +132,17 @@ def make_kernel_fault(spec: InjectionSpec, *, step, armed):
             idx = (spec.flat_idx + e * stride) % flat.size
             corrupted = flip_bit(corrupted, idx, spec.bit)
         fire = jnp.logical_and(jnp.asarray(armed, jnp.bool_),
-                               jnp.asarray(step) == spec.step)
+                               spec_step_hit(spec, step))
         return jnp.where(fire, corrupted, flat).reshape(out.shape)
 
     return apply
+
+
+def spec_step_hit(spec: InjectionSpec, step) -> jnp.ndarray:
+    """Traced step-gate: exact hit for transients, `>=` for persistent
+    (stuck-bit) faults that re-manifest on every subsequent execution."""
+    step = jnp.asarray(step)
+    return step >= spec.step if spec.persistent else step == spec.step
 
 
 def inject_tree(tree, spec: Optional[InjectionSpec], *, step, replica_id,
@@ -145,7 +159,7 @@ def inject_tree(tree, spec: Optional[InjectionSpec], *, step, replica_id,
     target = leaves[spec.leaf_idx]
     fire = jnp.logical_and(
         jnp.asarray(armed, jnp.bool_),
-        jnp.logical_and(jnp.asarray(step) == spec.step,
+        jnp.logical_and(spec_step_hit(spec, step),
                         jnp.asarray(replica_id) == spec.replica))
     corrupted = flip_bit(target, spec.flat_idx, spec.bit)
     leaves[spec.leaf_idx] = jnp.where(fire, corrupted, target)

@@ -41,16 +41,26 @@ class Advice:
     # unparameterized) and the hierarchy's AET at the chosen MTBE
     tier_schedule: Dict[str, int] = field(default_factory=dict)
     tiered_aet_hours: float = 0.0
+    # serving axis (DESIGN.md §13): recommended deferred window for the
+    # continuous-batching decode loop, plus the goodput/availability of
+    # per-request recovery vs whole-batch recovery at that window
+    serve_validate_lag: int = 1
+    serve_goodput: float = 1.0          # per-request recovery, at the lag
+    serve_goodput_whole_batch: float = 1.0
+    serve_availability: float = 1.0
 
 
 def advise(p: tm.SedarParams, mtbe_hours: float,
-           X_expected: float = 0.5, k_expected: int = 0) -> Advice:
+           X_expected: float = 0.5, k_expected: int = 0,
+           serve_slots: int = 8) -> Advice:
     """Pick the minimum-AET strategy.
 
     X_expected: where faults are typically detected (0.5 if unknown —
     uniform detection instant, the paper's average-case assumption).
     k_expected: typical extra rollbacks for L2 (0 when the detection latency
-    is usually inside one interval)."""
+    is usually inside one interval).
+    serve_slots: continuous-batching slot count used for the serving
+    goodput/lag guidance (only meaningful when t_step/t_sync are set)."""
     # tune t_i by Daly for the two checkpointing strategies
     ti_sys = max(tm.daly_interval(p.t_cs, mtbe_hours), p.t_cs * 4)
     ti_app = max(tm.daly_interval(p.t_ca + p.T_compA, mtbe_hours),
@@ -125,6 +135,24 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
             f"partner every {tier_sched['partner']} — expected restores "
             f"from the {src!r} tier, AET {tiered_aet:.2f}h vs flat-disk "
             f"{aets['multi_ckpt']:.2f}h")
+
+    # serving guidance (DESIGN.md §13): deferred window + per-request
+    # recovery scope for the continuous-batching decode loop. The per-fault
+    # discard is one SLOT's window instead of the whole batch's, so the
+    # optimal serving lag is at least the training one and the goodput gap
+    # vs whole-batch recovery widens with the slot count.
+    serve_lag = tm.optimal_serve_lag(p, mtbe_hours, serve_slots)
+    serve_good = tm.serve_goodput(p, mtbe_hours, serve_slots, serve_lag,
+                                  per_request=True)
+    serve_good_wb = tm.serve_goodput(p, mtbe_hours, serve_slots, serve_lag,
+                                     per_request=False)
+    serve_avail = tm.serve_availability(p, mtbe_hours, serve_slots,
+                                        serve_lag, per_request=True)
+    if p.t_step > 0 and p.t_sync > 0:
+        notes.append(
+            f"serving ({serve_slots} slots): validate_lag D={serve_lag}, "
+            f"per-request recovery goodput {serve_good:.4f} vs whole-batch "
+            f"{serve_good_wb:.4f}; availability {serve_avail:.4f}")
     return Advice(
         strategy=best,
         level=level,
@@ -139,6 +167,10 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
         deferred_aet_hours=round(deferred_aet, 4),
         tier_schedule=tier_sched,
         tiered_aet_hours=round(tiered_aet, 4),
+        serve_validate_lag=serve_lag,
+        serve_goodput=round(serve_good, 6),
+        serve_goodput_whole_batch=round(serve_good_wb, 6),
+        serve_availability=round(serve_avail, 6),
     )
 
 
@@ -160,7 +192,7 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                 init_fn: Optional[Callable] = None,
                 notify: Optional[Callable] = None,
                 delay_source: Optional[Callable[[], dict]] = None,
-                donate: bool = True):
+                donate: bool = True, slots: Optional[int] = None):
     """Assemble a `SedarEngine` for one workload.
 
     backend: "none" | "sequential" | "fused" | "pod" | "vote" | "abft" |
@@ -170,14 +202,20 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
     for vote). "fused" runs both time-redundant replicas in ONE vmapped jit
     with the compare predicate on device (the zero-sync hot path, DESIGN.md
     §11; `donate` controls stacked-state buffer donation); step_fn must be
-    vmappable over (state, replica_id). abft/hybrid run replica-free:
+    vmappable over (state, replica_id). `slots=N` selects the SLOT-GRANULAR
+    variants of the sequential/fused backends (continuous-batching serving,
+    DESIGN.md §13): step_fn then returns a PER-SLOT fingerprint (N, 4) and
+    commit mismatches are localized to sequence slots and partially
+    committed. abft/hybrid run replica-free:
     step_fn may return a 4th element (an `abft.ref.AbftReport` from
     checksummed kernels) and hybrid additionally validates the commit-time
     state fingerprint at the FSC boundary. `recovery`/`schedule`/`watchdog`
     default from the config (recovery needs `workdir`)."""
     from repro.core.engine import (BoundarySchedule, FusedSequentialExecutor,
                                    PlainExecutor, PodExecutor, SedarEngine,
-                                   SequentialExecutor, VoteExecutor)
+                                   SequentialExecutor,
+                                   SlottedFusedExecutor,
+                                   SlottedSequentialExecutor, VoteExecutor)
     from repro.core.detection import Watchdog
     from repro.core.recovery import make_recovery
 
@@ -211,11 +249,21 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
     elif backend == "fused":
         if step_fn is None or state_fp_fn is None:
             raise ValueError("backend 'fused' needs step_fn and state_fp_fn")
-        executor = FusedSequentialExecutor(
-            step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,
-            watchdog=watchdog, donate=donate)
+        if slots:
+            executor = SlottedFusedExecutor(
+                step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,
+                watchdog=watchdog, donate=donate, n_slots=slots)
+        else:
+            executor = FusedSequentialExecutor(
+                step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,
+                watchdog=watchdog, donate=donate)
     elif backend == "none":
         executor = PlainExecutor(step_fn, state_fp_fn)
+    elif slots:
+        executor = SlottedSequentialExecutor(
+            step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,
+            watchdog=watchdog, toe_timeout_s=schedule.toe_timeout_s,
+            delay_source=delay_source, n_slots=slots)
     else:
         executor = SequentialExecutor(
             step_fn, state_fp_fn, fast_state_fp_fn=fast_state_fp_fn,

@@ -30,6 +30,7 @@ import numpy as np
 from repro.checkpoint.delta import DeltaCheckpointStore
 from repro.checkpoint.store import CheckpointStore
 from repro.checkpoint.tiers import TieredCheckpointer, make_tiered
+from repro.core import hostsync
 from repro.core.detection import DetectionEvent, SedarSafeStop
 
 
@@ -381,6 +382,115 @@ class RetryRecovery:
                                   event=event)
         return RecoveryAction(kind="retry", rollbacks=self._consecutive,
                               event=event)
+
+
+class SlotRecovery:
+    """Per-REQUEST recovery for continuous-batching serving (DESIGN.md §13).
+
+    The paper's levels, re-scoped from "the run" to "the sequence slot":
+
+      * commit-gated slot mismatch (partial commit, `detail['partial']`):
+        the faulty slots kept their pre-step image, so the action is a
+        per-slot L0 retry — the next protected step re-decodes exactly
+        those slots while the committed slots stream on.
+      * deferred-window slot fault (`boundary='deferred'`): the corruption
+        was committed optimistically up to D steps ago. The action restores
+        ONLY the affected slots from the Tier-0 `SlotRing` (pure device
+        copies — zero disk reads, zero host syncs beyond the fault-path
+        position read) to each slot's newest snapshot predating its first
+        bad step, the per-slot analogue of the L2/L3 rollback with the
+        planner's max_step bound.
+      * exhausted per-slot consecutive budget: the REQUEST is rejected with
+        notification — the paper's L1 safe stop scoped to one sequence,
+        instead of killing the server. The driver drains
+        `take_rejections()` and evicts those slots.
+
+    The driver binds `merge` (executor-aware: writes one slot slice into
+    every replica image via `map_state`) before serving; restores performed
+    here are surfaced through `take_restores()` so the driver can truncate
+    the affected requests' token streams to the restored position."""
+
+    level = 0
+
+    def __init__(self, ring, max_retries: int = 8):
+        self.ring = ring
+        self.max_retries = max_retries
+        self.merge: Optional[Callable[[Any, int, Any], Any]] = None
+        self._consecutive: dict = {}
+        self._pending_restores: dict = {}
+        self._pending_rejects: list = []
+        self.last_restore_info: Optional[dict] = None
+
+    def maybe_checkpoint(self, step, dual_state, fingerprints=None) -> bool:
+        return False   # snapshots are driver-cut into the SlotRing
+
+    def reset(self) -> None:
+        self._consecutive.clear()
+        self._pending_restores.clear()
+        self._pending_rejects.clear()
+        self.ring.clear()
+
+    def note_success(self) -> None:
+        """A fully-clean step committed: every slot's failure was transient."""
+        self._consecutive.clear()
+
+    def take_restores(self) -> dict:
+        out, self._pending_restores = self._pending_restores, {}
+        return out
+
+    def take_rejections(self) -> list:
+        out, self._pending_rejects = self._pending_rejects, []
+        for slot in out:
+            # the budget is per REQUEST: the next tenant admitted into this
+            # slot must start with a clean consecutive count (the counter
+            # analogue of ring.evict on admission)
+            self._consecutive.pop(slot, None)
+        return out
+
+    def on_detection(self, event: DetectionEvent) -> RecoveryAction:
+        slots = [int(s) for s in event.detail.get("slots", [])]
+        for s in slots:
+            self._consecutive[s] = self._consecutive.get(s, 0) + 1
+        over = [s for s in slots
+                if self.max_retries
+                and self._consecutive[s] > self.max_retries]
+        self._pending_rejects.extend(over)
+        worst = max((self._consecutive[s] for s in slots), default=1)
+        if event.boundary == "deferred":
+            return RecoveryAction(kind="slot_restore", step=event.step,
+                                  rollbacks=worst, event=event)
+        # commit/toe/validate without localized optimistic damage: the
+        # faulty slots are pre-step (partial commit) or the whole batch is
+        # un-committed — re-execution recovers, like RetryRecovery but the
+        # budget is per slot and exhaustion rejects the request, not the run
+        return RecoveryAction(kind="retry", rollbacks=worst, event=event)
+
+    def restore(self, action: RecoveryAction, dual):
+        if self.merge is None:
+            raise RuntimeError("SlotRecovery.merge not bound by the driver")
+        ev = action.event
+        first_bad = ev.detail.get("slot_first_bad", {})
+        rejected = set(self._pending_rejects)
+        restored: dict = {}
+        for slot in [int(s) for s in ev.detail.get("slots", [])]:
+            if slot in rejected:
+                continue   # driver evicts it; no point repairing
+            bound = int(first_bad.get(slot, ev.step))
+            try:
+                version, sl = self.ring.restore(slot, max_step=bound)
+            except KeyError:
+                # no snapshot predates the fault (ring rotated past it, or
+                # the slot was never snapshotted): degrade to per-request
+                # rejection rather than re-emitting an unvalidated stream
+                self._pending_rejects.append(slot)
+                continue
+            dual = self.merge(dual, slot, sl)
+            restored[slot] = {
+                "version": version,
+                "pos": hostsync.read_int(sl["pos"], label="slot_restore")}
+        self._pending_restores.update(restored)
+        self.last_restore_info = {"tier": "device", "slots": restored}
+        return dual
 
 
 def make_recovery(sedar_cfg, workdir: Optional[str] = None,

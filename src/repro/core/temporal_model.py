@@ -331,6 +331,79 @@ def optimal_tier_schedule(p: SedarParams, costs: Optional[dict] = None,
 
 
 # ---------------------------------------------------------------------------
+# Serving under faults (DESIGN.md §13, beyond paper): goodput & availability
+# of continuous-batching protected decode with per-request recovery
+# ---------------------------------------------------------------------------
+#
+# One decode step emits one token per active slot, so t_step doubles as the
+# per-token machine time. Faults arrive at rate 1/MTBE; per fault the
+# recovery cost depends on the rework SCOPE:
+#   whole-batch (the synchronous generate() loop): every one of n_slots
+#     sequences re-executes the detection window -> n_slots * D/2 slot-steps
+#     discarded in expectation (uniform fault instant inside the window);
+#   per-request (the slotted loop): ONE slot rolls back from its Tier-0
+#     ring while the others stream on -> D/2 slot-steps discarded.
+# Goodput is the delivered fraction of slot-step capacity; availability is
+# the probability a random sequence is NOT replaying rolled-back work at a
+# random instant (whole-batch recovery stalls everyone, per-request only
+# the affected sequence).
+
+
+def serve_goodput(p: SedarParams, mtbe: float, n_slots: int, D: int = 1,
+                  per_request: bool = True) -> float:
+    """Delivered fraction of decode capacity under faults: 1 minus the
+    expected slot-steps discarded per fault over the slot-steps produced
+    between faults."""
+    if p.t_step <= 0 or n_slots <= 0:
+        return 1.0
+    steps_between_faults = mtbe / p.t_step          # decode ticks per fault
+    discarded = (max(D, 1) / 2.0) * (1.0 if per_request else n_slots)
+    frac = discarded / max(steps_between_faults * n_slots, 1e-12)
+    return max(0.0, 1.0 - frac)
+
+
+def serve_availability(p: SedarParams, mtbe: float, n_slots: int,
+                       D: int = 1, per_request: bool = True) -> float:
+    """Probability a given sequence is streaming (not replaying) at a
+    random instant: replay occupies D/2 of its slot's ticks per fault, and
+    whole-batch recovery replays EVERY sequence while per-request recovery
+    replays only the affected one (probability 1/n_slots per fault)."""
+    if p.t_step <= 0 or n_slots <= 0:
+        return 1.0
+    steps_between_faults = mtbe / p.t_step
+    replay = (max(D, 1) / 2.0) * \
+        ((1.0 / n_slots) if per_request else 1.0)
+    return max(0.0, 1.0 - replay / max(steps_between_faults, 1e-12))
+
+
+def serve_token_cost(p: SedarParams, mtbe: float, n_slots: int,
+                     D: int = 1) -> float:
+    """Expected machine-hours per DELIVERED token at validate_lag D with
+    per-request recovery: the step itself, the amortized once-per-D
+    predicate readback, and the per-fault slot rework spread over the
+    tokens between faults. The serving analogue of Eq. (11)'s integrand."""
+    if p.t_step <= 0:
+        return 0.0
+    sync = p.t_sync / max(D, 1)
+    tokens_between_faults = (mtbe / p.t_step) * max(n_slots, 1)
+    rework = (max(D, 1) / 2.0) * p.t_step / max(tokens_between_faults, 1e-12)
+    return p.t_step + sync + rework
+
+
+def optimal_serve_lag(p: SedarParams, mtbe: float, n_slots: int,
+                      candidates=(1, 2, 4, 8, 16, 32, 64)) -> int:
+    """argmin_D of the per-token cost. Same tension as
+    `optimal_validate_lag`, but the per-fault discard is divided by
+    n_slots (only one sequence replays), so serving tolerates LONGER
+    windows than training at the same MTBE — at the price of up to D
+    steps of emission-rollback latency on the faulty request."""
+    if p.t_step <= 0 or p.t_sync <= 0:
+        return 1
+    return min(candidates,
+               key=lambda D: serve_token_cost(p, mtbe, n_slots, int(D)))
+
+
+# ---------------------------------------------------------------------------
 # Average execution time — Eqs. (9)-(11)
 # ---------------------------------------------------------------------------
 

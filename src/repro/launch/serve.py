@@ -1,7 +1,23 @@
-"""Serving launcher.
+"""Serving launcher: synchronous batch or continuous-batching traffic replay.
+
+Synchronous whole-batch decode (the original loop):
 
     PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
         --batch 4 --steps 16 [--dual]
+
+Continuous-batching protected serving (DESIGN.md §13) replays an open-loop
+synthetic traffic trace — arrival rate, prompt-length mix, per-request
+token budgets — through the slot scheduler, optionally with a fault
+campaign injected into the decode stream:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --continuous --requests 16 --slots 4 --arrival-rate 0.5 \
+        --prompt-mix 4:0.5,8:0.3,16:0.2 --max-new 4,12 \
+        --validate-lag 8 --backend sequential \
+        --fault-slot 1 --fault-step 5
+
+    # per-request rejection demo: a stuck bit on one slot
+    ... --fault-slot 1 --fault-step 5 --fault-persistent --max-retries 3
 """
 from __future__ import annotations
 
@@ -16,20 +32,74 @@ from repro.configs import (RunConfig, TrainConfig, get_config, list_archs,
 from repro.core.policy import make_server
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="xlstm-125m", choices=list_archs())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--dual", action="store_true",
-                    help="SEDAR dual-execution detection on decode")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    args = ap.parse_args()
+def _parse_prompt_mix(spec: str):
+    """'4:0.5,8:0.5' -> (lengths, weights)."""
+    lengths, weights = [], []
+    for part in spec.split(","):
+        length, _, w = part.partition(":")
+        lengths.append(int(length))
+        weights.append(float(w) if w else 1.0)
+    return tuple(lengths), tuple(weights)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduce_for_smoke(cfg)
+
+def _continuous(args, cfg) -> None:
+    from repro.core.injection import InjectionSpec
+    from repro.runtime.scheduler import (latency_percentiles_ms,
+                                         synthetic_requests)
+
+    spec = None
+    if args.fault_slot is not None:
+        if args.backend in ("abft", "hybrid"):
+            # replica-free backends execute ONE instance (replica_id 0) and
+            # a pre-encode logits flip is invisible to the checksum guard by
+            # construction — inject in the KERNEL domain instead (between
+            # compute and verify, the fault class ABFT exists to catch),
+            # into the chosen slot's row of the checksummed block
+            spec = InjectionSpec(
+                leaf_idx=0,
+                flat_idx=args.fault_slot * (cfg.vocab_size + 1) + 7,
+                bit=30, step=args.fault_step, replica=0, target="kernel",
+                persistent=args.fault_persistent)
+        else:
+            # replica 0 for the unprotected baseline (there IS no replica
+            # 1 — the corruption must land on the instance that runs, and
+            # the stream visibly corrupts with nothing detecting it)
+            replica = 0 if args.backend == "none" else 1
+            spec = InjectionSpec(
+                leaf_idx=args.fault_slot, flat_idx=7, bit=30,
+                step=args.fault_step, replica=replica, target="slot",
+                persistent=args.fault_persistent)
+    srv = make_server(RunConfig(model=cfg, train=TrainConfig()),
+                      dual=(args.backend == "sequential"),
+                      backend=args.backend, inj_spec=spec,
+                      max_retries=args.max_retries)
+    params = srv.model.init(jax.random.PRNGKey(0))
+    lengths, weights = _parse_prompt_mix(args.prompt_mix)
+    reqs = synthetic_requests(
+        args.requests, arrival_rate=args.arrival_rate,
+        prompt_lengths=lengths, length_weights=weights,
+        max_new_choices=tuple(int(x) for x in args.max_new.split(",")),
+        vocab=min(cfg.vocab_size, 200), seed=args.seed)
+    out, rep = srv.serve(
+        params, reqs, slots=args.slots, validate_lag=args.validate_lag,
+        queue_depth=args.queue_depth,
+        notify_reject=lambda r, e: print(
+            f"[SEDAR] request {r.rid} REJECTED after {e.boundary} fault "
+            f"(per-request safe stop)", flush=True))
+    p50, p99 = latency_percentiles_ms(out)
+    print(f"{args.arch}: {rep.tokens_emitted} tokens delivered over "
+          f"{rep.steps} protected steps ({rep.tokens_per_s:.1f} tok/s, "
+          f"goodput {rep.goodput_tokens_per_step:.2f} tok/step), "
+          f"p50/p99 inter-token {p50:.2f}/{p99:.2f} ms")
+    print(f"  completed={len(rep.completed)} rejected={rep.rejected} "
+          f"detections={len(rep.detections)} retries={rep.retries} "
+          f"rollbacks={rep.rollbacks} "
+          f"truncated+redecoded={rep.truncated_tokens} tokens")
+    for e in rep.detections:
+        print(f"  {e} slots={e.detail.get('slots')}")
+
+
+def _sync(args, cfg) -> None:
     srv = make_server(RunConfig(model=cfg, train=TrainConfig()),
                       dual=args.dual)
     params = srv.model.init(jax.random.PRNGKey(0))
@@ -44,6 +114,57 @@ def main() -> None:
     tps = rep.tokens_emitted / max(rep.wall_s, 1e-9)
     print(f"{args.arch}: {rep.tokens_emitted} tokens, {tps:.1f} tok/s "
           f"(CPU smoke), detections={len(rep.detections)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--dual", action="store_true",
+                    help="SEDAR dual-execution detection on decode")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    # -- continuous-batching traffic replay (DESIGN.md §13) -----------------
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-scheduled continuous batching with "
+                         "per-request recovery")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--arrival-rate", type=float, default=1.0,
+                    help="open-loop arrivals per decode tick")
+    ap.add_argument("--prompt-mix", default="4:0.5,8:0.5",
+                    help="len:weight[,len:weight...] prompt-length mix")
+    ap.add_argument("--max-new", default="4,12",
+                    help="comma list of per-request token budgets")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="admission-queue bound (0 = unbounded); a full "
+                         "queue sheds load (backpressure rejection)")
+    ap.add_argument("--validate-lag", type=int, default=None,
+                    help="deferred-validation window D (DESIGN.md §11/§13)")
+    ap.add_argument("--backend", default="sequential",
+                    choices=["none", "sequential", "fused", "abft",
+                             "hybrid"])
+    ap.add_argument("--max-retries", type=int, default=8,
+                    help="consecutive per-slot failures before the request "
+                         "is rejected (per-request L1)")
+    ap.add_argument("--seed", type=int, default=0)
+    # fault campaign
+    ap.add_argument("--fault-slot", type=int, default=None,
+                    help="inject a slot-localized SDC into this slot")
+    ap.add_argument("--fault-step", type=int, default=5)
+    ap.add_argument("--fault-persistent", action="store_true",
+                    help="stuck bit: re-inject every step (drives the "
+                         "per-request rejection path)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    if args.continuous:
+        _continuous(args, cfg)
+    else:
+        _sync(args, cfg)
 
 
 if __name__ == "__main__":

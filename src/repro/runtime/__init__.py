@@ -1,4 +1,8 @@
+from repro.runtime.scheduler import (Request, RequestQueue, SlotScheduler,
+                                     synthetic_requests)
+from repro.runtime.serve import BatchServeReport, SedarServer, ServeReport
 from repro.runtime.train import SedarTrainer, TrainReport
-from repro.runtime.serve import SedarServer, ServeReport
 
-__all__ = ["SedarTrainer", "TrainReport", "SedarServer", "ServeReport"]
+__all__ = ["BatchServeReport", "Request", "RequestQueue", "SedarServer",
+           "SedarTrainer", "ServeReport", "SlotScheduler", "TrainReport",
+           "synthetic_requests"]

@@ -69,21 +69,32 @@ class ClusterMonitor:
         return out
 
     def stale_hosts(self, now: Optional[float] = None) -> List[int]:
-        now = now or time.time()
+        # `now or time.time()` would treat now=0.0 (a perfectly legal
+        # simulated clock origin) as unset and silently substitute wall time
+        now = time.time() if now is None else now
         seen = self.scan()
         stale = [h for h, s in seen.items() if now - s.last_beat > self.timeout_s]
         missing = [h for h in range(self.n_hosts) if h not in seen]
         return sorted(stale + missing)
 
     def stragglers(self) -> List[int]:
-        """Hosts more than straggler_factor x median steps behind."""
+        """Hosts more than straggler_factor x slower than the median, i.e.
+        whose step count has fallen below median / straggler_factor.
+
+        A LARGER factor tolerates MORE lag before flagging (factor=2: flag
+        below half the median progress; factor=10: only below a tenth). The
+        previous formula used `med - step > med / factor`, which INVERTED
+        that: raising the factor shrank the allowed lag and made detection
+        more sensitive. A 2-step grace floor keeps early-run jitter (median
+        of 1-2 steps) from flagging healthy hosts."""
         seen = self.scan()
         if len(seen) < 2:
             return []
         steps = sorted(s.step for s in seen.values())
         med = steps[len(steps) // 2]
-        lag = max(2.0, med / self.straggler_factor) if med else 2.0
-        return sorted(h for h, s in seen.items() if med - s.step > lag)
+        floor = med / self.straggler_factor
+        return sorted(h for h, s in seen.items()
+                      if med - s.step > 2 and s.step < floor)
 
 
 @dataclass
@@ -102,12 +113,24 @@ def plan_elastic_remesh(data_axis: int, global_batch: int,
 
     Policy: drop whole data shards containing lost hosts; rescale the global
     batch proportionally (keeps per-shard batch, so activation memory and the
-    compiled program are unchanged -> restart reuses the compile cache)."""
+    compiled program are unchanged -> restart reuses the compile cache).
+
+    The rescale is derived FROM the per-shard batch, so a `global_batch`
+    that does not divide `data_axis` is rejected up front: flooring
+    `global_batch * new_data // data_axis` would silently change the
+    per-shard batch the restart relies on (new shapes -> compile-cache
+    miss, and a different effective batch than the run was tuned for)."""
+    if global_batch % data_axis:
+        raise ValueError(
+            f"global_batch {global_batch} is not divisible by data_axis "
+            f"{data_axis}: the per-shard batch is undefined, so an elastic "
+            f"re-mesh cannot preserve it (compile-cache reuse)")
+    per_shard = global_batch // data_axis
     lost_shards = sorted({h // hosts_per_data_shard for h in lost_hosts})
     new_data = data_axis - len(lost_shards)
     if new_data < 1:
         raise RuntimeError("all data shards lost")
-    new_batch = global_batch * new_data // data_axis
+    new_batch = per_shard * new_data
     return ElasticPlan(
         old_data=data_axis, new_data=new_data, new_global_batch=new_batch,
         dropped_hosts=lost_hosts,

@@ -1,30 +1,52 @@
-"""Batched serving loop — a thin driver over the unified SEDAR engine.
+"""Serving drivers over the unified SEDAR engine.
 
-Serving follows the paper's inference-side story: decoding is deterministic
-(greedy or fixed-seed sampling), so a dual-replica serve step can compare
+Two loops share the engine, the model and the detection machinery:
+
+`generate()` — the original synchronous whole-batch loop (DESIGN.md §8):
+decoding is deterministic (greedy), so a dual-replica serve step compares
 logits fingerprints before emitting tokens — "validate the message before
-sending it to the user". The decode step runs through the SAME
-`SedarEngine.run_protected_step()` as training: each replica owns a full
-decode state image ({cache, tok, pos}), the TDC commit gate withholds the
-token on a mismatch, and recovery is the L0 `RetryRecovery` policy
-(re-execute the step; transient faults do not repeat), which gives serving
-the same external retry accounting the L2/L3 levels use instead of a
-bespoke guard loop.
+sending it to the user". Every sequence in the batch advances in lockstep;
+one corrupted replica compare stalls (or, under deferral, rolls back)
+EVERY sequence in flight, and a retry-budget exhaustion safe-stops the
+whole stream (the paper's L1 applied to the run).
 
-DMR attribution limit: with two replicas a PERSISTENT state divergence
-(e.g. an SDC committed into one replica's KV cache that only manifests at
-later positions) cannot be attributed to the faulty replica, so it is not
-repairable — after `max_retries` consecutive failed re-executions the
-stream safe-stops rather than emit an unvalidated token (the paper's L1
-guarantee; re-seeding one replica from the other would risk silently
-emitting the corrupted stream). Sporadic transients never hit the budget:
-a committed step resets the consecutive count (DESIGN.md §8).
+`serve()` — continuous-batching protected decode (DESIGN.md §13): a
+`SlotScheduler` packs independent requests into N sequence slots, each
+carrying its own KV-cache slice, token and position. The engine's
+protected step runs over the PACKED batch with a PER-SLOT fingerprint, so
+`DetectionEvent`s are localized to sequence slots and the paper's recovery
+levels re-scope from "the run" to "the request":
+
+  * transient slot mismatch  -> partial commit + per-slot re-execution
+    (L0 retry for one sequence; the other slots stream on),
+  * deferred-window fault    -> rollback of ONLY the affected slots from a
+    Tier-0 `SlotRing` (keyed device-resident snapshots, zero disk reads,
+    zero host syncs — the PR-4 tier machinery per request),
+  * exhausted slot budget    -> per-REQUEST rejection with notification
+    (L1 safe-stop scoped to one sequence; the server keeps serving).
+
+The fault-free hot path keeps the §11 zero-sync property: with
+`validate_lag >= D` the only per-step device->host transfer is the token
+emission itself (asserted via `hostsync.count_transfers`), and Tier-0
+snapshots/rollbacks never touch disk (`checkpoint.count_disk_reads`).
+
+Replica-free serving: the abft/hybrid backends guard every decode step's
+logits block with a full-checksum ABFT pass (`_logits_checksum_guard`):
+single-element corruption in the kernel-domain window is forward-corrected
+and the corrected commit EMITS its token — no re-execution, rollbacks=0.
+
+DMR attribution limit (unchanged from §8): with two replicas a PERSISTENT
+state divergence cannot be attributed to the faulty replica. In the
+continuous loop that degradation is per-request — after `max_retries`
+consecutive failed re-executions of a slot, that REQUEST is rejected
+rather than ever emitting an unvalidated token; the server itself never
+dies (the paper's L1 guarantee, re-scoped).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,11 +57,13 @@ from repro.core import hostsync
 from repro.core.detection import DetectionEvent, SedarSafeStop
 from repro.core.engine import BoundarySchedule, SedarEngine
 from repro.core.fingerprint import (pytree_fingerprint,
-                                    pytree_fingerprint_fused)
-from repro.core.injection import InjectionSpec, MemoryInjectionFlag, \
-    inject_tree
+                                    pytree_fingerprint_fused,
+                                    tensor_fingerprint)
+from repro.core.injection import (InjectionSpec, MemoryInjectionFlag,
+                                  flip_bit, inject_tree, make_kernel_fault,
+                                  spec_step_hit)
 from repro.core.policy import make_engine
-from repro.core.recovery import RetryRecovery
+from repro.core.recovery import RetryRecovery, SlotRecovery
 from repro.models import build_model
 
 
@@ -50,6 +74,82 @@ class ServeReport:
     retries: int = 0
     stopped: bool = False          # retry budget exhausted (safe stop)
     wall_s: float = 0.0
+
+
+@dataclass
+class BatchServeReport:
+    """Outcome of one continuous-batching `serve()` run."""
+
+    tokens_emitted: int = 0        # tokens delivered by COMPLETED requests
+    steps: int = 0                 # protected decode steps executed
+    wall_s: float = 0.0
+    detections: List[DetectionEvent] = field(default_factory=list)
+    retries: int = 0               # per-slot re-executions (L0)
+    rollbacks: int = 0             # slot restores from the Tier-0 ring
+    truncated_tokens: int = 0      # optimistic tokens rolled back + redone
+    completed: List[int] = field(default_factory=list)   # request ids
+    rejected: List[int] = field(default_factory=list)    # request ids
+    stopped: bool = False
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_emitted / max(self.wall_s, 1e-9)
+
+    @property
+    def goodput_tokens_per_step(self) -> float:
+        """Delivered tokens per protected step — the wall-clock-free
+        continuous-batching figure of merit (a synchronous wave loop burns
+        steps decoding slots whose requests already finished)."""
+        return self.tokens_emitted / max(self.steps, 1)
+
+
+@jax.jit
+def _slot_write_jit(state, slot, cache_sl, tok_sl, pos_sl, active):
+    """One fused scatter of a slot slice into the packed state (dynamic
+    slot index). Jitted module-level so admissions/rollbacks cost one
+    dispatch per replica instead of one per cache leaf."""
+    cache = jax.tree.map(
+        lambda full, s: full.at[slot].set(s.astype(full.dtype)),
+        state["cache"], cache_sl)
+    return {**state, "cache": cache,
+            "tok": state["tok"].at[slot].set(tok_sl.astype(jnp.int32)),
+            "pos": state["pos"].at[slot].set(pos_sl.astype(jnp.int32)),
+            "active": state["active"].at[slot].set(active)}
+
+
+@jax.jit
+def _set_active_jit(state, slot, value):
+    return {**state, "active": state["active"].at[slot].set(value)}
+
+
+@jax.jit
+def _slot_slice_jit(cache, tok, pos, slot):
+    """Extract one slot's {cache, tok, pos} image (Tier-0 snapshot source)."""
+    return {"cache": jax.tree.map(lambda x: x[slot], cache),
+            "tok": tok[slot], "pos": pos[slot]}
+
+
+def _logits_checksum_guard(logits, spec: Optional[InjectionSpec],
+                           step, armed):
+    """ABFT output guard over one decode step's logits block (DESIGN.md
+    §13): full-checksum encode (row + column sums of the CLEAN block), the
+    kernel-domain corruption window (`InjectionSpec(target='kernel')`
+    faults land between compute and verify), then residual verification
+    with single-element forward correction (abft/ref.py). Returns
+    (verified logits, AbftReport) — a corrected block flows straight into
+    argmax, so the corrected commit emits its token with no re-execution."""
+    from repro.abft.ref import verify_and_correct
+    lg = jnp.asarray(logits, jnp.float32)
+    row = jnp.sum(lg, axis=1, keepdims=True)                 # (B, 1)
+    col = jnp.sum(lg, axis=0, keepdims=True)                 # (1, V)
+    tot = jnp.sum(row, axis=0, keepdims=True)                # (1, 1)
+    c_full = jnp.concatenate(
+        [jnp.concatenate([lg, row], axis=1),
+         jnp.concatenate([col, tot], axis=1)], axis=0)       # (B+1, V+1)
+    if spec is not None and spec.target == "kernel":
+        c_full = make_kernel_fault(spec, step=step, armed=armed)(c_full)
+    out, report = verify_and_correct(c_full, inner_dim=lg.shape[1])
+    return out.astype(logits.dtype), report
 
 
 class SedarServer:
@@ -63,6 +163,7 @@ class SedarServer:
         self.dual = dual
         self.inj_spec = inj_spec
         self.inj_flag = MemoryInjectionFlag()
+        self.max_retries = max_retries
         self._prefill = jax.jit(self._prefill_fn, static_argnums=(2,))
         self._decode = jax.jit(self._decode_fn)
         # Serving boundaries: TDC commit gate on every decode step; no
@@ -78,9 +179,16 @@ class SedarServer:
         self.backend = backend
         fsc_interval = (int(run_cfg.sedar.param_validate_interval)
                         if backend == "hybrid" else 0)
+        self._fsc_interval = fsc_interval
         fp_tree = ((lambda s: {"cache": s["cache"], "tok": s["tok"]})
                    if backend in ("abft", "hybrid")
                    else (lambda s: {"tok": s["tok"]}))
+        self._fp_tree = fp_tree
+        # continuous-batching engines, keyed (slots, max_len, lag): the
+        # packed decode program depends on all three, and reusing the
+        # engine across serve() calls reuses its jit cache
+        self._batch_engines: Dict[Tuple[int, int, int],
+                                  Tuple[SedarEngine, Any, SlotRecovery]] = {}
         self.engine: SedarEngine = make_engine(
             run_cfg.sedar,
             backend=backend,
@@ -101,15 +209,24 @@ class SedarServer:
 
     def _decode_fn(self, state, params, replica_id, armed):
         """Engine step_fn: (decode state, params-as-batch, rid, armed) ->
-        (candidate state, logits fingerprint, logits)."""
-        if self.inj_spec is not None:
+        (candidate state, logits fingerprint, logits[, AbftReport])."""
+        if self.inj_spec is not None and self.inj_spec.target != "kernel":
             params = inject_tree(params, self.inj_spec, step=state["pos"],
                                  replica_id=replica_id, armed=armed)
         logits, cache = self.model.decode_step(params, state["cache"],
                                                state["tok"], state["pos"])
+        report = None
+        if self.backend in ("abft", "hybrid"):
+            # replica-free detection: checksum-guard the logits block; a
+            # forward-corrected commit advances the decode state and its
+            # token is emitted (see generate()/serve() — no re-execution)
+            logits, report = _logits_checksum_guard(
+                logits, self.inj_spec, state["pos"], armed)
         fp = pytree_fingerprint_fused({"logits": logits})
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         cand = {"cache": cache, "tok": tok, "pos": state["pos"] + 1}
+        if report is not None:
+            return cand, fp, logits, report
         return cand, fp, logits
 
     def generate(self, params, prompt_batch: Dict[str, Any], steps: int,
@@ -137,11 +254,12 @@ class SedarServer:
             outcome = eng.run_protected_step(dual, params, pos)
             dual = outcome.dual
             if outcome.event is not None:
-                # validate-before-send: the token is NOT emitted; the step
-                # re-executes via the engine's retry policy. (NB if the
-                # decode step is ever ABFT-instrumented, a forward-corrected
-                # commit advances the decode state here — emit its token
-                # instead of re-executing; see abft/executor.py.)
+                # validate-before-send: on a gated mismatch the token is NOT
+                # emitted and the step re-executes via the engine's retry
+                # policy. An ABFT-instrumented decode step (backend "abft"/
+                # "hybrid") may instead COMMIT FORWARD through repair() —
+                # the position check below emits the corrected token instead
+                # of re-executing (covered by tests/test_serve_batched.py).
                 try:
                     dual = eng.on_detection(outcome.event, dual)
                 except SedarSafeStop:
@@ -165,3 +283,362 @@ class SedarServer:
         rep.tokens_emitted = len(out) * B
         rep.wall_s = time.time() - t0
         return np.stack(out, axis=1), rep
+
+    # ------------------------------------------------------------------
+    # Continuous-batching protected decode (DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def _make_packed_decode(self, n_slots: int):
+        """Packed step_fn over N sequence slots, each with its own cache
+        slice / token / position. Returns per-slot fingerprints (N, 4) so
+        the slotted executors localize mismatches to slots. Inactive slots
+        are excluded from the fingerprint (their rows are zeroed) and their
+        positions are frozen; their cache garbage is unobservable — a
+        refill overwrites the whole slice at prefill."""
+        spec = self.inj_spec
+        abft_guard = self.backend in ("abft", "hybrid")
+        model = self.model
+
+        def step(state, params, replica_id, armed):
+            t = state["t"]
+            if spec is not None and spec.target not in ("kernel", "slot"):
+                params = inject_tree(params, spec, step=t,
+                                     replica_id=replica_id, armed=armed)
+            logits, cache = jax.vmap(
+                lambda c, tk, p: model.decode_step(params, c, tk, p)
+            )(state["cache"], state["tok"], state["pos"])
+            logits = logits.reshape(n_slots, -1)          # (N, V)
+            if spec is not None and spec.target == "slot":
+                # slot-localized SDC: flip one bit of ONE slot's logits
+                # (spec.leaf_idx doubles as the slot index) on the chosen
+                # replica — the per-slot fault the detection must localize
+                fire = jnp.logical_and(
+                    jnp.asarray(armed, jnp.bool_),
+                    jnp.logical_and(
+                        spec_step_hit(spec, t),
+                        jnp.asarray(replica_id) == spec.replica))
+                idx = spec.leaf_idx * logits.shape[-1] + spec.flat_idx
+                logits = jnp.where(fire, flip_bit(logits, idx, spec.bit),
+                                   logits)
+            report = None
+            if abft_guard:
+                logits, report = _logits_checksum_guard(logits, spec, t,
+                                                        armed)
+            act = state["active"]
+            fp = jax.vmap(tensor_fingerprint)(logits)     # (N, 4)
+            fp = jnp.where(act[:, None], fp, jnp.zeros_like(fp))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            cand = {"cache": cache, "tok": tok,
+                    "pos": jnp.where(act, state["pos"] + 1, state["pos"]),
+                    "active": act, "t": t + 1}
+            if report is not None:
+                return cand, fp, tok, report
+            return cand, fp, tok
+
+        return step
+
+    def _batch_engine(self, slots: int, max_len: int, lag: int
+                      ) -> Tuple[SedarEngine, Any, SlotRecovery]:
+        key = (slots, max_len, lag)
+        if key in self._batch_engines:
+            return self._batch_engines[key]
+        from repro.checkpoint.tiers import SlotRing
+        ring = SlotRing(slots_per_key=4)
+        recovery = SlotRecovery(ring, max_retries=self.max_retries)
+        fp_tree = self._fp_tree
+        step = self._make_packed_decode(slots)
+        if self.backend in ("sequential", "fused"):
+            step = jax.jit(step)
+        eng = make_engine(
+            self.cfg.sedar,
+            backend=self.backend,
+            step_fn=step,
+            state_fp_fn=jax.jit(lambda s: pytree_fingerprint(fp_tree(s))),
+            fast_state_fp_fn=jax.jit(
+                lambda s: pytree_fingerprint_fused(fp_tree(s))),
+            schedule=BoundarySchedule(
+                commit_interval=1, validate_interval=self._fsc_interval,
+                checkpoint_interval=0,
+                toe_timeout_s=self.cfg.sedar.toe_timeout_s,
+                validate_lag=lag),
+            recovery=recovery,
+            inj_spec=self.inj_spec, inj_flag=self.inj_flag,
+            notify=lambda e: None,
+            slots=slots if self.backend in ("sequential", "fused") else None)
+        self._batch_engines[key] = (eng, ring, recovery)
+        return eng, ring, recovery
+
+    # -- packed-state surgery (all device-side; no host syncs) ----------------
+
+    def _write_slot(self, eng, dual, slot: int, sl, active: bool = True):
+        """Write one slot slice into EVERY replica image (admission refill /
+        rollback merge). One jitted device scatter per replica through
+        `map_state`."""
+        slot_d = jnp.asarray(slot, jnp.int32)
+        cache_sl = jax.tree.map(jnp.asarray, sl["cache"])
+        tok_sl = jnp.asarray(sl["tok"])
+        pos_sl = jnp.asarray(sl["pos"])
+        act = jnp.asarray(active, jnp.bool_)
+        dual = eng.executor.map_state(
+            lambda st: _slot_write_jit(st, slot_d, cache_sl, tok_sl,
+                                       pos_sl, act), dual)
+        eng.executor.note_external_update()
+        return dual
+
+    def _set_active(self, eng, dual, slot: int, value: bool):
+        slot_d = jnp.asarray(slot, jnp.int32)
+        val = jnp.asarray(value, jnp.bool_)
+        dual = eng.executor.map_state(
+            lambda st: _set_active_jit(st, slot_d, val), dual)
+        eng.executor.note_external_update()
+        return dual
+
+    def _slot_slice(self, eng, dual, slot: int):
+        return _slot_slice_jit(eng.executor.peek(dual, "cache"),
+                               eng.executor.peek(dual, "tok"),
+                               eng.executor.peek(dual, "pos"),
+                               jnp.asarray(slot, jnp.int32))
+
+    def _snapshot_slots(self, eng, dual, sched, ring, version: int) -> None:
+        """Tier-0 per-slot snapshots at the deferred-validation cadence:
+        every RUNNING slot's {cache, tok, pos} image enters its keyed
+        device ring right after a clean flush — pure `jnp.copy`, zero disk
+        reads, zero host syncs (the zero-sync property extends through
+        per-request checkpointing, asserted by tests)."""
+        for slot, _req in sched.running_items():
+            ring.save(slot, version, self._slot_slice(eng, dual, slot))
+
+    def _admit_slot(self, eng, dual, params, slot: int, req, t: int,
+                    ring, ring_on: bool, max_len: int):
+        """Prefill `req` into a freed slot mid-flight: B=1 prefill, device
+        scatter into the packed state, admission snapshot (version = the
+        admit tick, so a deferred fault in the very first window has a
+        rollback target), and emission of the prefill token."""
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, cache = self._prefill(params, {"tokens": prompt}, max_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (1,)
+        sl = {"cache": cache, "tok": tok,
+              "pos": jnp.asarray(req.prompt_len, jnp.int32)}
+        ring.evict(slot)           # never resurrect a previous tenant
+        dual = self._write_slot(eng, dual, slot, sl, active=True)
+        if ring_on:
+            ring.save(slot, t, sl)
+        req.pos0 = req.prompt_len
+        # the prefill token is single-execution (like generate()): the
+        # replica-validated stream starts at the first decode step
+        req.tokens.append(int(hostsync.read_scalar(
+            tok, label="prefill_emit")[0]))
+        req.token_times.append(time.time())
+        return dual
+
+    def _finish(self, sched, slot: int, rep: BatchServeReport) -> None:
+        req = sched.release(slot)
+        rep.completed.append(req.rid)
+
+    def _release_drained(self, eng, sched, rep: BatchServeReport) -> None:
+        for slot, req in list(sched.draining_items()):
+            if eng.validated_frontier >= req.finish_step:
+                self._finish(sched, slot, rep)
+
+    def _handle_event(self, eng, recovery, sched, ring, event, dual,
+                      rep: BatchServeReport, notify=None):
+        """Per-request recovery: route the event through the engine (slot
+        retry / ring restore), then apply the request-level consequences —
+        token-stream truncation for rolled-back slots, eviction +
+        notification for rejected requests, early release for draining
+        slots a failed flush proved clean."""
+        try:
+            dual = eng.on_detection(event, dual)
+        except SedarSafeStop:
+            rep.stopped = True
+            return dual
+        for slot in recovery.take_rejections():
+            req = sched.request(slot)
+            if req is not None:
+                sched.reject(slot, "per-request safe stop: consecutive "
+                             "retry budget exhausted")
+                rep.rejected.append(req.rid)
+                if notify is not None:
+                    notify(req, event)
+            ring.evict(slot)
+            dual = self._set_active(eng, dual, slot, False)
+        for slot, info in recovery.take_restores().items():
+            req = sched.request(slot)
+            if req is None:
+                continue
+            rep.rollbacks += 1
+            keep = max(info["pos"] - req.pos0 + 1, 1)
+            if len(req.tokens) > keep:
+                cut = len(req.tokens) - keep
+                req.truncated_tokens += cut
+                rep.truncated_tokens += cut
+                del req.tokens[keep:]
+                del req.token_times[keep:]
+            if req.status == "draining":
+                sched.reactivate(slot)   # rollback reached its final window
+        if event.boundary == "deferred":
+            # the failed flush EXAMINED every parked predicate: draining
+            # slots not implicated are proven clean through their final
+            # step — release them now (the global frontier regressed to the
+            # faulty step and would otherwise hold them hostage)
+            bad = set(event.detail.get("slots", []))
+            for slot, _req in list(sched.draining_items()):
+                if slot not in bad:
+                    self._finish(sched, slot, rep)
+        return dual
+
+    def serve(self, params, requests, *, slots: int = 4,
+              max_len: Optional[int] = None, validate_lag: Optional[int] = None,
+              queue_depth: int = 0, max_steps: Optional[int] = None,
+              notify_reject=None):
+        """Continuous-batching protected decode over an open-loop request
+        stream. Mutates and returns the `Request` objects (lifecycle fields
+        are reset first, so a template list can be replayed for fault-free
+        twins) plus a `BatchServeReport`.
+
+        `validate_lag` > 1 arms the deferred window: the fault-free decode
+        step performs NO host sync beyond token emission, detection lags by
+        <= D steps, and a detected fault rolls back only the affected slots
+        from the Tier-0 ring. `queue_depth` bounds the admission queue
+        (backpressure -> immediate rejection)."""
+        from repro.runtime.scheduler import (DRAINING, RequestQueue,
+                                             SlotScheduler)
+        if self.cfg.model.frontend:
+            raise NotImplementedError(
+                "continuous batching serves token-prompt families; frontend "
+                "(VLM/audio) prompts need per-request embed plumbing")
+        rep = BatchServeReport()
+        t0 = time.time()
+        for r in requests:
+            r.status, r.slot = "pending", None
+            r.tokens, r.token_times = [], []
+            r.pos0, r.admit_step, r.finish_step = 0, None, None
+            r.truncated_tokens, r.reject_reason = 0, ""
+        max_prompt = max((r.prompt_len for r in requests), default=8)
+        max_new = max((r.max_new_tokens for r in requests), default=8)
+        max_len = max_len or (max_prompt + max_new + 8)
+        lag = int(validate_lag
+                  if validate_lag is not None
+                  else getattr(self.cfg.sedar, "validate_lag", 1))
+        eng, ring, recovery = self._batch_engine(slots, max_len, max(lag, 1))
+        eng.reset()
+        recovery.reset()
+        self.inj_flag.reset()
+        recovery.merge = lambda dual, slot, sl: self._write_slot(
+            eng, dual, slot, sl, active=True)
+        ring_on = eng.validate_lag > 1   # clamped lag => pre-commit gating
+
+        sched = SlotScheduler(slots, RequestQueue(queue_depth))
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        cache1, _ = self.model.init_cache(1, max_len)
+        state = {"cache": jax.tree.map(
+                     lambda x: jnp.stack([x] * slots), cache1),
+                 "tok": jnp.zeros((slots, 1), jnp.int32),
+                 "pos": jnp.zeros((slots,), jnp.int32),
+                 "active": jnp.zeros((slots,), jnp.bool_),
+                 "t": jnp.asarray(0, jnp.int32)}
+        dual = eng.executor.init_dual(state)
+
+        t = 0
+        cap = max_steps or (sum(r.max_new_tokens for r in requests)
+                            + len(requests)) * 4 + 64
+        while t < cap and (pending or len(sched.queue) or sched.busy):
+            while pending and pending[0].arrival <= t:
+                req = pending.pop(0)
+                if not sched.queue.offer(req):
+                    rep.rejected.append(req.rid)   # backpressure shed
+            for slot, req in sched.admit(t):
+                dual = self._admit_slot(eng, dual, params, slot, req, t,
+                                        ring, ring_on, max_len)
+                if len(req.tokens) >= req.max_new_tokens:
+                    # budget of 1: the prefill token already fills it; the
+                    # prefill is single-execution (outside replica
+                    # validation, like generate()), so release immediately
+                    dual = self._set_active(eng, dual, slot, False)
+                    sched.drain(slot, finish_step=t)
+                    self._finish(sched, slot, rep)
+            if not sched.running_items():
+                if sched.draining_items():
+                    ev = eng.flush_deferred()
+                    if ev is not None:
+                        dual = self._handle_event(eng, recovery, sched, ring,
+                                                  ev, dual, rep,
+                                                  notify_reject)
+                    self._release_drained(eng, sched, rep)
+                    # quiescence: no runners, no parked predicates — the
+                    # remaining drainers were never proven bad (their
+                    # evidence either flushed clean or was consumed by an
+                    # event that did not implicate them) and nothing will
+                    # ever re-examine them; holding them would spin forever
+                    if not eng.pending_validation and \
+                            not sched.running_items():
+                        for slot, _req in list(sched.draining_items()):
+                            self._finish(sched, slot, rep)
+                    continue
+                if pending or len(sched.queue):
+                    # idle tick awaiting arrivals: advance the DEVICE decode
+                    # tick too — state['t'] gates injection firing while the
+                    # engine's once-only flag is marked on the DRIVER step,
+                    # so letting the clocks drift would disarm a campaign's
+                    # fault before the device ever reached its step
+                    dual = eng.executor.map_state(
+                        lambda st: {**st, "t": st["t"] + 1}, dual)
+                    t += 1
+                    continue
+                break
+            outcome = eng.run_protected_step(dual, params, t)
+            dual = outcome.dual
+            rep.steps += 1
+            if outcome.event is not None:
+                dual = self._handle_event(eng, recovery, sched, ring,
+                                          outcome.event, dual, rep,
+                                          notify_reject)
+            elif ring_on and not eng.pending_validation:
+                # clean flush boundary: cut the Tier-0 per-slot snapshots
+                self._snapshot_slots(eng, dual, sched, ring, version=t + 1)
+            # token emission — the ONE per-step readback of the hot path:
+            # tok + pos fetched in a single transfer batch; per-slot
+            # position deltas drive emission, so partial commits (faulty
+            # slot frozen) and rollbacks (position regressed) need no
+            # special-casing here
+            toks, poss = hostsync.batched_get(
+                [eng.executor.peek(dual, "tok"),
+                 eng.executor.peek(dual, "pos")], label="token_emit")
+            now_wall = time.time()
+            for slot, req in sched.running_items():
+                target = int(poss[slot]) - req.pos0 + 1
+                if target == len(req.tokens) + 1:
+                    req.tokens.append(int(toks[slot, 0]))
+                    req.token_times.append(now_wall)
+                if len(req.tokens) >= req.max_new_tokens:
+                    sched.drain(slot, finish_step=t + 1)
+                    dual = self._set_active(eng, dual, slot, False)
+                    if eng.validate_lag == 1:
+                        # immediate mode: every emitted token passed the
+                        # commit gate (emission follows committed position
+                        # deltas), so the stream is already validated even
+                        # if ANOTHER slot's event kept the global frontier
+                        # behind — release the slot now
+                        self._finish(sched, slot, rep)
+            self._release_drained(eng, sched, rep)
+            t += 1
+
+        ev = eng.flush_deferred()
+        if ev is not None:
+            dual = self._handle_event(eng, recovery, sched, ring, ev, dual,
+                                      rep, notify_reject)
+        self._release_drained(eng, sched, rep)
+        # quiescence: drainers whose evidence was consumed by an event they
+        # were not implicated in (ring cleared, frontier regressed) have no
+        # pending predicates left and were never proven bad — release
+        if not eng.pending_validation:
+            for slot, req in list(sched.draining_items()):
+                if req.status == DRAINING:
+                    self._finish(sched, slot, rep)
+
+        rep.detections = list(eng.detections)
+        rep.retries = sum(1 for r in eng.recoveries if r["kind"] == "retry")
+        rep.tokens_emitted = sum(len(r.tokens) for r in requests
+                                 if r.status == "done")
+        rep.wall_s = time.time() - t0
+        return requests, rep

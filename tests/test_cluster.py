@@ -42,12 +42,76 @@ def test_straggler_detection(tmp_path):
     assert mon.stragglers() == [3]
 
 
+def test_straggler_factor_direction(tmp_path):
+    """Regression: a LARGER straggler_factor must be LESS sensitive (more
+    lag tolerated), a smaller one MORE sensitive. The old `med / factor`
+    threshold inverted this."""
+    d = str(tmp_path)
+    for h in range(4):
+        Heartbeat(d, h).beat(step=100 if h != 3 else 40)
+    # host 3 is at 40% of median progress: factor=2 (flag below 50) catches
+    # it, factor=10 (flag below 10) must NOT
+    assert ClusterMonitor(d, n_hosts=4, straggler_factor=2.0).stragglers() \
+        == [3]
+    assert ClusterMonitor(d, n_hosts=4, straggler_factor=10.0).stragglers() \
+        == []
+
+
+def test_straggler_tightening_factor(tmp_path):
+    """A factor close to 1 flags even mild lag (the sensitive direction)."""
+    d = str(tmp_path)
+    for h in range(4):
+        Heartbeat(d, h).beat(step=100 if h != 2 else 90)
+    assert ClusterMonitor(d, n_hosts=4, straggler_factor=2.0).stragglers() \
+        == []
+    assert ClusterMonitor(d, n_hosts=4, straggler_factor=1.05).stragglers() \
+        == [2]
+
+
+def test_straggler_grace_floor(tmp_path):
+    """Early-run jitter (median 2, one host at 0) is not a straggler."""
+    d = str(tmp_path)
+    for h in range(4):
+        Heartbeat(d, h).beat(step=2 if h != 3 else 0)
+    assert ClusterMonitor(d, n_hosts=4, straggler_factor=2.0).stragglers() \
+        == []
+
+
+def test_stale_hosts_honors_zero_now(tmp_path):
+    """Regression: `now=0.0` is a legal clock origin, not 'unset'. The old
+    `now or time.time()` substituted wall time, which flagged fresh beats
+    stale once the timeout elapsed in wall-clock terms."""
+    d = str(tmp_path)
+    Heartbeat(d, 0).beat(step=5)
+    mon = ClusterMonitor(d, n_hosts=1, timeout_s=0.01)
+    time.sleep(0.05)
+    # wall clock has passed the timeout; with now=0.0 every beat lies in
+    # the future of the simulated clock, so nothing is stale
+    assert mon.stale_hosts() == [0]
+    assert mon.stale_hosts(now=0.0) == []
+
+
 def test_elastic_plan():
     plan = plan_elastic_remesh(data_axis=16, global_batch=256,
                                lost_hosts=[5])
     assert plan.new_data == 15
     assert plan.new_global_batch == 240
     assert plan.new_global_batch % plan.new_data == 0
+
+
+def test_elastic_plan_preserves_per_shard_batch():
+    plan = plan_elastic_remesh(data_axis=8, global_batch=64,
+                               lost_hosts=[1, 6])
+    assert plan.new_data == 6
+    # per-shard batch (8) preserved exactly
+    assert plan.new_global_batch == 6 * (64 // 8)
+
+
+def test_elastic_plan_rejects_indivisible_batch():
+    """Regression: global_batch % data_axis != 0 must raise instead of
+    silently flooring the per-shard batch the docstring promises to keep."""
+    with pytest.raises(ValueError, match="not divisible"):
+        plan_elastic_remesh(data_axis=16, global_batch=250, lost_hosts=[5])
 
 
 def test_elastic_plan_all_lost_raises():

@@ -1,0 +1,82 @@
+"""Continuous-batching scheduler: queue backpressure, slot lifecycle,
+open-loop traffic generation (DESIGN.md §13)."""
+import numpy as np
+
+from repro.runtime.scheduler import (DONE, DRAINING, QUEUED, REJECTED,
+                                     RUNNING, Request, RequestQueue,
+                                     SlotScheduler, synthetic_requests,
+                                     token_latencies)
+
+
+def _req(rid, arrival=0, L=4, new=4):
+    return Request(rid=rid, prompt=np.zeros((L,), np.int32),
+                   max_new_tokens=new, arrival=arrival)
+
+
+def test_queue_backpressure_rejects_immediately():
+    q = RequestQueue(max_depth=2)
+    assert q.offer(_req(0)) and q.offer(_req(1))
+    shed = _req(2)
+    assert not q.offer(shed)
+    assert shed.status == REJECTED and shed.reject_reason == "backpressure"
+    assert len(q) == 2 and q.rejected == [shed]
+
+
+def test_queue_unbounded_by_default():
+    q = RequestQueue()
+    for i in range(64):
+        assert q.offer(_req(i))
+    assert len(q) == 64
+
+
+def test_admit_pairs_free_slots_fifo():
+    sched = SlotScheduler(2)
+    for i in range(3):
+        sched.queue.offer(_req(i))
+    pairs = sched.admit(step=5)
+    assert [(s, r.rid) for s, r in pairs] == [(0, 0), (1, 1)]
+    assert all(r.status == RUNNING and r.admit_step == 5 for _, r in pairs)
+    assert len(sched.queue) == 1 and not sched.free_slots()
+    # freeing a slot lets the queued request join mid-flight
+    sched.release(0)
+    pairs = sched.admit(step=9)
+    assert [(s, r.rid) for s, r in pairs] == [(0, 2)]
+
+
+def test_slot_lifecycle_drain_reactivate_release():
+    sched = SlotScheduler(1)
+    sched.queue.offer(_req(7))
+    [(slot, req)] = sched.admit(step=0)
+    sched.drain(slot, finish_step=12)
+    assert req.status == DRAINING and req.finish_step == 12
+    sched.reactivate(slot)        # rollback hit the final window
+    assert req.status == RUNNING and req.finish_step is None
+    sched.drain(slot, finish_step=15)
+    out = sched.release(slot)
+    assert out is req and req.status == DONE and sched.free_slots() == [0]
+
+
+def test_reject_frees_slot_with_reason():
+    sched = SlotScheduler(1)
+    sched.queue.offer(_req(3))
+    [(slot, req)] = sched.admit(step=0)
+    sched.reject(slot, "per-request safe stop")
+    assert req.status == REJECTED and "safe stop" in req.reject_reason
+    assert sched.free_slots() == [0] and not sched.busy
+
+
+def test_synthetic_requests_deterministic_and_open_loop():
+    a = synthetic_requests(8, arrival_rate=0.5, seed=11)
+    b = synthetic_requests(8, arrival_rate=0.5, seed=11)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    # arrivals are non-decreasing and a faster rate compresses them
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    fast = synthetic_requests(8, arrival_rate=50.0, seed=11)
+    assert fast[-1].arrival <= a[-1].arrival
+
+
+def test_token_latencies_inter_token_gaps():
+    r = _req(0)
+    r.token_times = [1.0, 1.5, 2.5]
+    assert token_latencies([r]) == [0.5, 1.0]

@@ -201,3 +201,62 @@ def test_advisor_reports_tier_schedule():
     assert a.tiered_aet_hours > 0
     assert "tier schedule" in a.notes
     assert advise(tm.PAPER_TABLE3["JACOBI"], 20.0).tier_schedule == {}
+
+
+# ---------------------------------------------------------------------------
+# Serving-under-fault terms (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_serve_goodput_per_request_beats_whole_batch():
+    """Per-request recovery discards one SLOT's window per fault instead of
+    every slot's: goodput is strictly higher for n_slots > 1 and the gap
+    widens with the slot count."""
+    p = _deferred_params()
+    for n in (2, 8, 32):
+        pr = tm.serve_goodput(p, 5.0, n, D=8, per_request=True)
+        wb = tm.serve_goodput(p, 5.0, n, D=8, per_request=False)
+        assert 0.0 < wb < pr <= 1.0
+    gap8 = (tm.serve_goodput(p, 5.0, 8, 8, True)
+            - tm.serve_goodput(p, 5.0, 8, 8, False))
+    gap2 = (tm.serve_goodput(p, 5.0, 2, 8, True)
+            - tm.serve_goodput(p, 5.0, 2, 8, False))
+    assert gap8 > gap2
+
+
+def test_serve_goodput_degrades_with_lag_and_fault_rate():
+    p = _deferred_params()
+    assert tm.serve_goodput(p, 5.0, 8, D=32) < tm.serve_goodput(p, 5.0, 8, D=4)
+    assert tm.serve_goodput(p, 0.5, 8, D=8) < tm.serve_goodput(p, 5.0, 8, D=8)
+    # unparameterized -> trivially 1.0
+    assert tm.serve_goodput(tm.PAPER_TABLE3["JACOBI"], 5.0, 8, D=8) == 1.0
+
+
+def test_serve_availability_scopes_stall_to_one_slot():
+    p = _deferred_params()
+    pr = tm.serve_availability(p, 5.0, 8, D=8, per_request=True)
+    wb = tm.serve_availability(p, 5.0, 8, D=8, per_request=False)
+    assert 0.0 < wb < pr <= 1.0
+    # whole-batch recovery stalls every sequence: the availability loss is
+    # n_slots times the per-request one
+    assert abs((1 - wb) - 8 * (1 - pr)) < 1e-12
+
+
+def test_optimal_serve_lag_tolerates_longer_windows_than_training():
+    """Serving's per-fault discard is one slot's window (1/n_slots of the
+    machine), so the serving optimum is at least the training optimum at
+    the same parameters — and 1 when the deferred terms are unset."""
+    p = _deferred_params()
+    train_lag = tm.optimal_validate_lag(p, 5.0)
+    serve_lag = tm.optimal_serve_lag(p, 5.0, n_slots=8)
+    assert serve_lag >= train_lag >= 1
+    assert tm.optimal_serve_lag(tm.PAPER_TABLE3["JACOBI"], 5.0, 8) == 1
+
+
+def test_advisor_reports_serving_guidance():
+    from repro.core.policy import advise
+    p = _deferred_params()
+    a = advise(p, mtbe_hours=20.0, serve_slots=8)
+    assert a.serve_validate_lag >= 1
+    assert 0.0 < a.serve_goodput_whole_batch < a.serve_goodput <= 1.0
+    assert 0.0 < a.serve_availability <= 1.0
+    assert "serving (8 slots)" in a.notes

@@ -18,8 +18,8 @@ One workload, three serving disciplines over the smoke-reduced qwen2-0.5b:
 
 Figures of merit: delivered tokens/s (wall), goodput in delivered tokens
 per protected step (scheduling efficiency, wall-noise-free), p50/p99
-inter-token latency for the continuous rows. `continuous_beats_sync` in
-the JSON is the PR acceptance flag.
+inter-token latency AND p50/p99 time-to-first-token for the continuous
+rows. `continuous_beats_sync` in the JSON is the PR acceptance flag.
 """
 import json
 import time
@@ -97,7 +97,8 @@ def _bench_continuous(srv, params, name, lag, expect_fault=False,
                       reps=N_REPS, warm=True):
     from repro.checkpoint import count_disk_reads
     from repro.core import hostsync
-    from repro.runtime.scheduler import latency_percentiles_ms
+    from repro.runtime.scheduler import (latency_percentiles_ms,
+                                         ttft_percentiles_ms)
 
     if warm:
         srv.serve(params, _requests(), slots=SLOTS, validate_lag=lag)
@@ -112,6 +113,7 @@ def _bench_continuous(srv, params, name, lag, expect_fault=False,
             best = (dt, out, rep, st, dr)
     dt, out, rep, st, dr = best
     p50, p99 = latency_percentiles_ms(out)
+    tt50, tt99 = ttft_percentiles_ms(out)
     hot = sum(v for k, v in st.by_label.items()
               if k not in ("token_emit", "prefill_emit", "deferred_flush"))
     row = {"name": name, "validate_lag": lag,
@@ -121,6 +123,8 @@ def _bench_continuous(srv, params, name, lag, expect_fault=False,
                round(rep.goodput_tokens_per_step, 3),
            "p50_token_latency_ms": round(p50, 3),
            "p99_token_latency_ms": round(p99, 3),
+           "ttft_p50_ms": round(tt50, 3),
+           "ttft_p99_ms": round(tt99, 3),
            "detections": len(rep.detections), "rollbacks": rep.rollbacks,
            "truncated_tokens": rep.truncated_tokens,
            "rejected": len(rep.rejected),
@@ -155,10 +159,12 @@ def main() -> None:
                                   expect_fault=True))
 
     for r in rows:
+        ttft = (f" TTFT p50/p99={r['ttft_p50_ms']}/{r['ttft_p99_ms']}ms"
+                if "ttft_p50_ms" in r else "")
         emit(f"serve_{r['name']}", 1e6 / max(r["tokens_per_s"], 1e-9),
              f"tok/s={r['tokens_per_s']} "
              f"goodput/step={r['goodput_tokens_per_step']} "
-             f"rollbacks={r['rollbacks']}")
+             f"rollbacks={r['rollbacks']}{ttft}")
 
     by = {r["name"]: r for r in rows}
     sync = by["sync_whole_batch"]

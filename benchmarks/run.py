@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
     serve_*    — continuous-batching vs synchronous whole-batch serving,
                  goodput under injected faults (DESIGN.md §13); --json
                  writes BENCH_serve.json
+    prefill_*  — bucketed packed protected prefill: pack-launch speedup,
+                 AOT compile-cache (no traffic-time compiles), TTFT
+                 arrival sweep (DESIGN.md §14); --json writes
+                 BENCH_prefill.json
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -34,6 +38,7 @@ MODULES = [
     "benchmarks.bench_protected_step",
     "benchmarks.bench_checkpoint",
     "benchmarks.bench_serve",
+    "benchmarks.bench_prefill",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -49,6 +54,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_protected_step",
     "benchmarks.bench_checkpoint",
     "benchmarks.bench_serve",
+    "benchmarks.bench_prefill",
 ]
 
 
@@ -63,11 +69,13 @@ def main() -> None:
     args = ap.parse_args()
     if args.json:
         import benchmarks.bench_checkpoint as bck
+        import benchmarks.bench_prefill as bpf
         import benchmarks.bench_protected_step as bps
         import benchmarks.bench_serve as bsv
         bps.JSON_PATH = "BENCH_protected_step.json"
         bck.JSON_PATH = "BENCH_checkpoint.json"
         bsv.JSON_PATH = "BENCH_serve.json"
+        bpf.JSON_PATH = "BENCH_prefill.json"
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:

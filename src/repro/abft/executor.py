@@ -51,6 +51,80 @@ def _report_summary(report) -> Dict[str, Any]:
             "max_residual": float(np.asarray(report.max_residual))}
 
 
+def logits_checksum_guard(logits, spec, step, armed):
+    """ABFT output guard over one logits block (DESIGN.md §13): full-
+    checksum encode (row + column sums of the CLEAN block), the
+    kernel-domain corruption window (`InjectionSpec(target='kernel')`
+    faults land between compute and verify), then residual verification
+    with single-element forward correction (abft/ref.py). Returns
+    (verified logits, AbftReport) — a corrected block flows straight into
+    argmax, so the corrected commit emits its token with no re-execution.
+
+    Shared by the decode step (runtime/serve.py) and the packed-prefill
+    guard below: the checksummed block is (B, V) either way — decode rows
+    are slots, prefill rows are pack prompts."""
+    from repro.abft.ref import verify_and_correct
+    from repro.core.injection import make_kernel_fault
+    lg = jnp.asarray(logits, jnp.float32)
+    row = jnp.sum(lg, axis=1, keepdims=True)                 # (B, 1)
+    col = jnp.sum(lg, axis=0, keepdims=True)                 # (1, V)
+    tot = jnp.sum(row, axis=0, keepdims=True)                # (1, 1)
+    c_full = jnp.concatenate(
+        [jnp.concatenate([lg, row], axis=1),
+         jnp.concatenate([col, tot], axis=1)], axis=0)       # (B+1, V+1)
+    if spec is not None and spec.target == "kernel":
+        c_full = make_kernel_fault(spec, step=step, armed=armed)(c_full)
+    out, report = verify_and_correct(c_full, inner_dim=lg.shape[1])
+    return out.astype(logits.dtype), report
+
+
+def pack_checksum_guard(logits, spec, tick, armed):
+    """Per-PROMPT verdict on top of `logits_checksum_guard` for packed
+    prefill (runtime/prefill.py): corrected/clean blocks admit every row;
+    an uncorrectable fault localizes to the rows whose checksum residuals
+    are violated (recomputed here — the report carries only counts), and
+    only those rows are marked bad. An uncorrectable fault that violates
+    no row residual (e.g. the checksum row itself under a multi-element
+    hit) cannot be localized: the whole pack is marked bad (retry).
+
+    The corruption window is `target='prefill_kernel'` — DISTINCT from the
+    decode window's 'kernel', so a campaign aimed at one stage never fires
+    (and gets consumed/disarmed) in the other.
+
+    Returns (verified logits, verdict (K,) int32, AbftReport) with the
+    VERDICT_* encoding from runtime/prefill.py."""
+    import dataclasses
+    from repro.abft.ref import residual_threshold, verify_and_correct
+    from repro.core.injection import make_kernel_fault
+    lg = jnp.asarray(logits, jnp.float32)
+    K, V = lg.shape
+    row = jnp.sum(lg, axis=1, keepdims=True)
+    col = jnp.sum(lg, axis=0, keepdims=True)
+    tot = jnp.sum(row, axis=0, keepdims=True)
+    c_full = jnp.concatenate(
+        [jnp.concatenate([lg, row], axis=1),
+         jnp.concatenate([col, tot], axis=1)], axis=0)       # (K+1, V+1)
+    if spec is not None and spec.target == "prefill_kernel":
+        kspec = dataclasses.replace(spec, target="kernel")
+        c_full = make_kernel_fault(kspec, step=tick, armed=armed)(c_full)
+    out, report = verify_and_correct(c_full, inner_dim=V)
+    # per-row violation mask — the same residual math verify_and_correct
+    # thresholds internally (its report carries only the COUNTS)
+    c = c_full[:K, :V]
+    row_res = jnp.sum(c, axis=1) - c_full[:K, V]
+    row_tau = residual_threshold(jnp.sum(jnp.abs(c), axis=1), V + max(K, V))
+    row_bad = jnp.abs(row_res) > row_tau
+    verdict = jnp.where(
+        report.uncorrectable,
+        jnp.where(jnp.any(row_bad),
+                  jnp.where(row_bad, 0, 1),          # localized: bad rows only
+                  jnp.zeros((K,), jnp.int32)),       # unlocalizable: whole pack
+        jnp.where(report.corrected,
+                  jnp.full((K,), 2, jnp.int32),      # VERDICT_CORRECTED
+                  jnp.full((K,), 1, jnp.int32)))     # VERDICT_CLEAN
+    return out.astype(logits.dtype), verdict.astype(jnp.int32), report
+
+
 class AbftExecutor(ReplicaExecutor):
     """Single-instance executor with checksum-based detection (+ optional
     hybrid fingerprint validation for the escaped-fault classes)."""

@@ -168,6 +168,14 @@ class SlotRing:
         ring._put(step, jax.tree.map(jnp.copy, state_slice), keep_floor=None)
         self.saves += 1
 
+    def save_many(self, step: int, slices: "Dict[int, Any]") -> None:
+        """Batched admission snapshots (DESIGN.md §14): one call records a
+        whole prefill pack's slot slices at the same version. The copies
+        are issued together before any is awaited — still pure `jnp.copy`,
+        zero disk, zero host syncs."""
+        for key, sl in slices.items():
+            self.save(key, step, sl)
+
     def restore(self, key: int, max_step: Optional[int] = None
                 ) -> Tuple[int, Any]:
         """Newest version at-or-below `max_step` for `key` ->

@@ -44,6 +44,11 @@ class InjectionSpec:
     target   : grads | params | opt_state  (TDC vs FSC class) | kernel
                (corruption INSIDE a protected kernel's compute, pre-verify —
                the ABFT detection domain; see `make_kernel_fault`).
+               Serving adds slot (one decode slot's logits), prefill (one
+               pack row's logits during packed admission, leaf_idx = the
+               row) and prefill_kernel (the packed-prefill ABFT checksum
+               window) — distinct targets so a campaign aimed at one stage
+               never fires, and gets disarmed, in another.
     n_elems  : number of corrupted elements (>1 defeats ABFT single-element
                correction: the detected-uncorrectable scenario class).
     dtype    : optional target-leaf dtype name; when given, `bit` is
@@ -156,13 +161,21 @@ def inject_tree(tree, spec: Optional[InjectionSpec], *, step, replica_id,
     if spec is None:
         return tree
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    # The injection ops must not perturb the CLEAN path bitwise: an
+    # unconditionally-computed flip feeding a `where` gives the target
+    # leaf's producer a second consumer, and XLA's changed fusion can drift
+    # its rounding by 1 ULP — a never-firing spec would then diverge from
+    # the uninjected program (breaking every bitwise fault-free-twin
+    # comparison). `cond` keeps the flip in a separate branch computation:
+    # the not-firing path routes the leaf through untouched.
     target = leaves[spec.leaf_idx]
     fire = jnp.logical_and(
         jnp.asarray(armed, jnp.bool_),
         jnp.logical_and(spec_step_hit(spec, step),
                         jnp.asarray(replica_id) == spec.replica))
-    corrupted = flip_bit(target, spec.flat_idx, spec.bit)
-    leaves[spec.leaf_idx] = jnp.where(fire, corrupted, target)
+    leaves[spec.leaf_idx] = jax.lax.cond(
+        fire, lambda x: flip_bit(x, spec.flat_idx, spec.bit),
+        lambda x: x, target)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -18,6 +18,11 @@ campaign injected into the decode stream:
 
     # per-request rejection demo: a stuck bit on one slot
     ... --fault-slot 1 --fault-step 5 --fault-persistent --max-retries 3
+
+    # bucketed packed prefill with AOT warmup (DESIGN.md §14): every
+    # (bucket, pack) prefill program compiles BEFORE traffic — admission
+    # then never pays a traffic-time compile
+    ... --continuous --warmup --prefill-buckets 8,16,32 --max-pack 4
 """
 from __future__ import annotations
 
@@ -45,7 +50,8 @@ def _parse_prompt_mix(spec: str):
 def _continuous(args, cfg) -> None:
     from repro.core.injection import InjectionSpec
     from repro.runtime.scheduler import (latency_percentiles_ms,
-                                         synthetic_requests)
+                                         synthetic_requests,
+                                         ttft_percentiles_ms)
 
     spec = None
     if args.fault_slot is not None:
@@ -69,10 +75,13 @@ def _continuous(args, cfg) -> None:
                 leaf_idx=args.fault_slot, flat_idx=7, bit=30,
                 step=args.fault_step, replica=replica, target="slot",
                 persistent=args.fault_persistent)
+    buckets = (tuple(int(b) for b in args.prefill_buckets.split(","))
+               if args.prefill_buckets else None)
     srv = make_server(RunConfig(model=cfg, train=TrainConfig()),
                       dual=(args.backend == "sequential"),
                       backend=args.backend, inj_spec=spec,
-                      max_retries=args.max_retries)
+                      max_retries=args.max_retries,
+                      prefill_buckets=buckets, max_pack=args.max_pack)
     params = srv.model.init(jax.random.PRNGKey(0))
     lengths, weights = _parse_prompt_mix(args.prompt_mix)
     reqs = synthetic_requests(
@@ -80,6 +89,14 @@ def _continuous(args, cfg) -> None:
         prompt_lengths=lengths, length_weights=weights,
         max_new_choices=tuple(int(x) for x in args.max_new.split(",")),
         vocab=min(cfg.vocab_size, 200), seed=args.seed)
+    if args.warmup:
+        # same max_len formula serve() uses, so the warmed programs are the
+        # ones traffic hits (DESIGN.md §14 AOT warmup contract)
+        max_len = (max(r.prompt_len for r in reqs)
+                   + max(r.max_new_tokens for r in reqs) + 8)
+        n = srv.warmup_prefill(params, max_len)
+        print(f"[SEDAR] prefill warmup: {n} (bucket, pack) programs "
+              f"compiled ahead of traffic")
     out, rep = srv.serve(
         params, reqs, slots=args.slots, validate_lag=args.validate_lag,
         queue_depth=args.queue_depth,
@@ -87,14 +104,18 @@ def _continuous(args, cfg) -> None:
             f"[SEDAR] request {r.rid} REJECTED after {e.boundary} fault "
             f"(per-request safe stop)", flush=True))
     p50, p99 = latency_percentiles_ms(out)
+    tt50, tt99 = ttft_percentiles_ms(out)
     print(f"{args.arch}: {rep.tokens_emitted} tokens delivered over "
           f"{rep.steps} protected steps ({rep.tokens_per_s:.1f} tok/s, "
           f"goodput {rep.goodput_tokens_per_step:.2f} tok/step), "
-          f"p50/p99 inter-token {p50:.2f}/{p99:.2f} ms")
+          f"p50/p99 inter-token {p50:.2f}/{p99:.2f} ms, "
+          f"p50/p99 TTFT {tt50:.2f}/{tt99:.2f} ms")
     print(f"  completed={len(rep.completed)} rejected={rep.rejected} "
           f"detections={len(rep.detections)} retries={rep.retries} "
           f"rollbacks={rep.rollbacks} "
-          f"truncated+redecoded={rep.truncated_tokens} tokens")
+          f"truncated+redecoded={rep.truncated_tokens} tokens, "
+          f"prefill packs={rep.prefill_packs} "
+          f"prefill retries={rep.prefill_retries}")
     for e in rep.detections:
         print(f"  {e} slots={e.detail.get('slots')}")
 
@@ -148,6 +169,15 @@ def main() -> None:
     ap.add_argument("--max-retries", type=int, default=8,
                     help="consecutive per-slot failures before the request "
                          "is rejected (per-request L1)")
+    ap.add_argument("--prefill-buckets", default="",
+                    help="comma list of prompt-length buckets for packed "
+                         "admission prefill (empty = geometric default, "
+                         "DESIGN.md §14)")
+    ap.add_argument("--max-pack", type=int, default=4,
+                    help="max prompts packed into one prefill launch")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every (bucket, pack) prefill program "
+                         "before traffic (no traffic-time compiles)")
     ap.add_argument("--seed", type=int, default=0)
     # fault campaign
     ap.add_argument("--fault-slot", type=int, default=None,

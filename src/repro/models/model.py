@@ -226,7 +226,8 @@ def _build_lm(cfg: ModelConfig) -> Model:
 
     def prefill(params, batch, max_len, ctx):
         return tfm.lm_prefill(cfg, params, batch["tokens"], max_len, ctx,
-                              batch.get("frontend_embeds"))
+                              batch.get("frontend_embeds"),
+                              lengths=batch.get("lengths"))
 
     def decode(params, cache, tokens, pos, ctx):
         return tfm.lm_decode_step(cfg, params, cache, tokens, pos, ctx)

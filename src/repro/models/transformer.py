@@ -591,11 +591,28 @@ def _hybrid_group_prefill(cfg, gp, x, sin, cos, ctx, pattern, cache_dtype):
 
 
 def lm_prefill(cfg, params, tokens, max_len: int, ctx=None,
-               frontend_embeds=None, cache_dtype=jnp.bfloat16):
+               frontend_embeds=None, cache_dtype=jnp.bfloat16,
+               lengths=None):
     """Prefill: run the trunk over the prompt and build the decode cache.
-    Returns (last_logits (B,V), cache)."""
+    Returns (last_logits (B,V), cache).
+
+    `lengths` (B,) enables RIGHT-PADDED prompts (runtime/prefill.py bucket
+    padding): the last-hidden gather happens at each row's true final
+    position instead of S-1. Only the dense/window-free family supports it —
+    causal attention means real positions never attend pad columns, and the
+    decode-time mask (`slots <= pos` with pos starting at the true length)
+    keeps the pad garbage written beyond `lengths` in the KV cache forever
+    unobservable: decode overwrites slot `pos` BEFORE attending it. Stateful
+    families (recurrent/ssm/xlstm scans fold every position into their
+    state) and ring-buffer window caches cannot skip padding, so `lengths`
+    raises there rather than silently corrupting."""
     B = tokens.shape[0]
     if cfg.block_pattern:
+        if lengths is not None:
+            raise NotImplementedError(
+                "length-gathered (right-padded) prefill needs positions to "
+                "be skippable; recurrent/ssm/window states fold every "
+                "position in — pad-to-bucket is dense-family only")
         x = nn.embed_tokens(cfg, params["embed"], tokens)
         x = _act(ctx, x, "batch", "seq", None)
         S = x.shape[1]
@@ -618,6 +635,10 @@ def lm_prefill(cfg, params, tokens, max_len: int, ctx=None,
         logits = nn.logits_from_hidden(cfg, params["embed"], x[:, -1:, :])[:, 0, :]
         return logits, cache
 
+    if lengths is not None and cfg.window_size:
+        raise NotImplementedError(
+            "length-gathered prefill is incompatible with ring-buffer "
+            "window caches: pad entries would wrap onto real slots")
     h, kv, _ = lm_hidden(cfg, params, tokens, ctx, frontend_embeds,
                          collect_kv=True)
     cache, _ = init_cache(cfg, B, max_len, cache_dtype)
@@ -626,7 +647,14 @@ def lm_prefill(cfg, params, tokens, max_len: int, ctx=None,
         cache["k"], k.astype(cache_dtype), (0, 0, 0, 0, 0))
     cache["v"] = jax.lax.dynamic_update_slice(
         cache["v"], v.astype(cache_dtype), (0, 0, 0, 0, 0))
-    logits = nn.logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    if lengths is None:
+        h_last = h[:, -1:, :]
+    else:
+        P = frontend_embeds.shape[1] if frontend_embeds is not None else 0
+        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1 + P, 0,
+                       h.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = nn.logits_from_hidden(cfg, params["embed"], h_last)[:, 0, :]
     return logits, cache
 
 

@@ -1,0 +1,382 @@
+"""Bucketed, packed, PROTECTED prefill with an AOT compile cache (DESIGN.md §14).
+
+Serving admission used to be the last unprotected, unamortized stage of the
+pipeline: every admitted request ran a B=1 prefill jitted on its exact
+(prompt_len, max_len) shape — a traffic-time XLA compile per new length and
+one launch per request — and that prefill was single-execution, OUTSIDE the
+replica/detection contract, so an SDC during admission silently poisoned a
+slot's cache before the detect-before-commit guarantee ever applied. This
+module closes all three gaps:
+
+  * **Buckets** — prompts are right-padded to a small geometric set of
+    length buckets (powers of two), collapsing the unbounded space of
+    prompt lengths onto a handful of compiled shapes. Correctness of
+    right-padding is a property of the dense decode path: causal attention
+    means real positions never attend pad columns, the last-hidden gather
+    happens at each row's true final position (`lm_prefill(lengths=...)`),
+    and decode overwrites cache slot `pos` BEFORE attending it, so the pad
+    garbage beyond a row's true length is never observed. Stateful
+    families (recurrent/ssm/xlstm, ring-buffer windows, modality
+    frontends) cannot skip padding — `supported` gates them onto the
+    legacy exact-shape path.
+
+  * **Packs** — up to `max_pack` waiting prompts of one bucket launch as a
+    SINGLE (K, bucket) prefill computing all K caches + first tokens; a
+    jitted scatter then inserts every admitted row into its slot (and the
+    SlotRing admission snapshots cut in one batched pass). Pack sizes are
+    powers of two; a partial pack pads with dummy rows so every launch
+    hits a precompiled shape.
+
+  * **AOT cache** — every (kind, bucket, K) program is lowered and
+    compiled ONCE, ahead of traffic (`warmup()`), through an explicit
+    compile cache. Each cache miss is noted through `count_compiles()` —
+    the `hostsync.count_transfers()`-style hook that turns
+    "no traffic-time compiles" from a hope into an asserted property.
+
+  * **Protection** — the packed program carries a per-prompt LANE: row i's
+    fused fingerprint over {its logits row, its cache rows}. Dual-replica
+    backends (sequential/fused) execute the compiled pack twice and compare
+    lanes, localizing a fault to the row whose lanes disagree; the
+    replica-free backends (abft/hybrid) checksum-guard the (K, V) logits
+    block (full-checksum encode -> verify -> single-element forward
+    correction) and localize uncorrectable faults to the violated row
+    residuals. Either way the verdict is a per-row int: the driver admits
+    the clean rows and retries/rejects ONLY the faulty prompt — the rest
+    of the pack is never held hostage.
+
+Verdict encoding (`VERDICT_*`): 0 = faulty (retry/reject this row),
+1 = clean, 2 = clean-after-forward-correction (admit; record the
+detection). One `hostsync.batched_get([tok, verdict])` per launch is the
+whole admission readback.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fingerprint import pytree_fingerprint_fused
+from repro.core.injection import InjectionSpec, flip_bit, spec_step_hit
+
+VERDICT_BAD = 0
+VERDICT_CLEAN = 1
+VERDICT_CORRECTED = 2
+
+
+# ---------------------------------------------------------------------------
+# Compile accounting (the hostsync.count_transfers of XLA compiles)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CompileStats:
+    """Counts of prefill-program compiles inside a `count_compiles` region."""
+
+    compiles: int = 0
+    by_key: Dict[Tuple, int] = field(default_factory=dict)
+
+    def note(self, key: Tuple) -> None:
+        self.compiles += 1
+        self.by_key[key] = self.by_key.get(key, 0) + 1
+
+
+_active: List[CompileStats] = []
+
+
+@contextlib.contextmanager
+def count_compiles() -> Iterator[CompileStats]:
+    """Count every prefill-program compile (AOT-cache miss) in the block.
+
+    Wrap the traffic loop (NOT the warmup) and assert `st.compiles == 0`:
+    that is the `no_traffic_time_compiles` property."""
+    st = CompileStats()
+    _active.append(st)
+    try:
+        yield st
+    finally:
+        _active.remove(st)
+
+
+def _note_compile(key: Tuple) -> None:
+    for st in _active:
+        st.note(key)
+
+
+# ---------------------------------------------------------------------------
+# Bucket / pack geometry
+# ---------------------------------------------------------------------------
+
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256)
+
+
+def make_buckets(max_prompt: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Geometric (power-of-two) bucket ladder covering `max_prompt`."""
+    out = [b := max(int(min_bucket), 1)]
+    while b < max_prompt:
+        b *= 2
+        out.append(b)
+    return tuple(out)
+
+
+def bucket_for(length: int, buckets: Sequence[int]) -> Optional[int]:
+    """Smallest bucket >= length, or None (overflow -> legacy exact path)."""
+    for b in sorted(buckets):
+        if length <= b:
+            return int(b)
+    return None
+
+
+def pack_sizes(max_pack: int) -> Tuple[int, ...]:
+    """The compiled pack sizes: powers of two up to `max_pack`."""
+    out, k = [], 1
+    while k <= max(int(max_pack), 1):
+        out.append(k)
+        k *= 2
+    return tuple(out)
+
+
+def pack_for(n: int, max_pack: int) -> int:
+    """Smallest compiled pack size >= n (n must not exceed max_pack)."""
+    for k in pack_sizes(max_pack):
+        if n <= k:
+            return k
+    raise ValueError(f"pack of {n} exceeds max_pack={max_pack}")
+
+
+def group_packs(items: Sequence[Any], lengths: Sequence[int],
+                buckets: Sequence[int], max_pack: int
+                ) -> Tuple[List[Tuple[int, List[Any]]], List[Any]]:
+    """Queue -> pack selection: group `items` by length bucket and chunk
+    each group to at most `max_pack`. Returns (packs, overflow) where packs
+    is [(bucket, [items...])] in first-come order within a bucket and
+    overflow holds items longer than the largest bucket (legacy path)."""
+    by_bucket: Dict[int, List[Any]] = {}
+    overflow: List[Any] = []
+    for it, ln in zip(items, lengths):
+        b = bucket_for(int(ln), buckets)
+        if b is None:
+            overflow.append(it)
+        else:
+            by_bucket.setdefault(b, []).append(it)
+    packs: List[Tuple[int, List[Any]]] = []
+    cap = max(int(max_pack), 1)
+    for b in sorted(by_bucket):
+        grp = by_bucket[b]
+        for i in range(0, len(grp), cap):
+            packs.append((b, grp[i:i + cap]))
+    return packs, overflow
+
+
+# ---------------------------------------------------------------------------
+# The bucketed AOT prefiller
+# ---------------------------------------------------------------------------
+
+class BucketedPrefill:
+    """AOT-compiled bucketed/packed prefill programs + per-prompt lanes.
+
+    Holds the compile cache keyed (kind, bucket, K); `warmup()` populates
+    every key so traffic never compiles. The packed program's outputs are
+    all device-resident:
+
+      tok     (K, 1) int32   — each row's first (argmax) token
+      rows    pytree         — cache rows in INSERT layout (K, L, 1, T, ...)
+                               (leading axis = pack row, ready for a
+                               vectorized `.at[slots].set(rows)` scatter)
+      lanes   (K, 4) uint32  — per-prompt fused fingerprint over
+                               {logits row, cache rows}
+      verdict (K,) int32     — backend detection verdict (VERDICT_*)
+
+    Faults: `InjectionSpec(target='prefill')` flips one bit of pack row
+    `leaf_idx`'s logits on the chosen replica (the admission analogue of
+    the decode 'slot' target); `target='kernel'` lands in the ABFT
+    checksum window exactly as in decode."""
+
+    def __init__(self, model, backend: str = "none",
+                 inj_spec: Optional[InjectionSpec] = None, inj_flag=None,
+                 buckets: Optional[Sequence[int]] = None, max_pack: int = 4):
+        self.model = model
+        self.backend = backend
+        self.inj_spec = inj_spec
+        self.inj_flag = inj_flag
+        self.buckets = tuple(sorted(buckets)) if buckets else DEFAULT_BUCKETS
+        self.max_pack = max(int(max_pack), 1)
+        self.dual = backend in ("sequential", "fused")
+        self.guarded = backend in ("abft", "hybrid")
+        self._cache: Dict[Tuple, Any] = {}
+
+    @property
+    def supported(self) -> bool:
+        """Right-padding is a dense-family property (see module docstring)."""
+        cfg = self.model.cfg
+        return (not cfg.block_pattern and not cfg.window_size
+                and not cfg.frontend and cfg.family != "audio")
+
+    def usable_buckets(self, max_len: int) -> Tuple[int, ...]:
+        """Ladder restricted to buckets the cache can hold: prefill writes
+        `bucket` positions into a max_len-deep cache, so an oversized
+        bucket is an overflow (legacy exact-shape path), not a crash."""
+        return tuple(b for b in self.buckets if b <= max_len)
+
+    def bucket_for(self, length: int,
+                   max_len: Optional[int] = None) -> Optional[int]:
+        ladder = self.buckets if max_len is None else \
+            self.usable_buckets(max_len)
+        return bucket_for(length, ladder)
+
+    # -- programs -------------------------------------------------------------
+
+    def _plain_fn(self, max_len: int):
+        """generate()'s bucketed path: padded prefill, model-layout cache."""
+        model = self.model
+
+        def fn(params, toks, lengths):
+            return model.prefill(
+                params, {"tokens": toks, "lengths": lengths}, max_len)
+
+        return fn
+
+    def _packed_fn(self, max_len: int):
+        spec = self.inj_spec
+        guarded = self.guarded
+        model = self.model
+
+        def fn(params, toks, lengths, replica_id, armed, tick):
+            logits, cache = model.prefill(
+                params, {"tokens": toks, "lengths": lengths}, max_len)
+            K, V = logits.shape
+            if (spec is not None and spec.target == "prefill"
+                    and spec.leaf_idx < K):
+                # pack-row-localized SDC (leaf_idx = the pack row, like the
+                # decode 'slot' target); a pack too small to have that row
+                # is compiled without the injection — the fault lane simply
+                # is not occupied. `cond`, not `where`: the flip must
+                # not give the logits producer a second consumer on the
+                # clean path (see injection.inject_tree — fusion drift).
+                fire = jnp.logical_and(
+                    jnp.asarray(armed, jnp.bool_),
+                    jnp.logical_and(
+                        spec_step_hit(spec, tick),
+                        jnp.asarray(replica_id) == spec.replica))
+                idx = spec.leaf_idx * V + (spec.flat_idx % V)
+                logits = jax.lax.cond(
+                    fire, lambda x: flip_bit(x, idx, spec.bit),
+                    lambda x: x, logits)
+            verdict = jnp.full((K,), VERDICT_CLEAN, jnp.int32)
+            if guarded:
+                from repro.abft.executor import pack_checksum_guard
+                logits, verdict, _report = pack_checksum_guard(
+                    logits, spec, tick, armed)
+            # insert layout: model cache leaves are (L, K, T, ...) with the
+            # batch axis second — move the pack row out front and restore
+            # the B=1 axis so row i is exactly a slot slice (L, 1, T, ...)
+            rows = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0)[:, :, None],
+                                cache)
+            lanes = jax.vmap(lambda lg, row: pytree_fingerprint_fused(
+                {"logits": lg, "cache": row}))(logits, rows)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            return {"tok": tok, "rows": rows, "lanes": lanes,
+                    "verdict": verdict}
+
+        return fn
+
+    # -- the AOT compile cache ------------------------------------------------
+
+    def _compiled(self, kind: str, bucket: int, k: int, max_len: int, params):
+        key = (kind, bucket, k, max_len, self.backend)
+        prog = self._cache.get(key)
+        if prog is not None:
+            return prog
+        _note_compile(key)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+        if kind == "plain":
+            prog = jax.jit(self._plain_fn(max_len)).lower(
+                params, i32(k, bucket), i32(k)).compile()
+        else:
+            prog = jax.jit(self._packed_fn(max_len)).lower(
+                params, i32(k, bucket), i32(k), i32(), i32(), i32()
+            ).compile()
+        self._cache[key] = prog
+        return prog
+
+    def warmup(self, params, max_len: int, *, plain_batches: Sequence[int] = (1,),
+               packed: bool = True) -> int:
+        """Pre-lower + compile every (bucket, pack-size) program so traffic
+        hits only the cache. Returns the number of programs compiled."""
+        n = 0
+        for b in self.usable_buckets(max_len):
+            for bs in plain_batches:
+                self._compiled("plain", b, int(bs), max_len, params)
+                n += 1
+            if packed:
+                for k in pack_sizes(self.max_pack):
+                    self._compiled("packed", b, k, max_len, params)
+                    n += 1
+        return n
+
+    # -- execution ------------------------------------------------------------
+
+    def prefill_padded(self, params, tokens, max_len: int):
+        """Bucketed replacement for the exact-shape B=1/whole-batch prefill:
+        pad to the bucket boundary, run the AOT plain program, return
+        (logits, cache) in the model's native layout. Returns None when the
+        prompt overflows the bucket ladder (caller falls back)."""
+        B, S = tokens.shape
+        bucket = self.bucket_for(S, max_len)
+        if bucket is None:
+            return None
+        toks = jnp.asarray(tokens, jnp.int32)
+        if bucket > S:
+            toks = jnp.pad(toks, ((0, 0), (0, bucket - S)))
+        lengths = jnp.full((B,), S, jnp.int32)
+        prog = self._compiled("plain", bucket, B, max_len, params)
+        return prog(params, toks, lengths)
+
+    def _armed(self) -> int:
+        # mirror of the engine's arming line: the once-only flag is the
+        # paper's injected.txt — recovery re-executions must not re-inject
+        return int(self.inj_flag is not None
+                   and self.inj_flag.arm_spec(self.inj_spec) is not None)
+
+    def protected_pack(self, params, prompts: Sequence[np.ndarray],
+                       max_len: int, tick: int) -> Dict[str, Any]:
+        """One protected packed prefill launch over <= max_pack prompts of a
+        shared bucket. Pads the pack to the next compiled size (dummy rows
+        are sliced off by the caller) and folds the backend's detection
+        verdict device-side — the caller's ONLY readback is one
+        `batched_get([tok, verdict])`. Dual backends run the SAME compiled
+        executable twice (replica 0/1) and compare per-prompt lanes."""
+        n = len(prompts)
+        bucket = self.bucket_for(max(len(p) for p in prompts), max_len)
+        if bucket is None:
+            raise ValueError("prompt overflows the bucket ladder")
+        k = pack_for(n, self.max_pack)
+        toks = np.zeros((k, bucket), np.int32)
+        lens = np.ones((k,), np.int32)       # dummy rows: length-1 zeros
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+            lens[i] = len(p)
+        toks_d = jnp.asarray(toks)
+        lens_d = jnp.asarray(lens)
+        prog = self._compiled("packed", bucket, k, max_len, params)
+        a = jnp.asarray(self._armed(), jnp.int32)
+        t = jnp.asarray(int(tick), jnp.int32)
+        rid0 = jnp.asarray(0, jnp.int32)
+        r0 = prog(params, toks_d, lens_d, rid0, a, t)
+        verdict = r0["verdict"]
+        if self.dual:
+            r1 = prog(params, toks_d, lens_d, jnp.asarray(1, jnp.int32), a, t)
+            verdict = _lane_verdict_jit(r0["lanes"], r1["lanes"])
+        return {"tok": r0["tok"], "rows": r0["rows"], "lengths": lens_d,
+                "verdict": verdict, "n": n, "pack_size": k}
+
+
+@jax.jit
+def _lane_verdict_jit(lanes0, lanes1):
+    """Per-prompt replica compare: rows whose hash lanes (cols 0..1, the
+    fingerprint contract) disagree are faulty. DMR cannot attribute WHICH
+    replica corrupted the row — the verdict only says 'do not admit'."""
+    agree = jnp.all(lanes0[:, :2] == lanes1[:, :2], axis=1)
+    return jnp.where(agree, VERDICT_CLEAN, VERDICT_BAD).astype(jnp.int32)

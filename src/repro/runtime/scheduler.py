@@ -61,6 +61,7 @@ class Request:
     prompt: np.ndarray                    # (L,) int32 token ids
     max_new_tokens: int
     arrival: int = 0                      # decode tick of arrival (open loop)
+    arrival_time: Optional[float] = None  # wall stamp at queue offer (TTFT)
     status: str = PENDING
     slot: Optional[int] = None
     tokens: List[int] = field(default_factory=list)
@@ -221,14 +222,36 @@ def synthetic_requests(n: int, *, arrival_rate: float = 1.0,
 
 
 def token_latencies(requests: Iterable[Request]) -> List[float]:
-    """Per-token wall latencies across a request set: time-to-first-token
-    from admission is not measurable host-side without the admit stamp, so
-    this reports INTER-TOKEN gaps (the streaming cadence a client sees)."""
+    """Per-token INTER-TOKEN gaps across a request set (the streaming
+    cadence a client sees); see `ttft_latencies` for time-to-first-token."""
     out: List[float] = []
     for r in requests:
         ts = r.token_times
         out.extend(b - a for a, b in zip(ts, ts[1:]))
     return out
+
+
+def ttft_latencies(requests: Iterable[Request]) -> List[float]:
+    """Time-to-first-token per request: first emitted token's wall stamp
+    minus the arrival stamp the serve loop cut at queue offer. Requests
+    that never emitted (rejected before admission) are excluded — their
+    latency is the rejection notice, not a token."""
+    out: List[float] = []
+    for r in requests:
+        if r.arrival_time is not None and r.token_times:
+            out.append(r.token_times[0] - r.arrival_time)
+    return out
+
+
+def ttft_percentiles_ms(requests: Iterable[Request]
+                        ) -> Tuple[float, float]:
+    """(p50, p99) time-to-first-token in milliseconds (0.0, 0.0 when no
+    request emitted a first token)."""
+    lat = sorted(ttft_latencies(requests))
+    if not lat:
+        return 0.0, 0.0
+    return (1e3 * lat[len(lat) // 2],
+            1e3 * lat[min(int(len(lat) * 0.99), len(lat) - 1)])
 
 
 def latency_percentiles_ms(requests: Iterable[Request]

@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +90,8 @@ class BatchServeReport:
     completed: List[int] = field(default_factory=list)   # request ids
     rejected: List[int] = field(default_factory=list)    # request ids
     stopped: bool = False
+    prefill_packs: int = 0         # packed prefill launches (incl. retries)
+    prefill_retries: int = 0       # per-prompt prefill re-executions
 
     @property
     def tokens_per_s(self) -> float:
@@ -123,6 +125,23 @@ def _set_active_jit(state, slot, value):
 
 
 @jax.jit
+def _pack_insert_jit(state, slots, sel, rows, toks, poss):
+    """Vectorized admission scatter: pack rows `sel` of a protected prefill
+    launch land in slots `slots` of the packed state in ONE fused program
+    (maxtext's prefill_insert_batch shape) — cache rows, first tokens,
+    positions and the active mask together, instead of one `_slot_write_jit`
+    dispatch per admitted request."""
+    cache = jax.tree.map(
+        lambda full, r: full.at[slots].set(r[sel].astype(full.dtype)),
+        state["cache"], rows)
+    return {**state, "cache": cache,
+            "tok": state["tok"].at[slots].set(toks[sel].astype(jnp.int32)),
+            "pos": state["pos"].at[slots].set(poss[sel].astype(jnp.int32)),
+            "active": state["active"].at[slots].set(
+                jnp.ones(slots.shape, jnp.bool_))}
+
+
+@jax.jit
 def _slot_slice_jit(cache, tok, pos, slot):
     """Extract one slot's {cache, tok, pos} image (Tier-0 snapshot source)."""
     return {"cache": jax.tree.map(lambda x: x[slot], cache),
@@ -131,25 +150,10 @@ def _slot_slice_jit(cache, tok, pos, slot):
 
 def _logits_checksum_guard(logits, spec: Optional[InjectionSpec],
                            step, armed):
-    """ABFT output guard over one decode step's logits block (DESIGN.md
-    §13): full-checksum encode (row + column sums of the CLEAN block), the
-    kernel-domain corruption window (`InjectionSpec(target='kernel')`
-    faults land between compute and verify), then residual verification
-    with single-element forward correction (abft/ref.py). Returns
-    (verified logits, AbftReport) — a corrected block flows straight into
-    argmax, so the corrected commit emits its token with no re-execution."""
-    from repro.abft.ref import verify_and_correct
-    lg = jnp.asarray(logits, jnp.float32)
-    row = jnp.sum(lg, axis=1, keepdims=True)                 # (B, 1)
-    col = jnp.sum(lg, axis=0, keepdims=True)                 # (1, V)
-    tot = jnp.sum(row, axis=0, keepdims=True)                # (1, 1)
-    c_full = jnp.concatenate(
-        [jnp.concatenate([lg, row], axis=1),
-         jnp.concatenate([col, tot], axis=1)], axis=0)       # (B+1, V+1)
-    if spec is not None and spec.target == "kernel":
-        c_full = make_kernel_fault(spec, step=step, armed=armed)(c_full)
-    out, report = verify_and_correct(c_full, inner_dim=lg.shape[1])
-    return out.astype(logits.dtype), report
+    """ABFT output guard over one decode step's logits block — shared with
+    the packed-prefill guard; see `abft.executor.logits_checksum_guard`."""
+    from repro.abft.executor import logits_checksum_guard
+    return logits_checksum_guard(logits, spec, step, armed)
 
 
 class SedarServer:
@@ -157,7 +161,9 @@ class SedarServer:
 
     def __init__(self, run_cfg: RunConfig, dual: bool = False,
                  inj_spec: Optional[InjectionSpec] = None,
-                 max_retries: int = 8, backend: Optional[str] = None):
+                 max_retries: int = 8, backend: Optional[str] = None,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 max_pack: int = 4):
         self.cfg = run_cfg
         self.model = build_model(run_cfg.model)
         self.dual = dual
@@ -203,6 +209,24 @@ class SedarServer:
             recovery=RetryRecovery(max_retries=max_retries),
             inj_spec=inj_spec, inj_flag=self.inj_flag,
             notify=lambda e: None)
+        # bucketed/packed AOT prefill (DESIGN.md §14): the default admission
+        # path for the dense families; stateful/windowed/frontend families
+        # (prefiller.supported False) keep the legacy exact-shape prefill
+        from repro.runtime.prefill import BucketedPrefill
+        self.prefiller = BucketedPrefill(
+            self.model, backend=backend, inj_spec=inj_spec,
+            inj_flag=self.inj_flag, buckets=prefill_buckets,
+            max_pack=max_pack)
+
+    def warmup_prefill(self, params, max_len: int, *,
+                       plain_batches: Sequence[int] = (1,)) -> int:
+        """AOT-compile every bucketed prefill program ahead of traffic.
+        Returns the number of programs compiled (0 for unsupported
+        families — they keep the legacy jit path)."""
+        if not self.prefiller.supported:
+            return 0
+        return self.prefiller.warmup(params, max_len,
+                                     plain_batches=plain_batches)
 
     def _prefill_fn(self, params, batch, max_len):
         return self.model.prefill(params, batch, max_len)
@@ -210,7 +234,9 @@ class SedarServer:
     def _decode_fn(self, state, params, replica_id, armed):
         """Engine step_fn: (decode state, params-as-batch, rid, armed) ->
         (candidate state, logits fingerprint, logits[, AbftReport])."""
-        if self.inj_spec is not None and self.inj_spec.target != "kernel":
+        if (self.inj_spec is not None
+                and self.inj_spec.target not in ("kernel", "prefill",
+                                                 "prefill_kernel")):
             params = inject_tree(params, self.inj_spec, step=state["pos"],
                                  replica_id=replica_id, armed=armed)
         logits, cache = self.model.decode_step(params, state["cache"],
@@ -243,7 +269,17 @@ class SedarServer:
         P = (self.cfg.model.frontend_seq
              if (self.cfg.model.frontend and self.cfg.model.family == "vlm") else 0)
         max_len = max_len or (S + P + steps + 8)
-        logits, cache = self._prefill(params, prompt_batch, max_len)
+        pre = None
+        if (self.prefiller.supported
+                and "frontend_embeds" not in prompt_batch):
+            # bucketed path: pad to the bucket boundary so every prompt
+            # length <= the ladder hits ONE precompiled program instead of
+            # jitting `_prefill` per exact (prompt_len, max_len)
+            pre = self.prefiller.prefill_padded(
+                params, prompt_batch["tokens"], max_len)
+        if pre is None:
+            pre = self._prefill(params, prompt_batch, max_len)
+        logits, cache = pre
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [np.asarray(tok)]
         pos = S + P
@@ -301,7 +337,8 @@ class SedarServer:
 
         def step(state, params, replica_id, armed):
             t = state["t"]
-            if spec is not None and spec.target not in ("kernel", "slot"):
+            if spec is not None and spec.target not in (
+                    "kernel", "slot", "prefill", "prefill_kernel"):
                 params = inject_tree(params, spec, step=t,
                                      replica_id=replica_id, armed=armed)
             logits, cache = jax.vmap(
@@ -431,6 +468,89 @@ class SedarServer:
         req.token_times.append(time.time())
         return dual
 
+    def _admit_pack(self, eng, dual, params, pairs, t: int, ring,
+                    ring_on: bool, max_len: int, rep: BatchServeReport,
+                    sched, notify, events: List[DetectionEvent]):
+        """Protected packed admission (DESIGN.md §14): ONE prefill launch
+        computes caches + first tokens + per-prompt lanes for the whole
+        pack, ONE `batched_get` reads back {tokens, verdicts}, ONE fused
+        scatter inserts the admitted rows, and the SlotRing admission
+        snapshots cut in one batched pass. A faulty row (lane mismatch /
+        uncorrectable checksum residual) is retried ALONE — the clean rows
+        of the pack are admitted immediately — and a persistent fault
+        exhausts the retry budget into a per-request rejection."""
+        spec = self.inj_spec
+        for slot, _req in pairs:
+            ring.evict(slot)       # never resurrect a previous tenant
+        pairs = list(pairs)
+        prompts = [r.prompt for _, r in pairs]
+        need = list(range(len(pairs)))   # rows not yet admitted
+        budget = self.max_retries
+        while need:
+            # retries RELAUNCH the original pack shape: a persistent (stuck
+            # lane) fault must keep hitting the same occupant, not slide to
+            # row 0 of a shrunken retry pack — already-admitted rows are
+            # recomputed but not re-admitted
+            res = self.prefiller.protected_pack(params, prompts, max_len, t)
+            rep.prefill_packs += 1
+            toks, verdicts = hostsync.batched_get(
+                [res["tok"], res["verdict"]], label="prefill_emit")
+            good = [i for i in need if int(verdicts[i]) != 0]
+            bad = [i for i in need if int(verdicts[i]) == 0]
+            if good:
+                rows, toks_d, poss = res["rows"], res["tok"], res["lengths"]
+                sel = jnp.asarray(good, jnp.int32)
+                slots_d = jnp.asarray([pairs[i][0] for i in good], jnp.int32)
+                dual = eng.executor.map_state(
+                    lambda st: _pack_insert_jit(st, slots_d, sel, rows,
+                                                toks_d, poss), dual)
+                eng.executor.note_external_update()
+                if ring_on:
+                    ring.save_many(t, {
+                        pairs[i][0]: {
+                            "cache": jax.tree.map(
+                                lambda x, j=i: x[j], rows),
+                            "tok": toks_d[i], "pos": poss[i]}
+                        for i in good})
+                now_wall = time.time()
+                for i in good:
+                    _slot, req = pairs[i]
+                    req.pos0 = req.prompt_len
+                    # like the legacy path, the emitted prefill token is
+                    # already past the detection contract: its row's lane
+                    # (or checksum row) verified before this readback
+                    req.tokens.append(int(toks[i, 0]))
+                    req.token_times.append(now_wall)
+            corrected = [i for i in good if int(verdicts[i]) == 2]
+            if corrected:
+                events.append(DetectionEvent(
+                    step=t, boundary="prefill", effect="abft_corrected",
+                    detail={"slots": [pairs[i][0] for i in corrected],
+                            "rids": [pairs[i][1].rid for i in corrected]}))
+            if (bad or corrected) and spec is not None and not spec.persistent:
+                self.inj_flag.mark()   # paper's injected.txt: the transient
+                # fault MANIFESTED (detected or forward-corrected) — it must
+                # not re-fire on the retry or in a later stage
+            if not bad:
+                break
+            events.append(DetectionEvent(
+                step=t, boundary="prefill", effect="TDC",
+                detail={"slots": [pairs[i][0] for i in bad],
+                        "rids": [pairs[i][1].rid for i in bad]}))
+            budget -= 1
+            if budget <= 0:
+                for i in bad:
+                    slot, req = pairs[i]
+                    sched.reject(slot, "prefill validation failed: "
+                                 "consecutive retry budget exhausted")
+                    rep.rejected.append(req.rid)
+                    if notify is not None:
+                        notify(req, events[-1])
+                break
+            rep.prefill_retries += len(bad)
+            need = bad
+        return dual
+
     def _finish(self, sched, slot: int, rep: BatchServeReport) -> None:
         req = sched.release(slot)
         rep.completed.append(req.rid)
@@ -490,7 +610,7 @@ class SedarServer:
     def serve(self, params, requests, *, slots: int = 4,
               max_len: Optional[int] = None, validate_lag: Optional[int] = None,
               queue_depth: int = 0, max_steps: Optional[int] = None,
-              notify_reject=None):
+              notify_reject=None, packed_prefill: bool = True):
         """Continuous-batching protected decode over an open-loop request
         stream. Mutates and returns the `Request` objects (lifecycle fields
         are reset first, so a template list can be replayed for fault-free
@@ -501,7 +621,8 @@ class SedarServer:
         <= D steps, and a detected fault rolls back only the affected slots
         from the Tier-0 ring. `queue_depth` bounds the admission queue
         (backpressure -> immediate rejection)."""
-        from repro.runtime.scheduler import (DRAINING, RequestQueue,
+        from repro.runtime.prefill import group_packs
+        from repro.runtime.scheduler import (DRAINING, RUNNING, RequestQueue,
                                              SlotScheduler)
         if self.cfg.model.frontend:
             raise NotImplementedError(
@@ -514,6 +635,7 @@ class SedarServer:
             r.tokens, r.token_times = [], []
             r.pos0, r.admit_step, r.finish_step = 0, None, None
             r.truncated_tokens, r.reject_reason = 0, ""
+            r.arrival_time = None
         max_prompt = max((r.prompt_len for r in requests), default=8)
         max_new = max((r.max_new_tokens for r in requests), default=8)
         max_len = max_len or (max_prompt + max_new + 8)
@@ -539,21 +661,44 @@ class SedarServer:
                  "t": jnp.asarray(0, jnp.int32)}
         dual = eng.executor.init_dual(state)
 
+        # packed_prefill=False keeps the legacy one-launch-per-request
+        # admission — the equality oracle (and bench baseline) for the
+        # bucketed pack path
+        use_packed = packed_prefill and self.prefiller.supported
+        prefill_events: List[DetectionEvent] = []
         t = 0
         cap = max_steps or (sum(r.max_new_tokens for r in requests)
                             + len(requests)) * 4 + 64
         while t < cap and (pending or len(sched.queue) or sched.busy):
             while pending and pending[0].arrival <= t:
                 req = pending.pop(0)
+                req.arrival_time = time.time()     # TTFT reference stamp
                 if not sched.queue.offer(req):
                     rep.rejected.append(req.rid)   # backpressure shed
-            for slot, req in sched.admit(t):
-                dual = self._admit_slot(eng, dual, params, slot, req, t,
-                                        ring, ring_on, max_len)
-                if len(req.tokens) >= req.max_new_tokens:
-                    # budget of 1: the prefill token already fills it; the
-                    # prefill is single-execution (outside replica
-                    # validation, like generate()), so release immediately
+            pairs = sched.admit(t)
+            if pairs and use_packed:
+                packs, overflow = group_packs(
+                    pairs, [req.prompt_len for _, req in pairs],
+                    self.prefiller.usable_buckets(max_len),
+                    self.prefiller.max_pack)
+                for _bucket, chunk in packs:
+                    dual = self._admit_pack(eng, dual, params, chunk, t,
+                                            ring, ring_on, max_len, rep,
+                                            sched, notify_reject,
+                                            prefill_events)
+                for slot, req in overflow:   # longer than the ladder
+                    dual = self._admit_slot(eng, dual, params, slot, req, t,
+                                            ring, ring_on, max_len)
+            else:
+                for slot, req in pairs:
+                    dual = self._admit_slot(eng, dual, params, slot, req, t,
+                                            ring, ring_on, max_len)
+            for slot, req in pairs:
+                if (req.status == RUNNING
+                        and len(req.tokens) >= req.max_new_tokens):
+                    # budget of 1: the prefill token already fills it —
+                    # its validation (if any) happened at admission, so
+                    # release immediately
                     dual = self._set_active(eng, dual, slot, False)
                     sched.drain(slot, finish_step=t)
                     self._finish(sched, slot, rep)
@@ -636,7 +781,7 @@ class SedarServer:
                 if req.status == DRAINING:
                     self._finish(sched, slot, rep)
 
-        rep.detections = list(eng.detections)
+        rep.detections = prefill_events + list(eng.detections)
         rep.retries = sum(1 for r in eng.recoveries if r["kind"] == "retry")
         rep.tokens_emitted = sum(len(r.tokens) for r in requests
                                  if r.status == "done")

@@ -1,0 +1,205 @@
+"""Observability overhead: metrics+journal+trace on vs off (DESIGN.md §15).
+
+The §15 contract has two measurable halves:
+
+  * **Cost**: enabling the registry + fault journal + trace spans on the
+    protected hot path (train decode loop AND the continuous-batching serve
+    loop) must cost < 3% steps/s — `metrics_overhead_under_3pct` in
+    BENCH_observability.json is the acceptance bit CI tracks.
+  * **Zero extra syncs**: the telemetry-on run must report the exact same
+    host-sync labels as the telemetry-off run (asserted here through the
+    same `hostsync.count_transfers` hook the zero-sync tests use; the
+    byte-level version lives in tests/test_observability_e2e.py).
+
+Also times the journal itself (appends/s to a real file) since every
+detection/recovery line is written inline on the recovery path.
+
+`observability_*` CSV rows always print; run.py --json writes
+BENCH_observability.json.
+"""
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+JSON_PATH = None          # set by run.py --json
+
+N_STEPS = 50
+N_REPS = 5                # best-of (dispatch-bound CPU timings are noisy)
+LAG = 8
+JOURNAL_LINES = 2000
+
+
+def _build_trainer(workdir: str):
+    from repro.configs import (RunConfig, SedarConfig, TrainConfig,
+                               get_config, reduce_for_smoke)
+    from repro.runtime.train import SedarTrainer
+    cfg = reduce_for_smoke(get_config("paper-testapp"))
+    rc = RunConfig(model=cfg,
+                   train=TrainConfig(global_batch=2, seq_len=16, steps=N_STEPS,
+                                     warmup_steps=2, lr=1e-3),
+                   sedar=SedarConfig(level=1, replication="fused",
+                                     validate_interval=1, validate_lag=LAG,
+                                     param_validate_interval=0,
+                                     checkpoint_interval=0))
+    return SedarTrainer(rc, workdir)
+
+
+def _bench_train(workdir: str, telemetry: bool):
+    from repro import obs
+    from repro.core import hostsync
+    obs.shutdown()
+    os.makedirs(workdir, exist_ok=True)
+    if telemetry:
+        obs.enable_metrics()
+        obs.set_journal(obs.FaultJournal(
+            os.path.join(workdir, "journal.jsonl")))
+        obs.enable_trace()
+    try:
+        tr = _build_trainer(workdir)
+        eng = tr.engine
+        batch = {k: jnp.asarray(v) for k, v in tr.data.batch(0).items()}
+
+        def loop(n, counted):
+            dual = tr.init_dual()
+            eng.reset()
+            with hostsync.count_transfers() as st:
+                t0 = time.perf_counter()
+                for s in range(n):
+                    out = eng.run_protected_step(dual, batch, s)
+                    dual = out.dual
+                    assert out.event is None
+                jax.block_until_ready(eng.executor.peek(dual, "step"))
+                dt = time.perf_counter() - t0
+            return dt, st if counted else None
+
+        loop(2, counted=False)             # compile
+        best_dt, stats = None, None
+        for _ in range(N_REPS):
+            dt, st = loop(N_STEPS, counted=True)
+            if best_dt is None or dt < best_dt:
+                best_dt, stats = dt, st
+        return {"steps_per_s": round(N_STEPS / best_dt, 2),
+                "sync_labels": dict(stats.by_label)}
+    finally:
+        obs.shutdown()
+
+
+def _bench_serve(workdir: str, telemetry: bool):
+    from repro import obs
+    from repro.configs import (RunConfig, TrainConfig, get_config,
+                               reduce_for_smoke)
+    from repro.core import hostsync
+    from repro.runtime.scheduler import synthetic_requests
+    from repro.runtime.serve import SedarServer
+    obs.shutdown()
+    os.makedirs(workdir, exist_ok=True)
+    if telemetry:
+        obs.enable_metrics()
+        obs.set_journal(obs.FaultJournal(
+            os.path.join(workdir, "journal.jsonl")))
+        obs.enable_trace()
+    try:
+        cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+        rc = RunConfig(model=cfg, train=TrainConfig(global_batch=2,
+                                                    seq_len=8))
+        srv = SedarServer(rc, dual=True)
+        params = srv.model.init(jax.random.PRNGKey(0))
+        reqs = synthetic_requests(6, arrival_rate=2.0, seed=3)
+
+        def run(counted):
+            with hostsync.count_transfers() as st:
+                t0 = time.perf_counter()
+                _, rep = srv.serve(params, reqs, slots=3, validate_lag=LAG)
+                dt = time.perf_counter() - t0
+            assert not rep.detections
+            return dt, rep, st if counted else None
+
+        run(counted=False)                 # compile
+        best_dt, best_rep, stats = None, None, None
+        for _ in range(max(2, N_REPS - 2)):
+            dt, rep, st = run(counted=True)
+            if best_dt is None or dt < best_dt:
+                best_dt, best_rep, stats = dt, rep, st
+        return {"tokens_per_s": round(best_rep.tokens_emitted / best_dt, 2),
+                "steps_per_s": round(best_rep.steps / best_dt, 2),
+                "sync_labels": dict(stats.by_label)}
+    finally:
+        obs.shutdown()
+
+
+def _bench_journal(workdir: str):
+    from repro.obs import FaultJournal
+    j = FaultJournal(os.path.join(workdir, "throughput.jsonl"))
+    detail = {"detected_at": 12, "lag": 8, "slots": [0, 1],
+              "slot_first_bad": {0: 9, 1: 11}}
+    t0 = time.perf_counter()
+    for i in range(JOURNAL_LINES):
+        j.append("detection", step=i,
+                 event={"step": i, "boundary": "deferred", "effect": "TDC",
+                        "detail": detail})
+    dt = time.perf_counter() - t0
+    j.close()
+    return {"lines_per_s": round(JOURNAL_LINES / dt, 1),
+            "us_per_line": round(1e6 * dt / JOURNAL_LINES, 2)}
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as td:
+        train_off = _bench_train(os.path.join(td, "t_off"), telemetry=False)
+        train_on = _bench_train(os.path.join(td, "t_on"), telemetry=True)
+        serve_off = _bench_serve(os.path.join(td, "s_off"), telemetry=False)
+        serve_on = _bench_serve(os.path.join(td, "s_on"), telemetry=True)
+        journal = _bench_journal(td)
+
+    def pct(off, on):
+        return round(100.0 * (off - on) / off, 2) if off else 0.0
+
+    train_ovh = pct(train_off["steps_per_s"], train_on["steps_per_s"])
+    serve_ovh = pct(serve_off["steps_per_s"], serve_on["steps_per_s"])
+    same_syncs = (train_on["sync_labels"] == train_off["sync_labels"] and
+                  serve_on["sync_labels"] == serve_off["sync_labels"])
+
+    emit("observability_train_off", 1e6 / train_off["steps_per_s"],
+         f"steps/s={train_off['steps_per_s']}")
+    emit("observability_train_on", 1e6 / train_on["steps_per_s"],
+         f"steps/s={train_on['steps_per_s']} overhead={train_ovh}%")
+    emit("observability_serve_off", 1e6 / max(serve_off["steps_per_s"], 1e-9),
+         f"steps/s={serve_off['steps_per_s']}")
+    emit("observability_serve_on", 1e6 / max(serve_on["steps_per_s"], 1e-9),
+         f"steps/s={serve_on['steps_per_s']} overhead={serve_ovh}%")
+    emit("observability_journal_append", journal["us_per_line"],
+         f"lines/s={journal['lines_per_s']}")
+    emit("observability_zero_extra_syncs", 0.0,
+         f"telemetry-on sync labels identical={same_syncs}")
+
+    if JSON_PATH:
+        payload = {
+            "bench": "observability",
+            "app": "paper-testapp + qwen2-0.5b (smoke-reduced)",
+            "validate_lag": LAG,
+            "steps_timed": N_STEPS,
+            "best_of": N_REPS,
+            "jax_backend": jax.default_backend(),
+            "train": {"off": train_off, "on": train_on,
+                      "overhead_pct": train_ovh},
+            "serve": {"off": serve_off, "on": serve_on,
+                      "overhead_pct": serve_ovh},
+            "journal": journal,
+            # acceptance: metrics+journal+trace cost < 3% steps/s and add
+            # zero host syncs to the fault-free protected path
+            "metrics_overhead_under_3pct": max(train_ovh, serve_ovh) < 3.0,
+            "zero_extra_host_syncs": same_syncs,
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

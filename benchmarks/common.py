@@ -3,9 +3,11 @@ import sys
 import time
 from typing import Callable
 
+from repro.obs import percentile
+
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time per call in microseconds."""
+    """Median (nearest-rank p50) wall time per call in microseconds."""
     for _ in range(warmup):
         fn()
     ts = []
@@ -13,8 +15,7 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
         t0 = time.perf_counter()
         fn()
         ts.append((time.perf_counter() - t0) * 1e6)
-    ts.sort()
-    return ts[len(ts) // 2]
+    return percentile(ts, 50)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

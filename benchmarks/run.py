@@ -22,6 +22,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                  AOT compile-cache (no traffic-time compiles), TTFT
                  arrival sweep (DESIGN.md §14); --json writes
                  BENCH_prefill.json
+    observability_* — metrics+journal+trace overhead on the protected
+                 train/serve hot paths, journal append throughput
+                 (DESIGN.md §15); --json writes BENCH_observability.json
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -39,6 +42,7 @@ MODULES = [
     "benchmarks.bench_checkpoint",
     "benchmarks.bench_serve",
     "benchmarks.bench_prefill",
+    "benchmarks.bench_observability",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -55,6 +59,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_checkpoint",
     "benchmarks.bench_serve",
     "benchmarks.bench_prefill",
+    "benchmarks.bench_observability",
 ]
 
 
@@ -69,6 +74,7 @@ def main() -> None:
     args = ap.parse_args()
     if args.json:
         import benchmarks.bench_checkpoint as bck
+        import benchmarks.bench_observability as bob
         import benchmarks.bench_prefill as bpf
         import benchmarks.bench_protected_step as bps
         import benchmarks.bench_serve as bsv
@@ -76,6 +82,7 @@ def main() -> None:
         bck.JSON_PATH = "BENCH_checkpoint.json"
         bsv.JSON_PATH = "BENCH_serve.json"
         bpf.JSON_PATH = "BENCH_prefill.json"
+        bob.JSON_PATH = "BENCH_observability.json"
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:

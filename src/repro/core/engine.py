@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import hostsync
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
                                   majority_replica)
@@ -897,7 +898,8 @@ class SedarEngine:
         new_step = step + 1
         if self.executor.can_validate and \
                 self.schedule.validate_due(new_step):
-            event = self.executor.validate(dual2, new_step)
+            with obs.span("validate", step=new_step):
+                event = self.executor.validate(dual2, new_step)
             if event is not None:
                 return StepOutcome(dual=dual2, aux=aux, event=event)
 
@@ -937,7 +939,8 @@ class SedarEngine:
 
         if self.executor.can_validate and \
                 self.schedule.validate_due(new_step):
-            event = self.executor.validate(dual2, new_step)
+            with obs.span("validate", step=new_step):
+                event = self.executor.validate(dual2, new_step)
             if event is not None:
                 return StepOutcome(dual=dual2, aux=aux, event=event)
 
@@ -953,8 +956,9 @@ class SedarEngine:
         if not self._ring:
             return None
         steps_, preds = zip(*self._ring)
-        ok = hostsync.read_bool(jnp.all(jnp.stack(list(preds))),
-                                label="deferred_flush")
+        with obs.span("deferred_flush", steps=len(self._ring)):
+            ok = hostsync.read_bool(jnp.all(jnp.stack(list(preds))),
+                                    label="deferred_flush")
         if ok:
             self.validated_frontier = steps_[-1] + 1
             self._ring.clear()
@@ -1006,6 +1010,7 @@ class SedarEngine:
         # (and re-validates) those steps
         self._ring.clear()
         self.detections.append(event)
+        obs.note_detection(event)
         self.notify(event)
 
         fix = self.executor.repair(event, dual)
@@ -1013,31 +1018,41 @@ class SedarEngine:
             repaired, record = fix
             record = dict(record, at=event.step)
             self.recoveries.append(record)
+            obs.note_recovery(record)
             return repaired
 
         action: RecoveryAction = self.recovery.on_detection(event)
         record = {"kind": action.kind, "step": action.step,
                   "rollbacks": action.rollbacks, "at": event.step}
         self.recoveries.append(record)
-        if action.kind == "stop":
-            raise SedarSafeStop(event)
-        if action.kind == "retry":
-            return dual          # transient fault: re-execute the same step
-        if action.kind == "restart_scratch":
-            self.validated_frontier = 0
-            return self.init_dual()
-        if action.step is not None:
-            self.validated_frontier = min(self.validated_frontier,
-                                          action.step)
-        if isinstance(self.recovery, ValidatedCheckpointRecovery):
-            # L3 stores ONE validated state; re-seed every replica from it
-            single = self.recovery.restore(action, self.executor.primary(dual))
-            self._merge_restore_info(record)
-            single = jax.tree.map(jnp.asarray, single)
-            return self.executor.adopt_single(single)
-        restored = self.recovery.restore(action, dual)
-        self._merge_restore_info(record)
-        return jax.tree.map(jnp.asarray, restored)
+        # journal in a finally so the record goes out AFTER any restore
+        # planner info is merged in — and even when safe-stop raises
+        try:
+            if action.kind == "stop":
+                raise SedarSafeStop(event)
+            if action.kind == "retry":
+                return dual      # transient fault: re-execute the same step
+            if action.kind == "restart_scratch":
+                self.validated_frontier = 0
+                return self.init_dual()
+            if action.step is not None:
+                self.validated_frontier = min(self.validated_frontier,
+                                              action.step)
+            if isinstance(self.recovery, ValidatedCheckpointRecovery):
+                # L3 stores ONE validated state; re-seed every replica
+                # from it
+                with obs.span("rollback", step=action.step, kind=action.kind):
+                    single = self.recovery.restore(
+                        action, self.executor.primary(dual))
+                    self._merge_restore_info(record)
+                    single = jax.tree.map(jnp.asarray, single)
+                    return self.executor.adopt_single(single)
+            with obs.span("rollback", step=action.step, kind=action.kind):
+                restored = self.recovery.restore(action, dual)
+                self._merge_restore_info(record)
+                return jax.tree.map(jnp.asarray, restored)
+        finally:
+            obs.note_recovery(record)
 
     def _merge_restore_info(self, record: Dict[str, Any]) -> None:
         """Fold the restore planner's outcome (tier, version, any corruption
@@ -1072,18 +1087,22 @@ class SedarEngine:
             fp = hostsync.read_scalar(self.executor.state_fp(dual),
                                       label="checkpoint_fp") \
                 if r.fp_needed(step) else None
-            if r.maybe_checkpoint(step, dual, fp,
-                                  validated_floor=self.validated_frontier):
-                self.checkpoints.append(step)
+            with obs.span("checkpoint", step=step):
+                if r.maybe_checkpoint(step, dual, fp,
+                                      validated_floor=self.validated_frontier):
+                    self.checkpoints.append(step)
+                    obs.note_checkpoint(step)
             return None
         if isinstance(r, ValidatedCheckpointRecovery):
             if step == 0 or step % r.interval != 0:
                 return None
             fp0, fp_equal = self.executor.validated_fp(dual)
-            ev = r.maybe_checkpoint(step,
-                                    {"r0": self.executor.primary(dual)},
-                                    fp0, fp_equal=fp_equal)
+            with obs.span("checkpoint", step=step):
+                ev = r.maybe_checkpoint(step,
+                                        {"r0": self.executor.primary(dual)},
+                                        fp0, fp_equal=fp_equal)
             if ev is None:
                 self.checkpoints.append(step)
+                obs.note_checkpoint(step)
             return ev
         return None   # SafeStop / RetryRecovery store no checkpoints

@@ -21,15 +21,21 @@ runtime supports it) so a later `batched_get` only *waits* instead of
 serializing issue->wait per leaf; it performs no readback itself and is not
 counted.
 
-Counting is thread-local by design choice: background checkpoint writers
-receive host arrays, so all counted calls happen on the driver thread and a
-plain list of active counters suffices.
+`count_transfers` counting is thread-local BY DESIGN CHOICE: background
+checkpoint writers receive host arrays, so all counted calls happen on the
+driver thread — a scoped region counts only readbacks issued by the thread
+that opened it (tests/test_obs.py documents this). Readbacks issued from a
+*different* thread (e.g. a future detokenize-drain consumer) are invisible
+to the shim but NOT lost: when `repro.obs.enable_metrics()` is on, every
+`_note` also fans into the process-wide, lock-protected metrics registry
+via the `_metrics_note` hook, which aggregates across threads.
 """
 from __future__ import annotations
 
 import contextlib
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Sequence
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -49,23 +55,35 @@ class TransferStats:
         self.by_label[label] = self.by_label.get(label, 0) + items
 
 
-_active: List[TransferStats] = []
+class _ActiveStats(threading.local):
+    def __init__(self):
+        self.stack: List[TransferStats] = []
+
+
+_active = _ActiveStats()
+
+# Process-wide metrics fan-in, installed by `repro.obs.enable_metrics()`.
+# None when metrics are off, so the disabled cost is one `is None` test.
+_metrics_note: Optional[Callable[[str, int], None]] = None
 
 
 @contextlib.contextmanager
 def count_transfers() -> Iterator[TransferStats]:
-    """Count every device->host readback issued inside the block."""
+    """Count every device->host readback issued inside the block (by the
+    calling thread — see the thread-local note in the module docstring)."""
     st = TransferStats()
-    _active.append(st)
+    _active.stack.append(st)
     try:
         yield st
     finally:
-        _active.remove(st)
+        _active.stack.remove(st)
 
 
 def _note(label: str, items: int = 1) -> None:
-    for st in _active:
+    for st in _active.stack:
         st.note(label, items)
+    if _metrics_note is not None:
+        _metrics_note(label, items)
 
 
 def read_scalar(x, label: str = "scalar") -> np.ndarray:

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import (RunConfig, TrainConfig, get_config, list_archs,
                            reduce_for_smoke)
 from repro.core.policy import make_server
@@ -47,7 +48,7 @@ def _parse_prompt_mix(spec: str):
     return tuple(lengths), tuple(weights)
 
 
-def _continuous(args, cfg) -> None:
+def _continuous(args, cfg, ob=None) -> None:
     from repro.core.injection import InjectionSpec
     from repro.runtime.scheduler import (latency_percentiles_ms,
                                          synthetic_requests,
@@ -118,6 +119,15 @@ def _continuous(args, cfg) -> None:
           f"prefill retries={rep.prefill_retries}")
     for e in rep.detections:
         print(f"  {e} slots={e.detail.get('slots')}")
+    if ob is not None and ob.journal is not None:
+        kpis = ob.kpis(steps=rep.steps, tokens=rep.tokens_emitted)
+        print(f"[obs] kpis: {kpis}")
+        rows = obs.reconcile_with_advice(kpis,
+                                         validate_lag=args.validate_lag)
+        for row in rows:
+            print(f"[obs] predicted-vs-observed {row['metric']}: "
+                  f"predicted {row['predicted']}, observed "
+                  f"{row['observed']} -> {'OK' if row['ok'] else 'MISS'}")
 
 
 def _sync(args, cfg) -> None:
@@ -186,15 +196,30 @@ def main() -> None:
     ap.add_argument("--fault-persistent", action="store_true",
                     help="stuck bit: re-inject every step (drives the "
                          "per-request rejection path)")
+    # -- observability (DESIGN.md §15) --------------------------------------
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable the obs metrics registry + fault journal: "
+                         "writes metrics.prom and journal.jsonl here and "
+                         "prints the Prometheus snapshot after the run")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-stage trace spans to a Chrome-trace "
+                         "JSON (open at ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
+    ob = obs.configure(metrics_dir=args.metrics_dir, trace=args.trace)
     if args.continuous:
-        _continuous(args, cfg)
+        _continuous(args, cfg, ob)
     else:
         _sync(args, cfg)
+    snap = ob.finalize()
+    if snap:
+        print(f"[obs] metrics snapshot ({args.metrics_dir}/metrics.prom):")
+        print(snap, end="")
+    if args.trace:
+        print(f"[obs] trace written to {args.trace}")
 
 
 if __name__ == "__main__":

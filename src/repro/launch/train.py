@@ -17,6 +17,7 @@ import shutil
 
 import numpy as np
 
+from repro import obs
 from repro.configs import (RunConfig, SedarConfig, TrainConfig, get_config,
                            list_archs, reduce_for_smoke)
 from repro.core.fingerprint import pytree_fingerprint
@@ -85,6 +86,14 @@ def main() -> None:
     ap.add_argument("--inject-step", type=int, default=None)
     ap.add_argument("--manual-vote", action="store_true")
     ap.add_argument("--host-id", type=int, default=0)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable the obs metrics registry + fault journal "
+                         "(DESIGN.md §15): writes metrics.prom and "
+                         "journal.jsonl here and prints the Prometheus "
+                         "snapshot after the run")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-stage trace spans to a Chrome-trace "
+                         "JSON (open at ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -113,6 +122,7 @@ def main() -> None:
         manual_vote_baseline(rc, args.workdir, args.steps, inj)
         return
 
+    ob = obs.configure(metrics_dir=args.metrics_dir, trace=args.trace)
     hb = Heartbeat(os.path.join(args.workdir, "heartbeats"), args.host_id)
     trainer = make_trainer(rc, args.workdir, inj_spec=inj)
     dual, rep = trainer.run(args.steps)
@@ -122,6 +132,15 @@ def main() -> None:
         print(f"  detection: {e}")
     for r in rep.recoveries:
         print(f"  recovery: {r}")
+    if args.metrics_dir:
+        kpis = ob.kpis(steps=rep.steps_completed)
+        print(f"[obs] kpis: {kpis}")
+    snap = ob.finalize()
+    if snap:
+        print(f"[obs] metrics snapshot ({args.metrics_dir}/metrics.prom):")
+        print(snap, end="")
+    if args.trace:
+        print(f"[obs] trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Structured fault journal: one JSONL line per reliability event.
+
+Every `DetectionEvent`, recovery record, tier fallback, heartbeat anomaly,
+and request rejection becomes one append — monotonic timestamp, sequence
+number, step, slot/request id, backend, boundary — so a completed run can
+be REPLAYED: the scenario runner loads the journal and asserts
+predicted-vs-observed the way the paper's Section-7 model does, and
+`obs.kpi` computes MTTD/MTTR/availability from the same stream.
+
+Canonical form: `canonical(obj)` is the byte-for-byte comparison contract
+between the engine's in-memory records and their journaled copies. Both
+sides pass through `_jsonable` (numpy scalars → Python scalars, dict keys →
+str) before `json.dumps(sort_keys=True)`, so a record that survived a JSON
+round trip compares equal to one that never left memory.
+
+The journal is host-side only (list append + optional file write); it never
+touches a device buffer — see the zero-extra-hostsync argument in
+DESIGN.md §15.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+
+def _jsonable(obj: Any) -> Any:
+    """Normalize to what json.dumps emits and json.loads returns."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (bool, np.bool_)):
+        return bool(obj)
+    if isinstance(obj, (int, np.integer)):
+        return int(obj)
+    if isinstance(obj, (float, np.floating)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if obj is None or isinstance(obj, str):
+        return obj
+    return str(obj)
+
+
+def canonical(obj: Any) -> bytes:
+    """Canonical bytes of a record — the predicted-vs-observed comparator."""
+    return json.dumps(_jsonable(obj), sort_keys=True).encode()
+
+
+def event_to_record(event: Any) -> Dict[str, Any]:
+    """Project a DetectionEvent onto its journal payload."""
+    return {
+        "step": event.step,
+        "boundary": event.boundary,
+        "effect": event.effect,
+        "detail": dict(event.detail),
+    }
+
+
+class FaultJournal:
+    """Append-only reliability event log (in-memory + optional JSONL file).
+
+    Each record carries `kind`, a monotonic offset `t_mono` (seconds since
+    the journal was opened) and a sequence number `seq`; everything else is
+    caller fields. When `path` is given every append is streamed as one
+    JSONL line (flushed, so a crashed run keeps its tail).
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: List[Dict[str, Any]] = []
+        self._t0 = time.monotonic()
+        self._fh = open(path, "w") if path else None
+
+    def append(self, kind: str, **fields) -> Dict[str, Any]:
+        rec = {"kind": kind, "seq": len(self.entries),
+               "t_mono": time.monotonic() - self._t0}
+        rec.update(fields)
+        rec = _jsonable(rec)
+        self.entries.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
+            self._fh.flush()
+        return rec
+
+    def records(self, kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        if kind is None:
+            return list(self.entries)
+        return [r for r in self.entries if r["kind"] == kind]
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    @staticmethod
+    def load(path: str) -> List[Dict[str, Any]]:
+        out: List[Dict[str, Any]] = []
+        with open(path) as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+
+
+def payloads(records: Iterable[Dict[str, Any]], kind: str,
+             field: str) -> List[Dict[str, Any]]:
+    """Extract the embedded engine records of one kind (e.g. the
+    `event`/`record` field of detection/recovery lines), journal framing
+    stripped."""
+    return [r[field] for r in records if r.get("kind") == kind]
+
+
+def replay(records: Iterable[Dict[str, Any]]) -> Dict[str, List[Dict]]:
+    """Group a loaded journal by kind — the scenario runner's view."""
+    out: Dict[str, List[Dict]] = {}
+    for r in records:
+        out.setdefault(r.get("kind", "?"), []).append(r)
+    return out
+
+
+def reconcile(records: Iterable[Dict[str, Any]], detections: Iterable[Any],
+              recoveries: Iterable[Dict[str, Any]]) -> Dict[str, bool]:
+    """Byte-for-byte check: does the journal reproduce the engine's
+    detection/recovery sequences exactly? `detections` are DetectionEvents
+    (projected via event_to_record); `recoveries` are the engine's record
+    dicts."""
+    recs = list(records)
+    j_det = [canonical(p) for p in payloads(recs, "detection", "event")]
+    j_rec = [canonical(p) for p in payloads(recs, "recovery", "record")]
+    e_det = [canonical(event_to_record(e)) for e in detections]
+    e_rec = [canonical(r) for r in recoveries]
+    return {
+        "detections_match": j_det == e_det,
+        "recoveries_match": j_rec == e_rec,
+    }

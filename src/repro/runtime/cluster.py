@@ -18,6 +18,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
+
 
 @dataclass
 class HostState:
@@ -95,6 +97,35 @@ class ClusterMonitor:
         floor = med / self.straggler_factor
         return sorted(h for h, s in seen.items()
                       if med - s.step > 2 and s.step < floor)
+
+    def publish(self, now: Optional[float] = None) -> Dict[str, object]:
+        """One scan published into the observability stream: cluster-health
+        gauges in the metrics registry (hosts seen / stale / stragglers,
+        per-host step and heartbeat age) and a journaled heartbeat anomaly
+        per stale host — so multi-host health lands in the SAME stream as
+        fault events. Returns the summary it published."""
+        now = time.time() if now is None else now
+        seen = self.scan()
+        stale = self.stale_hosts(now)
+        strag = self.stragglers()
+        m = obs.metrics
+        if obs.metrics_enabled():
+            m.set_gauge("cluster_hosts_seen", len(seen))
+            m.set_gauge("cluster_hosts_expected", self.n_hosts)
+            m.set_gauge("cluster_stale_hosts", len(stale))
+            m.set_gauge("cluster_stragglers", len(strag))
+            for h, s in seen.items():
+                m.set_gauge("cluster_host_step", s.step, host=h)
+                m.set_gauge("cluster_heartbeat_age_s",
+                            max(0.0, now - s.last_beat), host=h)
+        for h in stale:
+            s = seen.get(h)
+            # -1.0 = host never beat at all (no file to age)
+            gap = (now - s.last_beat) if s is not None else -1.0
+            obs.note_heartbeat_anomaly(h, gap, kind="stale")
+        for h in strag:
+            obs.note_heartbeat_anomaly(h, 0.0, kind="straggler")
+        return {"seen": sorted(seen), "stale": stale, "stragglers": strag}
 
 
 @dataclass

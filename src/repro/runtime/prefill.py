@@ -100,9 +100,16 @@ def count_compiles() -> Iterator[CompileStats]:
         _active.remove(st)
 
 
+# Process-wide metrics fan-in, installed by `repro.obs.enable_metrics()`
+# (None when metrics are off).
+_metrics_note = None
+
+
 def _note_compile(key: Tuple) -> None:
     for st in _active:
         st.note(key)
+    if _metrics_note is not None:
+        _metrics_note(key)
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,9 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+from repro.obs import percentile
+
 # Request lifecycle states
 PENDING = "pending"      # created, not yet arrived
 QUEUED = "queued"        # in the admission queue
@@ -101,6 +104,8 @@ class RequestQueue:
             req.status = REJECTED
             req.reject_reason = "backpressure"
             self.rejected.append(req)
+            obs.note_rejection(-1, rid=req.rid, slot=None,
+                               reason="backpressure")
             return False
         req.status = QUEUED
         self._q.append(req)
@@ -246,20 +251,18 @@ def ttft_latencies(requests: Iterable[Request]) -> List[float]:
 def ttft_percentiles_ms(requests: Iterable[Request]
                         ) -> Tuple[float, float]:
     """(p50, p99) time-to-first-token in milliseconds (0.0, 0.0 when no
-    request emitted a first token)."""
-    lat = sorted(ttft_latencies(requests))
+    request emitted a first token); nearest-rank via `obs.percentile`."""
+    lat = ttft_latencies(requests)
     if not lat:
         return 0.0, 0.0
-    return (1e3 * lat[len(lat) // 2],
-            1e3 * lat[min(int(len(lat) * 0.99), len(lat) - 1)])
+    return 1e3 * percentile(lat, 50), 1e3 * percentile(lat, 99)
 
 
 def latency_percentiles_ms(requests: Iterable[Request]
                            ) -> Tuple[float, float]:
     """(p50, p99) inter-token latency in milliseconds (0.0, 0.0 when fewer
-    than two tokens were streamed)."""
-    lat = sorted(token_latencies(requests))
+    than two tokens were streamed); nearest-rank via `obs.percentile`."""
+    lat = token_latencies(requests)
     if not lat:
         return 0.0, 0.0
-    return (1e3 * lat[len(lat) // 2],
-            1e3 * lat[min(int(len(lat) * 0.99), len(lat) - 1)])
+    return 1e3 * percentile(lat, 50), 1e3 * percentile(lat, 99)

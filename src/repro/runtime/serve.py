@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import RunConfig
 from repro.core import hostsync
 from repro.core.detection import DetectionEvent, SedarSafeStop
@@ -452,7 +453,9 @@ class SedarServer:
         admit tick, so a deferred fault in the very first window has a
         rollback target), and emission of the prefill token."""
         prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-        logits, cache = self._prefill(params, {"tokens": prompt}, max_len)
+        with obs.span("prefill_pack", step=t, pack=1, packed=False):
+            logits, cache = self._prefill(params, {"tokens": prompt},
+                                          max_len)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (1,)
         sl = {"cache": cache, "tok": tok,
               "pos": jnp.asarray(req.prompt_len, jnp.int32)}
@@ -491,7 +494,9 @@ class SedarServer:
             # lane) fault must keep hitting the same occupant, not slide to
             # row 0 of a shrunken retry pack — already-admitted rows are
             # recomputed but not re-admitted
-            res = self.prefiller.protected_pack(params, prompts, max_len, t)
+            with obs.span("prefill_pack", step=t, pack=len(pairs)):
+                res = self.prefiller.protected_pack(params, prompts,
+                                                    max_len, t)
             rep.prefill_packs += 1
             toks, verdicts = hostsync.batched_get(
                 [res["tok"], res["verdict"]], label="prefill_emit")
@@ -523,20 +528,26 @@ class SedarServer:
                     req.token_times.append(now_wall)
             corrected = [i for i in good if int(verdicts[i]) == 2]
             if corrected:
-                events.append(DetectionEvent(
+                # prefill events never route through eng.on_detection (the
+                # pack retries inline), so they are journaled HERE
+                ev = DetectionEvent(
                     step=t, boundary="prefill", effect="abft_corrected",
                     detail={"slots": [pairs[i][0] for i in corrected],
-                            "rids": [pairs[i][1].rid for i in corrected]}))
+                            "rids": [pairs[i][1].rid for i in corrected]})
+                events.append(ev)
+                obs.note_detection(ev)
             if (bad or corrected) and spec is not None and not spec.persistent:
                 self.inj_flag.mark()   # paper's injected.txt: the transient
                 # fault MANIFESTED (detected or forward-corrected) — it must
                 # not re-fire on the retry or in a later stage
             if not bad:
                 break
-            events.append(DetectionEvent(
+            ev = DetectionEvent(
                 step=t, boundary="prefill", effect="TDC",
                 detail={"slots": [pairs[i][0] for i in bad],
-                        "rids": [pairs[i][1].rid for i in bad]}))
+                        "rids": [pairs[i][1].rid for i in bad]})
+            events.append(ev)
+            obs.note_detection(ev)
             budget -= 1
             if budget <= 0:
                 for i in bad:
@@ -544,6 +555,8 @@ class SedarServer:
                     sched.reject(slot, "prefill validation failed: "
                                  "consecutive retry budget exhausted")
                     rep.rejected.append(req.rid)
+                    obs.note_rejection(t, rid=req.rid, slot=slot,
+                                       reason="prefill_persistent")
                     if notify is not None:
                         notify(req, events[-1])
                 break
@@ -578,6 +591,8 @@ class SedarServer:
                 sched.reject(slot, "per-request safe stop: consecutive "
                              "retry budget exhausted")
                 rep.rejected.append(req.rid)
+                obs.note_rejection(event.step, rid=req.rid, slot=slot,
+                                   reason="persistent_fault")
                 if notify is not None:
                     notify(req, event)
             ring.evict(slot)
@@ -731,7 +746,8 @@ class SedarServer:
                     t += 1
                     continue
                 break
-            outcome = eng.run_protected_step(dual, params, t)
+            with obs.span("decode_tick", step=t):
+                outcome = eng.run_protected_step(dual, params, t)
             dual = outcome.dual
             rep.steps += 1
             if outcome.event is not None:
@@ -755,6 +771,7 @@ class SedarServer:
                 if target == len(req.tokens) + 1:
                     req.tokens.append(int(toks[slot, 0]))
                     req.token_times.append(now_wall)
+                    obs.note_tokens(1)
                 if len(req.tokens) >= req.max_new_tokens:
                     sched.drain(slot, finish_step=t + 1)
                     dual = self._set_active(eng, dual, slot, False)

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import RunConfig
 from repro.core import hostsync
 from repro.core.detection import (DetectionEvent, SedarSafeStop, Watchdog,
@@ -290,7 +291,8 @@ class SedarTrainer:
             executed += 1
             batch = {k: jnp.asarray(v) for k, v in
                      self.data.batch(step).items()}
-            outcome = eng.run_protected_step(dual, batch, step)
+            with obs.span("train_step", step=step):
+                outcome = eng.run_protected_step(dual, batch, step)
             dual = outcome.dual
             # aux is None when the executor refused the step before running
             # it (hybrid resident-state check) — there is no loss to record

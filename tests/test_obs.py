@@ -1,0 +1,404 @@
+"""Unified observability layer (DESIGN.md §15): metrics registry, shared
+percentile helper, fault journal, trace spans, KPIs, cluster gauges.
+
+Also documents (as an executable spec) the `hostsync.TransferStats`
+thread-local shim behavior: a scoped `count_transfers()` region counts only
+the opening thread's readbacks, while the process-wide registry aggregates
+across threads under its lock — the explicit cross-thread mode the shim
+deliberately lacks."""
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint import store as ckpt_store
+from repro.core import hostsync
+from repro.obs.journal import FaultJournal, _jsonable, canonical, \
+    event_to_record
+from repro.obs.kpi import compute_kpis, reconcile_with_advice
+from repro.obs.registry import MetricsRegistry, percentile
+from repro.obs.trace import TraceRecorder
+from repro.runtime import prefill
+
+
+@pytest.fixture(autouse=True)
+def _obs_teardown():
+    yield
+    obs.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms():
+    m = MetricsRegistry()
+    m.inc("a_total")
+    m.inc("a_total", 3)
+    m.inc("a_total", 2, label="x")
+    m.set_gauge("g", 7.5)
+    m.set_gauge("g", 2.5)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        m.observe("h_ms", v)
+    assert m.get("a_total") == 4
+    assert m.get("a_total", label="x") == 2
+    assert m.get("g") == 2.5
+    h = m.get_histogram("h_ms")
+    assert h.count == 4 and h.total == 10.0
+    assert h.quantile(50) == 2.0 and h.quantile(99) == 4.0
+    assert m.get("never_touched") == 0.0
+
+
+def test_registry_kind_conflict_rejected():
+    m = MetricsRegistry()
+    m.inc("x")
+    with pytest.raises(ValueError):
+        m.set_gauge("x", 1.0)
+
+
+def test_registry_prometheus_render():
+    m = MetricsRegistry()
+    m.inc("req_total", 5, route="a")
+    m.inc("req_total", 1, route="b")
+    m.set_gauge("depth", 3)
+    m.observe("lat_ms", 10.0)
+    text = m.render_prometheus()
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{route="a"} 5' in text
+    assert 'req_total{route="b"} 1' in text
+    assert "depth 3" in text
+    assert "lat_ms_count 1" in text and "lat_ms_sum 10" in text
+    assert 'lat_ms{quantile="0.50"} 10' in text
+
+
+def test_registry_cross_thread_aggregation():
+    """The registry's explicit cross-thread mode: increments from worker
+    threads land in the same series (lock-protected)."""
+    m = MetricsRegistry()
+
+    def work():
+        for _ in range(500):
+            m.inc("t_total")
+
+    ts = [threading.Thread(target=work) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert m.get("t_total") == 2000
+
+
+# ---------------------------------------------------------------------------
+# percentile (satellite: one shared nearest-rank implementation)
+# ---------------------------------------------------------------------------
+
+def test_percentile_property_vs_numpy():
+    """Nearest-rank must agree with numpy's inverted_cdf method over random
+    sizes/quantiles (seeded property sweep)."""
+    rs = np.random.RandomState(7)
+    for _ in range(200):
+        n = int(rs.randint(1, 60))
+        vals = rs.rand(n) * rs.choice([1.0, 1e3, 1e-3])
+        q = float(rs.choice([0.0, 1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0]))
+        got = percentile(vals, q)
+        want = float(np.percentile(vals, q, method="inverted_cdf"))
+        assert got == want, (n, q, got, want)
+
+
+def test_percentile_edges():
+    assert percentile([], 50) == 0.0
+    assert percentile([42.0], 99) == 42.0
+    assert percentile([1, 2, 3, 4], 50) == 2.0     # true nearest-rank median
+    assert percentile([1, 2, 3, 4], 99) == 4.0     # p99 clamps to max
+    assert percentile([3, 1, 2], 0) == 1.0
+
+
+def test_scheduler_percentiles_use_shared_helper():
+    from repro.runtime.scheduler import Request, latency_percentiles_ms, \
+        ttft_percentiles_ms
+    reqs = []
+    for rid in range(4):
+        r = Request(rid=rid, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+        r.arrival_time = 0.0
+        r.token_times = [0.010 * (rid + 1), 0.010 * (rid + 1) + 0.005]
+        reqs.append(r)
+    tt50, tt99 = ttft_percentiles_ms(reqs)
+    lats = [r.token_times[0] for r in reqs]
+    assert tt50 == pytest.approx(1e3 * percentile(lats, 50))
+    assert tt99 == pytest.approx(1e3 * percentile(lats, 99))
+    p50, p99 = latency_percentiles_ms(reqs)
+    assert p50 == pytest.approx(5.0) and p99 == pytest.approx(5.0)
+    assert ttft_percentiles_ms([]) == (0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# legacy shim absorption
+# ---------------------------------------------------------------------------
+
+def test_metrics_absorb_hostsync_transfers():
+    obs.enable_metrics()
+    hostsync.read_scalar(jnp.asarray(1.0), label="probe")
+    hostsync.batched_get([jnp.zeros(2), jnp.zeros(3)], label="pair")
+    assert obs.metrics.get("hostsync_transfers_total", label="probe") == 1
+    assert obs.metrics.get("hostsync_transfers_total", label="pair") == 2
+    assert obs.metrics.get("hostsync_batches_total", label="pair") == 1
+
+
+def test_metrics_off_is_noop():
+    assert not obs.metrics_enabled()
+    hostsync.read_scalar(jnp.asarray(1.0), label="probe")
+    assert obs.metrics.snapshot() == {}
+    # note_* intake is also inert with everything off
+    obs.note_checkpoint(3)
+    obs.note_tokens(5)
+    assert obs.metrics.snapshot() == {}
+    assert obs.get_journal() is None
+
+
+def test_metrics_absorb_compiles_and_disk_reads():
+    obs.enable_metrics()
+    prefill._note_compile(("pack", 16, 2))
+    prefill._note_compile(("pack", 32, 4))
+    ckpt_store._note_disk_read("leaf", 3)
+    ckpt_store._note_disk_read("manifest")
+    assert obs.metrics.get("prefill_compiles_total", kind="pack") == 2
+    assert obs.metrics.get("checkpoint_disk_reads_total", label="leaf") == 3
+    assert obs.metrics.get("checkpoint_disk_reads_total",
+                           label="manifest") == 1
+
+
+def test_transfer_stats_thread_local_vs_registry():
+    """Documents the shim contract: a count_transfers region on the main
+    thread does NOT see a worker thread's readbacks (thread-local by
+    design), but the registry DOES — the cross-thread aggregation mode."""
+    obs.enable_metrics()
+    done = threading.Event()
+
+    def worker():
+        hostsync.read_scalar(jnp.asarray(2.0), label="worker_read")
+        done.set()
+
+    with hostsync.count_transfers() as st:
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert done.is_set()
+    assert st.transfers == 0, "shim must stay thread-local"
+    assert st.by_label == {}
+    assert obs.metrics.get("hostsync_transfers_total",
+                           label="worker_read") == 1
+
+
+# ---------------------------------------------------------------------------
+# journal
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_canonical(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = FaultJournal(path)
+    j.append("detection", step=np.int64(4),
+             event={"step": np.int32(4), "detail": {3: np.float32(1.5),
+                                                    "arr": np.arange(2)}})
+    j.append("recovery", step=2, record={"kind": "restore", "at": 5})
+    j.close()
+    loaded = FaultJournal.load(path)
+    assert [r["kind"] for r in loaded] == ["detection", "recovery"]
+    assert loaded[0]["seq"] == 0 and loaded[1]["seq"] == 1
+    assert loaded[0]["t_mono"] <= loaded[1]["t_mono"]
+    # byte-for-byte: in-memory records equal their disk round trip
+    for mem, disk in zip(j.entries, loaded):
+        assert canonical(mem) == canonical(disk)
+    # numpy scalars and int keys normalized identically on both sides
+    assert loaded[0]["event"]["detail"]["3"] == 1.5
+    assert loaded[0]["event"]["detail"]["arr"] == [0, 1]
+
+
+def test_jsonable_normalizes_like_json():
+    obj = {"a": np.int32(1), "b": (np.float64(2.0), np.bool_(True)),
+           5: np.arange(3), "n": None}
+    norm = _jsonable(obj)
+    assert norm == json.loads(json.dumps(norm))
+
+
+def test_event_to_record_and_reconcile():
+    from repro.core.detection import DetectionEvent
+    evs = [DetectionEvent(step=3, boundary="deferred", effect="TDC",
+                          detail={"detected_at": 7, "lag": 4})]
+    recs = [{"kind": "restore", "step": 2, "rollbacks": 1, "at": 3}]
+    j = FaultJournal()
+    for e in evs:
+        j.append("detection", step=e.step, event=event_to_record(e))
+    for r in recs:
+        j.append("recovery", step=r["step"], record=r)
+    verdict = obs.reconcile(j.records(), evs, recs)
+    assert verdict == {"detections_match": True, "recoveries_match": True}
+    verdict = obs.reconcile(j.records(), evs, [dict(recs[0], at=9)])
+    assert not verdict["recoveries_match"]
+
+
+def test_journal_replay_groups():
+    j = FaultJournal()
+    j.append("detection", step=1)
+    j.append("rejection", step=2, rid=7)
+    j.append("detection", step=3)
+    groups = obs.replay(j.records())
+    assert len(groups["detection"]) == 2
+    assert groups["rejection"][0]["rid"] == 7
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+def test_trace_spans_chrome_format(tmp_path):
+    tr = TraceRecorder()
+    with tr.span("decode_tick", step=3):
+        with tr.span("validate"):
+            pass
+    path = str(tmp_path / "trace.json")
+    tr.write(path)
+    with open(path) as fh:
+        doc = json.load(fh)
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert names == ["validate", "decode_tick"]   # inner span closes first
+    for e in doc["traceEvents"]:
+        assert e["ph"] == "X" and e["dur"] >= 0 and e["ts"] >= 0
+    assert doc["traceEvents"][1]["args"]["step"] == 3
+
+
+def test_global_span_noop_until_enabled():
+    ctx = obs.span("anything")
+    with ctx:
+        pass
+    assert obs.get_trace() is None
+    tr = obs.enable_trace()
+    with obs.span("real", step=1):
+        pass
+    assert [e["name"] for e in tr.by_name("real")] == ["real"]
+
+
+# ---------------------------------------------------------------------------
+# note_* intake + KPIs
+# ---------------------------------------------------------------------------
+
+def test_note_functions_feed_metrics_and_journal():
+    from repro.core.detection import DetectionEvent
+    obs.enable_metrics()
+    j = FaultJournal()
+    obs.set_journal(j)
+    ev = DetectionEvent(step=4, boundary="commit", effect="TDC", detail={})
+    obs.note_detection(ev)
+    obs.note_recovery({"kind": "restore", "step": 2, "rollbacks": 1,
+                       "at": 4, "tier": "device"})
+    obs.note_recovery({"kind": "retry", "step": None, "rollbacks": 0,
+                       "at": 5})
+    obs.note_checkpoint(6)
+    obs.note_tier_save("host")
+    obs.note_tier_restore("device", 3)
+    obs.note_tier_event({"kind": "tier_fallback", "tier": "disk",
+                         "version": 2, "error": "X"})
+    obs.note_rejection(7, rid=1, slot=0, reason="persistent_fault")
+    obs.note_tokens(3)
+    m = obs.metrics
+    assert m.get("sedar_detections_total", boundary="commit",
+                 effect="TDC") == 1
+    assert m.get("sedar_recoveries_total", kind="restore") == 1
+    assert m.get("sedar_recoveries_total", kind="retry") == 1
+    assert m.get("sedar_rollbacks_total") == 1
+    assert m.get("sedar_retries_total") == 1
+    assert m.get("sedar_checkpoints_total") == 1
+    assert m.get("checkpoint_saves_total", tier="host") == 1
+    assert m.get("checkpoint_restores_total", tier="device") == 1
+    assert m.get("checkpoint_tier_fallbacks_total", tier="disk") == 1
+    assert m.get("serve_rejections_total", reason="persistent_fault") == 1
+    assert m.get("serve_tokens_emitted_total") == 3
+    kinds = [r["kind"] for r in j.records()]
+    assert kinds == ["detection", "recovery", "recovery", "checkpoint",
+                     "tier_restore", "tier_fallback", "rejection"]
+
+
+def test_compute_kpis_and_reconcile():
+    j = FaultJournal()
+    j.append("detection", step=3,
+             event={"step": 3, "boundary": "deferred", "effect": "TDC",
+                    "detail": {"detected_at": 7, "lag": 4}})
+    j.append("recovery", step=2,
+             record={"kind": "restore", "step": 2, "rollbacks": 1, "at": 3})
+    j.append("detection", step=10,
+             event={"step": 10, "boundary": "commit", "effect": "TDC",
+                    "detail": {}})
+    j.append("recovery", step=10,
+             record={"kind": "retry", "step": None, "rollbacks": 0,
+                     "at": 10})
+    k = compute_kpis(j.records(), steps=20, tokens=40, injected=2)
+    assert k["detections"] == 2 and k["recoveries"] == 2
+    assert k["mttd_steps"] == pytest.approx(2.0)   # (4 + 0) / 2
+    assert k["mttd_max_steps"] == 4.0
+    assert k["redone_steps"] == 1                  # restore: 3 - 2
+    assert k["availability"] == pytest.approx(1 - 1 / 20)
+    assert k["goodput_tokens_per_step"] == pytest.approx(2.0)
+    assert k["sdc_coverage"] == 1.0
+    assert k["mttr_s"] >= 0.0
+    rows = reconcile_with_advice(k, validate_lag=8)
+    by_metric = {r["metric"]: r for r in rows}
+    assert by_metric["mttd_max_steps"]["ok"]
+    assert by_metric["sdc_coverage"]["ok"]
+    rows = reconcile_with_advice(k, validate_lag=2)
+    assert not [r for r in rows if r["metric"] == "mttd_max_steps"][0]["ok"]
+
+
+# ---------------------------------------------------------------------------
+# cluster gauges + heartbeat anomalies (satellite)
+# ---------------------------------------------------------------------------
+
+def test_cluster_monitor_publish(tmp_path):
+    from repro.runtime.cluster import ClusterMonitor, Heartbeat
+    obs.enable_metrics()
+    j = FaultJournal()
+    obs.set_journal(j)
+    hb_dir = str(tmp_path / "hb")
+    for host, step in ((0, 10), (1, 10), (2, 2)):
+        Heartbeat(hb_dir, host).beat(step)
+    mon = ClusterMonitor(hb_dir, n_hosts=4, timeout_s=60.0,
+                         straggler_factor=2.0)
+    import time as _time
+    summary = mon.publish(now=_time.time())
+    assert summary["stale"] == [3]            # host 3 never beat
+    assert summary["stragglers"] == [2]
+    m = obs.metrics
+    assert m.get("cluster_hosts_seen") == 3
+    assert m.get("cluster_hosts_expected") == 4
+    assert m.get("cluster_stale_hosts") == 1
+    assert m.get("cluster_stragglers") == 1
+    assert m.get("cluster_host_step", host=2) == 2
+    anomalies = j.records("heartbeat_anomaly")
+    assert {(a["host"], a["anomaly"]) for a in anomalies} == \
+        {(3, "stale"), (2, "straggler")}
+    assert m.get("cluster_heartbeat_anomalies_total", kind="stale") == 1
+
+
+# ---------------------------------------------------------------------------
+# launcher bundle
+# ---------------------------------------------------------------------------
+
+def test_configure_finalize_writes_artifacts(tmp_path):
+    mdir = str(tmp_path / "metrics")
+    tpath = str(tmp_path / "trace.json")
+    ob = obs.configure(metrics_dir=mdir, trace=tpath)
+    assert obs.metrics_enabled() and obs.get_journal() is not None
+    with obs.span("train_step", step=0):
+        pass
+    obs.note_checkpoint(4)
+    snap = ob.finalize()
+    assert "sedar_checkpoints_total 1" in snap
+    with open(mdir + "/metrics.prom") as fh:
+        assert fh.read() == snap
+    loaded = FaultJournal.load(mdir + "/journal.jsonl")
+    assert [r["kind"] for r in loaded] == ["checkpoint"]
+    with open(tpath) as fh:
+        assert [e["name"] for e in json.load(fh)["traceEvents"]] == \
+            ["train_step"]
+    assert obs.get_journal() is None   # finalize detaches the journal

@@ -1,0 +1,211 @@
+"""Elastic fail-in-place benchmark (DESIGN.md §16).
+
+Measures, on the smoke-reduced paper test-app:
+
+  * fail-in-place vs checkpoint-restart wall: the same node-loss scenario
+    handled by (a) an ElasticTrainer shrinking onto survivors and later
+    regrowing, vs (b) the classical stop-and-relaunch — a brand-new
+    full-width trainer (fresh trace + compile), checkpoint restore, and
+    replay from the anchor,
+  * collective-compare vs host-readback detection cost: per-step cost of
+    the on-device lane compare (detection verdict never leaves the
+    device) against the legacy per-step fingerprint readback,
+  * the temporal model's fail-in-place vs node-restart curves over an
+    outage sweep (DESIGN.md §16 decision rule: 2·remesh < T_rest).
+
+`elastic_*` CSV rows always print; when `JSON_PATH` is set (run.py
+--json) the table lands in BENCH_elastic.json for the CI perf-artifact
+upload.
+"""
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+JSON_PATH = None          # set by run.py --json
+
+STEPS = 8
+
+
+def _run_cfg():
+    from repro.configs import (MeshConfig, RunConfig, SedarConfig,
+                               TrainConfig, get_config, reduce_for_smoke)
+    return RunConfig(
+        model=reduce_for_smoke(get_config("paper-testapp")),
+        train=TrainConfig(global_batch=4, seq_len=16, steps=STEPS,
+                          warmup_steps=2, lr=1e-3),
+        mesh=MeshConfig(shape=(2, 1), axis_names=("data", "model")),
+        sedar=SedarConfig(level=3, replication="sequential",
+                          validate_interval=1, param_validate_interval=50,
+                          checkpoint_interval=2))
+
+
+def _bench_transition(td, rows):
+    """The same loss-at-step-4 scenario through both recovery protocols."""
+    from repro.runtime.elastic import ElasticTrainer
+    from repro.runtime.train import SedarTrainer
+
+    cfg = _run_cfg()
+
+    # -- fail-in-place: shrink onto survivors, keep the job alive ----------
+    wd = os.path.join(td, "elastic")
+    hb = os.path.join(wd, "heartbeats")
+    sim = {"now": 0.0}
+
+    def tick(step):
+        sim["now"] += 100.0
+        os.makedirs(hb, exist_ok=True)
+        for h in range(2):
+            if h == 1 and 300.0 <= sim["now"] < 700.0:
+                continue          # host 1 dark: heartbeat goes stale
+            with open(os.path.join(hb, f"host_{h:05d}.json"), "w") as f:
+                json.dump({"host": h, "step": int(step or 0),
+                           "t": sim["now"]}, f)
+
+    t0 = time.perf_counter()
+    et = ElasticTrainer(cfg, wd, n_hosts=2, scan_interval=2,
+                        clock=lambda: sim["now"], tick=tick)
+    rep = et.run(STEPS)
+    fip_wall = time.perf_counter() - t0
+    fip_transition = rep.node_loss_downtime_s()
+    trigger = next(r.trigger_step for r in rep.remeshes
+                   if r.phase == "shrink")
+    assert rep.steps_completed == STEPS and not rep.stopped
+
+    # -- checkpoint-restart: stop everything, relaunch at full width -------
+    # run to the loss point, then pay a brand-new trainer (fresh trace +
+    # compile, as a relaunched job would), restore the anchor, and replay
+    wd2 = os.path.join(td, "restart")
+    t0 = time.perf_counter()
+    tr1 = SedarTrainer(cfg, wd2)
+    tr1.run(trigger)
+    t_loss = time.perf_counter()
+    tr2 = SedarTrainer(cfg, wd2)
+    dual, _ = tr2.run(trigger)          # restore + replay to the loss point
+    restart_transition = time.perf_counter() - t_loss
+    tr2.run(STEPS, dual=dual)
+    restart_wall = time.perf_counter() - t0
+
+    emit("elastic_fip_transition", fip_transition * 1e6,
+         f"shrink trigger step {trigger}, job alive on survivors")
+    emit("elastic_restart_transition", restart_transition * 1e6,
+         "new trainer + restore + replay to loss point")
+    emit("elastic_fip_run_wall", fip_wall * 1e6,
+         f"{STEPS} steps incl. shrink+regrow, bitwise-exact replay")
+    emit("elastic_restart_run_wall", restart_wall * 1e6,
+         f"{STEPS} steps incl. stop-and-relaunch")
+    rows.append({"name": "transition_s",
+                 "fail_in_place": round(fip_transition, 4),
+                 "checkpoint_restart": round(restart_transition, 4)})
+    rows.append({"name": "run_wall_s",
+                 "fail_in_place": round(fip_wall, 3),
+                 "checkpoint_restart": round(restart_wall, 3)})
+    return fip_transition, restart_transition
+
+
+def _bench_detection(rows):
+    """On-device lane compare vs per-step host fingerprint readback."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core.fingerprint import (pytree_fingerprint,
+                                        pytree_fingerprint_lanes)
+    from repro.models import build_model
+
+    params = build_model(
+        reduce_for_smoke(get_config("paper-testapp"))).init(
+            jax.random.PRNGKey(0))
+    lanes = 4
+
+    # collective-style: both replicas' lane hashes compared ON DEVICE; the
+    # (L,) verdict stays device-resident (a real mesh pmax/pmins it) — the
+    # step never blocks on a D2H readback
+    @jax.jit
+    def lane_eq(a, b):
+        fa = pytree_fingerprint_lanes(a, lanes)[..., :2]
+        fb = pytree_fingerprint_lanes(b, lanes)[..., :2]
+        return jnp.all(fa == fb, axis=-1)
+
+    fp = jax.jit(lambda t: pytree_fingerprint(t))
+
+    coll_us = timeit(
+        lambda: jax.block_until_ready(lane_eq(params, params)),
+        warmup=2, iters=5)
+    # legacy: fingerprint both replicas, read both back, compare on host —
+    # two blocking D2H syncs per step
+    read_us = timeit(
+        lambda: np.array_equal(np.asarray(fp(params)),
+                               np.asarray(fp(params))),
+        warmup=2, iters=5)
+    emit("elastic_detect_collective", coll_us,
+         f"{lanes}-lane on-device verdict, zero host syncs")
+    emit("elastic_detect_readback", read_us,
+         "per-step fingerprint D2H + host compare")
+    rows.append({"name": "detect_us",
+                 "collective": round(coll_us, 1),
+                 "readback": round(read_us, 1)})
+    return coll_us, read_us
+
+
+def _bench_model(rows):
+    """Analytic fail-in-place vs restart over an outage sweep."""
+    from repro.core import temporal_model as tm
+
+    p = tm.SedarParams(T_prog=10.0, T_comp=0.05, T_rest=0.5, f_d=0.02,
+                       t_cs=0.02, t_ca=0.01, T_compA=0.05, t_i=0.25)
+    over = tm.remesh_overhead(p)
+    sweep = []
+    crossover = None
+    for outage in (0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.0):
+        fip = tm.fail_in_place_cost(p, outage)
+        rst = tm.node_restart_cost(p, outage)
+        sweep.append({"outage_h": outage, "fail_in_place_h": round(fip, 4),
+                      "restart_h": round(rst, 4), "fip_wins": fip <= rst})
+        if crossover is None and fip > rst:
+            crossover = outage
+    wins = sum(1 for s in sweep if s["fip_wins"])
+    emit("elastic_model_remesh_overhead", 0.0,
+         f"remesh={over:.4f}h vs T_rest={p.T_rest}h; "
+         f"fip wins {wins}/{len(sweep)} outage points")
+    rows.append({"name": "model_sweep", "remesh_overhead_h": round(over, 4),
+                 "sweep": sweep})
+    return sweep
+
+
+def main() -> None:
+    td = tempfile.mkdtemp(prefix="bench_elastic_")
+    rows = []
+    try:
+        fip_s, rst_s = _bench_transition(td, rows)
+        coll_us, read_us = _bench_detection(rows)
+        sweep = _bench_model(rows)
+    finally:
+        shutil.rmtree(td, ignore_errors=True)
+
+    if JSON_PATH:
+        payload = {
+            "bench": "elastic",
+            "app": "paper-testapp (smoke-reduced)",
+            "jax_backend": jax.default_backend(),
+            "results": rows,
+            "fip_transition_s": round(fip_s, 4),
+            "restart_transition_s": round(rst_s, 4),
+            # acceptance: the shrink transition must beat relaunch-and-
+            # replay — that is the entire point of fail-in-place
+            "fip_beats_restart": fip_s < rst_s,
+            "detect_collective_us": round(coll_us, 1),
+            "detect_readback_us": round(read_us, 1),
+            "model_sweep": sweep,
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

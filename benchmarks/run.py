@@ -25,6 +25,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
     observability_* — metrics+journal+trace overhead on the protected
                  train/serve hot paths, journal append throughput
                  (DESIGN.md §15); --json writes BENCH_observability.json
+    elastic_*  — fail-in-place vs checkpoint-restart wall, collective vs
+                 host-readback detection cost, model outage sweep
+                 (DESIGN.md §16); --json writes BENCH_elastic.json
     roofline_* — dry-run roofline aggregation (deliverable g)
 """
 import argparse
@@ -43,6 +46,7 @@ MODULES = [
     "benchmarks.bench_serve",
     "benchmarks.bench_prefill",
     "benchmarks.bench_observability",
+    "benchmarks.bench_elastic",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -60,6 +64,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_serve",
     "benchmarks.bench_prefill",
     "benchmarks.bench_observability",
+    "benchmarks.bench_elastic",
 ]
 
 
@@ -74,6 +79,7 @@ def main() -> None:
     args = ap.parse_args()
     if args.json:
         import benchmarks.bench_checkpoint as bck
+        import benchmarks.bench_elastic as bel
         import benchmarks.bench_observability as bob
         import benchmarks.bench_prefill as bpf
         import benchmarks.bench_protected_step as bps
@@ -83,6 +89,7 @@ def main() -> None:
         bsv.JSON_PATH = "BENCH_serve.json"
         bpf.JSON_PATH = "BENCH_prefill.json"
         bob.JSON_PATH = "BENCH_observability.json"
+        bel.JSON_PATH = "BENCH_elastic.json"
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:

@@ -475,6 +475,15 @@ class TieredCheckpointer:
             if store is not None:
                 store.wait()
 
+    def drop_volatile(self) -> None:
+        """Node loss (DESIGN.md §16): the device and host rings live in the
+        failed topology's memory and do not survive a remesh — drop them so
+        the restore planner can only be served by the durable tiers (disk /
+        partner). The durable stores are untouched."""
+        for ring in (self.device, self.host):
+            if ring is not None:
+                ring.clear()
+
     def clear(self) -> None:
         for ring in (self.device, self.host):
             if ring is not None:

@@ -80,6 +80,26 @@ def make_pod_comparator(mesh, axis: str = "pod"):
     return _shard_map(inner, mesh, in_specs=P(), out_specs=(P(), P()))
 
 
+def make_lane_comparator(mesh, axis: str = "pod"):
+    """Per-lane replica agreement via pure reductions (DESIGN.md §16).
+
+    Takes lane fingerprints ``(L, 4) u32`` (logically replicated, physically
+    per-pod) and returns ``eq_lanes: bool (L,)`` — lane i True iff every
+    replica agrees on lane i's hash words. Implemented as pmax/pmin over the
+    replica axis instead of an all-gather: the hot path moves O(L) words and
+    never materializes the (n_replicas, L, 4) matrix; replicas agree exactly
+    when max == min elementwise. No host readback — the caller parks or
+    reduces the vector on device (§11 zero-sync contract)."""
+
+    def inner(fp_lanes):
+        h = fp_lanes[..., :2].astype(jnp.uint32)       # hash words only
+        mx = jax.lax.pmax(h, axis)
+        mn = jax.lax.pmin(h, axis)
+        return jnp.all(mx == mn, axis=-1)              # (L,)
+
+    return _shard_map(inner, mesh, in_specs=P(), out_specs=P())
+
+
 def make_pod_broadcaster(mesh, axis: str = "pod"):
     """Beyond-paper N-modular redundancy: returns fn(state, src) that copies
     pod `src`'s physical state to every pod (collective-permute, memory-light)

@@ -709,28 +709,62 @@ class PodExecutor(ReplicaExecutor):
     `pod_step(state, batch, armed) -> (new_state, eq, fp_all, aux)` must
     commit candidates only where eq (the in-jit analogue of the sequential
     compare-then-commit); `pod_validate(state) -> (eq, fp_all)` compares
-    full-state fingerprints over the replica axis."""
+    full-state fingerprints over the replica axis.
+
+    `eq` may be a scalar (legacy whole-state compare) or a per-lane bool
+    vector from `make_lane_comparator` (DESIGN.md §16) — all hot-path reads
+    reduce it with jnp.all; the lane vector itself is only read back on the
+    fault path, where `lane_hosts` (lane indices -> host ids) translates it
+    into a device/host localization on the DetectionEvent."""
 
     name = "pod"
     n_replicas = 2
     supports_deferred = True
 
     def __init__(self, pod_step: Callable, pod_validate: Callable,
-                 state_fp_fn: Callable):
+                 state_fp_fn: Callable, *,
+                 lane_hosts: Optional[Callable] = None):
         self.pod_step = pod_step
         self.pod_validate = pod_validate
         self.state_fp_fn = state_fp_fn
+        self.lane_hosts = lane_hosts
         # last pod_validate reduction (_EqCache): validate() and
         # validated_fp() hit the same committed state in one engine
         # iteration — the all-gather compare must not run twice
         self._val_cache = _EqCache()
 
+    def _lane_detail(self, eq) -> Dict[str, Any]:
+        """Fault-path-only localization: read the per-lane predicate back
+        and name the disagreeing lanes (and their owning hosts)."""
+        if jnp.ndim(eq) == 0:
+            return {}
+        vec = np.asarray(hostsync.batched_get([eq],
+                                              label="commit_lanes")[0])
+        lanes = [int(i) for i in np.nonzero(~vec)[0]]
+        detail: Dict[str, Any] = {"lanes": lanes}
+        if self.lane_hosts is not None and lanes:
+            detail["hosts"] = sorted({int(h)
+                                      for h in self.lane_hosts(lanes)})
+        return detail
+
+    def annotate_event(self, event: DetectionEvent) -> None:
+        """Deferred-flush events localize per ring slot; for the pod
+        backend a ring slot IS a fingerprint lane — translate."""
+        slots = event.detail.get("slots")
+        if slots and "lanes" not in event.detail:
+            event.detail["lanes"] = list(slots)
+            if self.lane_hosts is not None:
+                event.detail["hosts"] = sorted(
+                    {int(h) for h in self.lane_hosts(slots)})
+
     def execute(self, dual, batch, step: int, armed, compare: bool):
         new_state, eq, fp_all, aux = self.pod_step(dual["r0"], batch, armed)
         self._val_cache.invalidate()
-        if compare and not hostsync.read_bool(eq, label="commit_compare"):
+        if compare and not hostsync.read_bool(jnp.all(eq),
+                                              label="commit_compare"):
             return dual, aux, DetectionEvent(step=step, boundary="commit",
-                                             effect="TDC")
+                                             effect="TDC",
+                                             detail=self._lane_detail(eq))
         return {"r0": new_state}, aux, None
 
     def execute_deferred(self, dual, batch, step: int, armed,
@@ -747,19 +781,20 @@ class PodExecutor(ReplicaExecutor):
         if hit is not None:
             return hit
         eq, fp_all = self.pod_validate(dual["r0"])
-        eqb = hostsync.read_bool(eq, label="state_validate")
-        return self._val_cache.put(dual.get("r0"), (eqb, fp_all))
+        eqb = hostsync.read_bool(jnp.all(eq), label="state_validate")
+        return self._val_cache.put(dual.get("r0"), (eqb, fp_all, eq))
 
     def validate(self, dual, step: int) -> Optional[DetectionEvent]:
-        eqb, fp_all = self._state_eq(dual)
+        eqb, fp_all, eq = self._state_eq(dual)
         if eqb:
             return None
+        detail = {"fp_all": hostsync.read_scalar(fp_all, label="fp_all")}
+        detail.update(self._lane_detail(eq))
         return DetectionEvent(step=step, boundary="validate", effect="FSC",
-                              detail={"fp_all": hostsync.read_scalar(
-                                  fp_all, label="fp_all")})
+                              detail=detail)
 
     def validated_fp(self, dual) -> Tuple[np.ndarray, bool]:
-        eqb, _ = self._state_eq(dual)
+        eqb = self._state_eq(dual)[0]
         return (hostsync.read_scalar(self.state_fp_fn(dual["r0"]),
                                      label="validated_fp"), eqb)
 
@@ -1009,6 +1044,11 @@ class SedarEngine:
         # recovery target predates them, and a restored trajectory re-runs
         # (and re-validates) those steps
         self._ring.clear()
+        annotate = getattr(self.executor, "annotate_event", None)
+        if annotate is not None:
+            # lane -> device/host localization (DESIGN.md §16), attached
+            # before the event is journaled or surfaced to callbacks
+            annotate(event)
         self.detections.append(event)
         obs.note_detection(event)
         self.notify(event)

@@ -191,6 +191,43 @@ def pytree_fingerprint_fused(tree, use_pallas: Optional[bool] = None
                       jax.lax.bitcast_convert_type(a, jnp.uint32)])
 
 
+def pytree_fingerprint_lanes(tree, n_lanes: int) -> jnp.ndarray:
+    """Per-shard fingerprint lanes -> (n_lanes, 4) uint32 (DESIGN.md §16).
+
+    The packed state is split into `n_lanes` equal contiguous chunks
+    (zero-padded tail) and each chunk is hashed independently, so a replica
+    divergence localizes to the lane covering the corrupted words instead
+    of collapsing into one whole-state bit. Lane i covers packed u32 words
+    [i*W, (i+1)*W), W = ceil(N/n_lanes); callers align n_lanes with shard
+    ownership (lane index -> data shard -> host, see
+    runtime/cluster.lanes_to_hosts). NOT comparable with the fused or
+    per-leaf granularities (different index streams)."""
+    L = max(int(n_lanes), 1)
+    u = pack_tree_u32(tree)
+    n = int(u.shape[0])
+    if n == 0:
+        return jnp.zeros((L, 4), jnp.uint32)
+    width = -(-n // L)
+    pad = L * width - n
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad,), jnp.uint32)])
+    return jax.vmap(packed_fingerprint)(u.reshape(L, width))
+
+
+def lane_of_leaf_index(tree, leaf_idx: int, flat_idx: int, n_lanes: int
+                       ) -> int:
+    """Host-side: which fingerprint lane covers element `flat_idx` of leaf
+    `leaf_idx` (tree_flatten order) under `pytree_fingerprint_lanes`.
+    Assumes 32-bit leaves (one packed word per element), which holds for
+    every training state here after `_to_u32`'s 64->32 narrowing."""
+    leaves = jax.tree.leaves(tree)
+    off = sum(int(np.size(l)) for l in leaves[:leaf_idx]) + int(flat_idx)
+    total = sum(int(np.size(l)) for l in leaves)
+    L = max(int(n_lanes), 1)
+    width = -(-total // L)
+    return off // width
+
+
 def fingerprints_equal(fp_a, fp_b) -> jnp.ndarray:
     """Exact equality on the hash words (cols 0..1); stats are diagnostics."""
     return jnp.all(fp_a[..., :2] == fp_b[..., :2])

@@ -175,6 +175,81 @@ def advise(p: tm.SedarParams, mtbe_hours: float,
 
 
 # ---------------------------------------------------------------------------
+# Degraded-mode policy — what to do with the survivors after a node loss
+# (DESIGN.md §16; the spatial analogue of Sec. 4.4's rollback-vs-restart)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DegradedModeDecision:
+    """Outcome of `choose_degraded_mode` for one node-loss incident.
+
+    mode: "fail_in_place" — keep running on the survivors (shrunken data
+    axis, or unprotected-but-checkpointed when the lost node was the
+    replica pod) and regrow when the host returns; "safe_stop" — park the
+    job on its last validated checkpoint and wait for a relaunch."""
+
+    mode: str                         # fail_in_place | safe_stop
+    protection_lost: bool             # did the outage take the replica pod?
+    fail_in_place_hours: float        # modeled cost of riding it out
+    restart_hours: float              # modeled cost of stop-and-relaunch
+    expected_faults_during_outage: float
+    notes: str = ""
+
+
+def choose_degraded_mode(p: tm.SedarParams, mtbe_hours: float,
+                         outage_hours: float, *,
+                         protection_lost: bool = False,
+                         sdc_risk_budget: float = 1.0,
+                         keep_degraded: bool = False) -> DegradedModeDecision:
+    """Fail-in-place vs safe-stop for a node outage of `outage_hours`.
+
+    Two gates, in order:
+      1. SDC risk — when the lost node removes the replica pod, the
+         survivors run WITHOUT detection; the expected number of soft
+         errors during the outage (outage/MTBE) must stay under
+         `sdc_risk_budget` or the only safe answer is to stop (an
+         undetected fault would silently corrupt every later checkpoint).
+      2. Cost — fail-in-place pays two remesh transitions (shrink+regrow)
+         and, because the authoritative trajectory re-anchors at the last
+         full-width checkpoint, replays the degraded span; stop-and-
+         relaunch pays the outage plus a full T_rest. The cheaper side
+         wins (`tm.fail_in_place_beats_restart`) — the same convenience
+         rule as `rollback_beats_restart` (Eq. 14 vs Eq. 4), applied to
+         space instead of time."""
+    exp_faults = (outage_hours / mtbe_hours) if mtbe_hours > 0 else \
+        float("inf")
+    fip = tm.fail_in_place_cost(p, outage_hours, keep_degraded=keep_degraded)
+    rst = tm.node_restart_cost(p, outage_hours)
+    notes = []
+    if protection_lost and exp_faults > sdc_risk_budget:
+        notes.append(
+            f"replica pod lost and expected faults during the outage "
+            f"({exp_faults:.2f}) exceed the SDC risk budget "
+            f"({sdc_risk_budget:.2f}): unprotected survivors would risk "
+            f"silent corruption of every checkpoint cut while degraded — "
+            f"safe-stop on the last validated checkpoint")
+        return DegradedModeDecision(
+            mode="safe_stop", protection_lost=True,
+            fail_in_place_hours=fip, restart_hours=rst,
+            expected_faults_during_outage=exp_faults,
+            notes="; ".join(notes))
+    if protection_lost:
+        notes.append(
+            f"replica pod lost but expected faults {exp_faults:.2f} <= "
+            f"budget {sdc_risk_budget:.2f}: survivors run unprotected-but-"
+            f"checkpointed; the regrown full-width replay re-validates")
+    mode = "fail_in_place" if fip <= rst else "safe_stop"
+    notes.append(
+        f"fail-in-place {fip:.3f}h vs stop-and-relaunch {rst:.3f}h "
+        f"(2×remesh vs T_rest — cf. rollback_beats_restart, Eq.14 vs Eq.4)")
+    return DegradedModeDecision(
+        mode=mode, protection_lost=protection_lost,
+        fail_in_place_hours=fip, restart_hours=rst,
+        expected_faults_during_outage=exp_faults,
+        notes="; ".join(notes))
+
+
+# ---------------------------------------------------------------------------
 # Engine factory — the one place engines are assembled
 # ---------------------------------------------------------------------------
 
@@ -186,6 +261,7 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                 pod_validate: Optional[Callable] = None,
                 pod_broadcaster: Optional[Callable] = None,
                 n_replicas: int = 2,
+                lane_hosts: Optional[Callable] = None,
                 recovery: Any = None, workdir: Optional[str] = None,
                 schedule: Any = None, watchdog: Any = None,
                 inj_spec: Any = None, inj_flag: Any = None,
@@ -236,7 +312,8 @@ def make_engine(sedar_cfg, *, backend: Optional[str] = None,
                                     pod_broadcaster,
                                     n_replicas=max(n_replicas, 3))
         else:
-            executor = PodExecutor(pod_step, pod_validate, state_fp_fn)
+            executor = PodExecutor(pod_step, pod_validate, state_fp_fn,
+                                   lane_hosts=lane_hosts)
     elif backend in ("abft", "hybrid"):
         if step_fn is None or state_fp_fn is None:
             raise ValueError(f"backend {backend!r} needs step_fn and "

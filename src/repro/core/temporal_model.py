@@ -499,6 +499,56 @@ def convenience_table(p: SedarParams, Xs=(0.3, 0.5, 0.8), ks=(0, 1, 2, 3, 4)):
 
 
 # ---------------------------------------------------------------------------
+# Node loss: fail-in-place vs full restart (DESIGN.md §16, beyond paper —
+# the spatial analogue of Sec. 4.4's rollback-vs-restart convenience rule)
+# ---------------------------------------------------------------------------
+
+def remesh_overhead(p: SedarParams, costs: Optional[dict] = None) -> float:
+    """Hours one elastic remesh transition costs: restore the anchor state
+    from the durable partner tier onto the (new) mesh plus re-plumbing the
+    survivors. The process, data pipeline, and compiled executables all
+    survive, so the restore pays only the partner copy's data movement
+    (~its save cost, NOT its restart-class t_restore) plus a small
+    fraction of a relaunch for the mesh rebuild."""
+    c = costs or default_tier_costs(p)
+    return c["partner"].t_save + 0.1 * p.T_rest
+
+
+def fail_in_place_cost(p: SedarParams, outage_hours: float,
+                       costs: Optional[dict] = None,
+                       keep_degraded: bool = False) -> float:
+    """Hours a node outage costs under fail-in-place: shrink + regrow
+    transitions (2× remesh), and — because the authoritative full-width
+    trajectory re-anchors at the pre-shrink checkpoint — the degraded
+    segment is replayed at full width unless `keep_degraded` (a workload
+    that accepts the reduced-batch trajectory as-is). The replayed segment
+    is the outage span plus half a checkpoint interval of pre-outage work
+    in expectation."""
+    transitions = 2.0 * remesh_overhead(p, costs)
+    if keep_degraded:
+        return transitions
+    return transitions + 0.5 * p.t_i + outage_hours
+
+
+def node_restart_cost(p: SedarParams, outage_hours: float) -> float:
+    """Hours the same outage costs under stop-and-relaunch (the Eq.-4
+    restart path applied to a node loss): the job idles for the outage,
+    pays a full relaunch, and redoes half a checkpoint interval."""
+    return outage_hours + p.T_rest + 0.5 * p.t_i
+
+
+def fail_in_place_beats_restart(p: SedarParams, outage_hours: float,
+                                costs: Optional[dict] = None,
+                                keep_degraded: bool = False) -> bool:
+    """The §16 decision direction: with the degraded trajectory replayed,
+    both options pay the outage span + t_i/2, so fail-in-place wins exactly
+    when two remesh transitions undercut one full relaunch (2·remesh <
+    T_rest) — and always wins when the degraded progress is kept."""
+    return fail_in_place_cost(p, outage_hours, costs, keep_degraded) <= \
+        node_restart_cost(p, outage_hours)
+
+
+# ---------------------------------------------------------------------------
 # Paper Table 3 parameter sets (for validation + benchmarks)
 # ---------------------------------------------------------------------------
 

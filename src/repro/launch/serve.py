@@ -196,6 +196,17 @@ def main() -> None:
     ap.add_argument("--fault-persistent", action="store_true",
                     help="stuck bit: re-inject every step (drives the "
                          "per-request rejection path)")
+    # -- cluster membership (DESIGN.md §16) ---------------------------------
+    ap.add_argument("--heartbeat-dir", default=None,
+                    help="publish this server's liveness to a shared "
+                         "heartbeat directory and report any stale peers "
+                         "after the run (a fleet supervisor uses the same "
+                         "directory to drain a dead replica's traffic)")
+    ap.add_argument("--host-id", type=int, default=0)
+    ap.add_argument("--n-hosts", type=int, default=1)
+    ap.add_argument("--hb-timeout", type=float, default=60.0,
+                    help="seconds without a heartbeat before a peer is "
+                         "declared stale")
     # -- observability (DESIGN.md §15) --------------------------------------
     ap.add_argument("--metrics-dir", default=None,
                     help="enable the obs metrics registry + fault journal: "
@@ -210,10 +221,25 @@ def main() -> None:
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
     ob = obs.configure(metrics_dir=args.metrics_dir, trace=args.trace)
+    hb = mon = None
+    if args.heartbeat_dir:
+        from repro.runtime.cluster import ClusterMonitor, Heartbeat
+        hb = Heartbeat(args.heartbeat_dir, args.host_id)
+        hb.beat(0)
+        mon = ClusterMonitor(args.heartbeat_dir, args.n_hosts,
+                             timeout_s=args.hb_timeout)
     if args.continuous:
         _continuous(args, cfg, ob)
     else:
         _sync(args, cfg)
+    if hb is not None:
+        if not hb.beat(args.steps):
+            print(f"[cluster] heartbeat write failed "
+                  f"({hb.io_errors} IO errors) — peers will see this "
+                  f"host as stale")
+        stale = mon.stale_hosts()
+        print(f"[cluster] host {args.host_id} of {args.n_hosts}: "
+              f"{'stale peers ' + str(stale) if stale else 'all peers live'}")
     snap = ob.finalize()
     if snap:
         print(f"[obs] metrics snapshot ({args.metrics_dir}/metrics.prom):")

@@ -8,18 +8,29 @@
 real accelerators (and are exercised shape-only via the dry-run).
 --manual-vote runs the paper's BASELINE protocol: two independent instances,
 final comparison, third run + majority vote on mismatch (Sec. 3, Eqs. 1-2).
+
+--elastic drives the fail-in-place loop (DESIGN.md §16): an ElasticTrainer
+run under a simulated cluster where one host can go dark mid-run and later
+return — the run shrinks onto survivors from the last validated checkpoint,
+then regrows and replays to a state bitwise-identical with an uninterrupted
+run:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 12 --level 3 --elastic --n-hosts 2 \
+        --lose-host 1 --lose-at 300 --return-at 700
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import shutil
 
 import numpy as np
 
 from repro import obs
-from repro.configs import (RunConfig, SedarConfig, TrainConfig, get_config,
-                           list_archs, reduce_for_smoke)
+from repro.configs import (MeshConfig, RunConfig, SedarConfig, TrainConfig,
+                           get_config, list_archs, reduce_for_smoke)
 from repro.core.fingerprint import pytree_fingerprint
 from repro.core.injection import InjectionSpec
 from repro.core.policy import make_trainer
@@ -54,6 +65,49 @@ def manual_vote_baseline(run_cfg: RunConfig, workdir: str, steps: int,
           f"instance {1 - winner} was corrupted")
 
 
+def run_elastic(run_cfg: RunConfig, args) -> None:
+    """Fail-in-place demo loop (DESIGN.md §16). This process plays every
+    host's heartbeat writer: each training segment advances a simulated
+    clock 100 s and refreshes all heartbeats except the designated lost
+    host during its dark window — the ClusterMonitor then sees a real
+    stale-host and the ElasticTrainer shrinks/regrows exactly as it would
+    under a genuine node loss."""
+    from repro.runtime.elastic import ElasticTrainer
+
+    hb_dir = os.path.join(args.workdir, "heartbeats")
+    sim = {"now": 0.0}
+
+    def write_beat(host: int, step: int) -> None:
+        os.makedirs(hb_dir, exist_ok=True)
+        with open(os.path.join(hb_dir, f"host_{host:05d}.json"), "w") as f:
+            json.dump({"host": host, "step": int(step or 0),
+                       "t": sim["now"]}, f)
+
+    def tick(step) -> None:
+        sim["now"] += 100.0
+        for h in range(args.n_hosts):
+            dark = (args.lose_host is not None and h == args.lose_host
+                    and args.lose_at <= sim["now"] < args.return_at)
+            if not dark:
+                write_beat(h, step or 0)
+
+    et = ElasticTrainer(run_cfg, args.workdir, n_hosts=args.n_hosts,
+                        scan_interval=args.scan_interval,
+                        clock=lambda: sim["now"], tick=tick)
+    rep = et.run(args.steps)
+    print(rep.summary())
+    for r in rep.remeshes:
+        print(f"  remesh[{r.phase}]: trigger step {r.trigger_step}, "
+              f"restored step {r.restore_step} from tier "
+              f"{r.restore_tier}, hosts {sorted(r.hosts)}, data "
+              f"{r.old_data}->{r.new_data}, batch "
+              f"{r.old_batch}->{r.new_batch}")
+    for d in rep.decisions:
+        print(f"  decision: {d.mode} (fail_in_place "
+              f"{d.fail_in_place_hours:.3f} h vs restart "
+              f"{d.restart_hours:.3f} h) — {d.notes}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=list_archs())
@@ -86,6 +140,23 @@ def main() -> None:
     ap.add_argument("--inject-step", type=int, default=None)
     ap.add_argument("--manual-vote", action="store_true")
     ap.add_argument("--host-id", type=int, default=0)
+    # -- elastic fail-in-place (DESIGN.md §16) -------------------------------
+    ap.add_argument("--elastic", action="store_true",
+                    help="run under an ElasticTrainer: monitor heartbeats, "
+                         "shrink onto survivors on node loss, regrow on "
+                         "return (requires --level 3)")
+    ap.add_argument("--n-hosts", type=int, default=2,
+                    help="cluster width; the data axis gets one shard per "
+                         "host in the demo mesh")
+    ap.add_argument("--scan-interval", type=int, default=2,
+                    help="steps per training segment between cluster scans")
+    ap.add_argument("--lose-host", type=int, default=None,
+                    help="simulate this host going dark (heartbeats stop)")
+    ap.add_argument("--lose-at", type=float, default=300.0,
+                    help="simulated-clock second the host goes dark "
+                         "(the clock advances 100 s per segment)")
+    ap.add_argument("--return-at", type=float, default=700.0,
+                    help="simulated-clock second the host comes back")
     ap.add_argument("--metrics-dir", default=None,
                     help="enable the obs metrics registry + fault journal "
                          "(DESIGN.md §15): writes metrics.prom and "
@@ -99,11 +170,21 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
+    mesh_cfg = None
+    if args.elastic:
+        if args.level < 3:
+            ap.error("--elastic requires --level 3 (a validated checkpoint "
+                     "anchor is what makes shrink/regrow exact)")
+        if args.global_batch % args.n_hosts:
+            ap.error("--global-batch must divide evenly across --n-hosts")
+        mesh_cfg = MeshConfig(shape=(args.n_hosts, 1),
+                              axis_names=("data", "model"))
     rc = RunConfig(
         model=cfg,
         train=TrainConfig(global_batch=args.global_batch,
                           seq_len=args.seq_len, steps=args.steps,
                           warmup_steps=max(args.steps // 10, 1), lr=1e-3),
+        mesh=mesh_cfg if mesh_cfg is not None else MeshConfig(),
         sedar=SedarConfig(level=args.level, replication=args.replication,
                           validate_lag=args.validate_lag,
                           checkpoint_interval=args.ckpt_interval,
@@ -123,6 +204,16 @@ def main() -> None:
         return
 
     ob = obs.configure(metrics_dir=args.metrics_dir, trace=args.trace)
+    if args.elastic:
+        run_elastic(rc, args)
+        if args.metrics_dir:
+            print(f"[obs] kpis: {ob.kpis(steps=args.steps)}")
+        snap = ob.finalize()
+        if snap:
+            print(f"[obs] metrics snapshot "
+                  f"({args.metrics_dir}/metrics.prom):")
+            print(snap, end="")
+        return
     hb = Heartbeat(os.path.join(args.workdir, "heartbeats"), args.host_id)
     trainer = make_trainer(rc, args.workdir, inj_spec=inj)
     dual, rep = trainer.run(args.steps)

@@ -55,12 +55,20 @@ def compute_kpis(records: Iterable[Dict[str, Any]], *,
     redone = 0
     rollbacks = 0
     corrected = 0
+    remeshes = 0
+    downtime_s = 0.0
     for r in payloads(recs, "recovery", "record"):
         rollbacks += int(r.get("rollbacks", 0) or 0)
         if r.get("at") is not None and r.get("step") is not None:
             redone += max(0, int(r["at"]) - int(r["step"]))
         if r.get("kind") in ("abft_correct", "vote_repair", "corrected"):
             corrected += 1
+        if r.get("kind") == "elastic_remesh":
+            # node-loss transitions (DESIGN.md §16): their `at - step` spans
+            # already feed `redone` above (work discarded by re-anchoring);
+            # the transition pauses themselves are a separate downtime axis
+            remeshes += 1
+            downtime_s += float(r.get("downtime_s", 0.0) or 0.0)
     # prefill-corrected events are repaired inline (no recovery record)
     corrected += sum(1 for d in dets
                      if d.get("effect") == "abft_corrected")
@@ -75,9 +83,18 @@ def compute_kpis(records: Iterable[Dict[str, Any]], *,
         "mttr_s": (sum(mttrs) / len(mttrs)) if mttrs else 0.0,
         "redone_steps": redone,
     }
+    if remeshes:
+        out["elastic_remeshes"] = remeshes
+        out["node_loss_downtime_s"] = downtime_s
     if steps:
         out["steps"] = int(steps)
         out["availability"] = max(0.0, 1.0 - redone / float(steps))
+        if remeshes and wall_s:
+            # node-loss downtime windows are wall time where NO useful work
+            # happens at all — fold them in as an uptime factor on top of
+            # the redone-work fraction
+            out["availability"] *= max(0.0,
+                                       1.0 - downtime_s / float(wall_s))
     if tokens is not None and steps:
         out["goodput_tokens_per_step"] = tokens / float(steps)
     if injected is not None:
@@ -92,13 +109,18 @@ def compute_kpis(records: Iterable[Dict[str, Any]], *,
 
 def reconcile_with_advice(kpis: Dict[str, Any], *,
                           advice: Any = None,
-                          validate_lag: Optional[int] = None
+                          validate_lag: Optional[int] = None,
+                          predicted_downtime_s: Optional[float] = None
                           ) -> List[Dict[str, Any]]:
     """Predicted-vs-observed rows. Hard bound checked here: every deferred
     detection must surface within the validation window
     (``mttd_max_steps ≤ validate_lag``). When a `policy.Advice` is given,
     its serve-availability prediction becomes a floor-with-slack check on
-    the measured availability."""
+    the measured availability. `predicted_downtime_s` is the temporal
+    model's fail-in-place transition estimate
+    (`tm.remesh_overhead × transitions`, in seconds) checked against the
+    measured node-loss downtime with a generous slack band — transition
+    wall time is dominated by restore IO, which the model only scales."""
     rows: List[Dict[str, Any]] = []
     lag = validate_lag
     if lag is None and advice is not None:
@@ -123,6 +145,18 @@ def reconcile_with_advice(kpis: Dict[str, Any], *,
                 # generous slack band rather than a point match
                 "ok": obs_v >= pred - 0.25,
             })
+    if predicted_downtime_s is not None and \
+            kpis.get("node_loss_downtime_s") is not None:
+        obs_dt = float(kpis["node_loss_downtime_s"])
+        rows.append({
+            "metric": "node_loss_downtime_s",
+            "predicted": predicted_downtime_s,
+            "observed": obs_dt,
+            # the model predicts the expected transition overhead; real
+            # transitions add compile + IO jitter, so check order of
+            # magnitude, not a point value
+            "ok": obs_dt <= 4.0 * float(predicted_downtime_s) + 5.0,
+        })
     if "sdc_coverage" in kpis:
         rows.append({
             "metric": "sdc_coverage",

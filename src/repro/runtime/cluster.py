@@ -29,20 +29,49 @@ class HostState:
 
 
 class Heartbeat:
-    """Per-host heartbeat writer (one file per host, atomic replace)."""
+    """Per-host heartbeat writer (one file per host, atomic replace).
 
-    def __init__(self, directory: str, host_id: int):
+    A heartbeat is advisory: a transient IO error (full disk, ENOENT race
+    on a recycled workdir, NFS hiccup) must never take the train loop down,
+    so `beat()` retries a bounded number of times and then gives up
+    silently — a missed beat at worst makes the monitor flag this host a
+    little earlier. Exhausted attempts are counted in `io_errors` (and the
+    `cluster_heartbeat_io_errors_total` metric) so the flakiness is still
+    visible."""
+
+    def __init__(self, directory: str, host_id: int, *,
+                 retries: int = 3, retry_wait_s: float = 0.01):
         self.dir = directory
         self.host_id = host_id
-        os.makedirs(directory, exist_ok=True)
+        self.retries = max(int(retries), 1)
+        self.retry_wait_s = retry_wait_s
+        self.io_errors = 0
+        try:
+            os.makedirs(directory, exist_ok=True)
+        except OSError:
+            self.io_errors += 1
 
-    def beat(self, step: int) -> None:
+    def beat(self, step: int) -> bool:
         path = os.path.join(self.dir, f"host_{self.host_id:05d}.json")
         tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"host": self.host_id, "step": step,
-                       "t": time.time()}, f)
-        os.replace(tmp, path)
+        for attempt in range(self.retries):
+            try:
+                # re-create the directory every attempt: a concurrent
+                # cleanup may remove it between beats (the ENOENT race)
+                os.makedirs(self.dir, exist_ok=True)
+                with open(tmp, "w") as f:
+                    json.dump({"host": self.host_id, "step": step,
+                               "t": time.time()}, f)
+                os.replace(tmp, path)
+                return True
+            except OSError:
+                if attempt + 1 < self.retries and self.retry_wait_s > 0:
+                    time.sleep(self.retry_wait_s)
+        self.io_errors += 1
+        if obs.metrics_enabled():
+            obs.metrics.inc("cluster_heartbeat_io_errors_total",
+                            host=self.host_id)
+        return False
 
 
 class ClusterMonitor:
@@ -56,17 +85,33 @@ class ClusterMonitor:
         self.straggler_factor = straggler_factor
 
     def scan(self) -> Dict[int, HostState]:
-        out = {}
+        """Best-effort read of every heartbeat file. Corrupted files
+        (truncated writes, garbage, wrong JSON shape) and racing deletes
+        are skipped — the host simply reads as missing/stale; a transient
+        listdir failure gets one retry and then an empty scan rather than
+        an exception into the caller's loop."""
+        out: Dict[int, HostState] = {}
         if not os.path.isdir(self.dir):
             return out
-        for name in os.listdir(self.dir):
+        for attempt in range(2):
+            try:
+                names = os.listdir(self.dir)
+                break
+            except OSError:
+                if attempt:
+                    return out
+                time.sleep(0.01)
+        for name in names:
             if not name.startswith("host_") or not name.endswith(".json"):
                 continue
             try:
                 with open(os.path.join(self.dir, name)) as f:
                     d = json.load(f)
-                out[d["host"]] = HostState(d["host"], d["t"], d["step"])
-            except (json.JSONDecodeError, KeyError, OSError):
+                out[int(d["host"])] = HostState(int(d["host"]),
+                                                float(d["t"]),
+                                                int(d["step"]))
+            except (json.JSONDecodeError, KeyError, OSError,
+                    TypeError, ValueError):
                 continue
         return out
 
@@ -176,24 +221,71 @@ def rebuild_mesh(shape, axes, devices=None):
     return make_mesh_compat(tuple(shape), tuple(axes), devices=devices)
 
 
+def data_axis_index(mesh_cfg, name: str = "data") -> int:
+    """Position of the data axis in a MeshConfig — BY NAME, never by
+    position: on the replicated ("pod", "data", "model") meshes the data
+    axis is index 1, so `shape[0]` silently shrinks the replica axis."""
+    try:
+        return list(mesh_cfg.axis_names).index(name)
+    except ValueError:
+        raise ValueError(
+            f"mesh axes {tuple(mesh_cfg.axis_names)} have no {name!r} axis "
+            f"to shrink") from None
+
+
+def surviving_devices(mesh, lost_shards: List[int],
+                      data_axis: str = "data"):
+    """Drop the lost data shards' device planes from a live mesh's device
+    ndarray; returns (new_shape, devices) ready for `rebuild_mesh` with the
+    same axis names. Device order within the survivors is preserved, so
+    shard i of the shrunken mesh is survivor i in the old order."""
+    import numpy as np
+    devs = np.asarray(mesh.devices)
+    axes = list(mesh.axis_names)
+    ax = axes.index(data_axis)
+    keep = [i for i in range(devs.shape[ax]) if i not in set(lost_shards)]
+    devs2 = np.take(devs, keep, axis=ax)
+    return tuple(devs2.shape), devs2.reshape(-1)
+
+
+def lanes_to_hosts(lane_ids, hosts_per_data_shard: int = 1) -> List[int]:
+    """Fingerprint-lane -> host translation (DESIGN.md §16): lane i covers
+    data shard i, and shard i is owned by hosts [i*H, (i+1)*H). The inverse
+    of `plan_elastic_remesh`'s `h // hosts_per_data_shard` shard map."""
+    H = max(int(hosts_per_data_shard), 1)
+    out: List[int] = []
+    for lane in lane_ids:
+        out.extend(range(int(lane) * H, (int(lane) + 1) * H))
+    return out
+
+
 def elastic_restart(run_cfg, workdir: str, lost_hosts: List[int], *,
                     hosts_per_data_shard: int = 1, mesh=None, **trainer_kw):
     """Host-loss recovery: shrink the data axis past the lost hosts and
     rebuild the training engine via the policy factory.
 
-    Returns (plan, trainer). The trainer's engine restores from the last
-    valid checkpoint on its first detection-free boundary (L3 guarantees
-    validity); callers resume with `trainer.run(remaining_steps)`."""
+    Returns (plan, trainer). The new trainer starts UNINITIALIZED — the
+    caller restores the anchor state (last valid L3 checkpoint, typically
+    from the partner tier) and adopts it via
+    `trainer.engine.executor.adopt_single`; `runtime/elastic.ElasticTrainer`
+    drives the full shrink/regrow cycle. The rewritten config shrinks BOTH
+    the mesh shape and the global batch so the per-shard batch (and with it
+    every compiled program shape) is preserved."""
     import dataclasses as _dc
 
     from repro.core.policy import make_trainer
 
-    plan = plan_elastic_remesh(run_cfg.mesh.shape[0]
-                               if run_cfg.mesh.shape else 1,
+    mesh_cfg = run_cfg.mesh
+    ax = data_axis_index(mesh_cfg)
+    plan = plan_elastic_remesh(mesh_cfg.shape[ax],
                                run_cfg.train.global_batch, lost_hosts,
                                hosts_per_data_shard=hosts_per_data_shard)
+    new_shape = tuple(plan.new_data if i == ax else s
+                      for i, s in enumerate(mesh_cfg.shape))
     new_cfg = _dc.replace(
-        run_cfg, train=_dc.replace(run_cfg.train,
-                                   global_batch=plan.new_global_batch))
+        run_cfg,
+        mesh=_dc.replace(mesh_cfg, shape=new_shape),
+        train=_dc.replace(run_cfg.train,
+                          global_batch=plan.new_global_batch))
     trainer = make_trainer(new_cfg, workdir, mesh=mesh, **trainer_kw)
     return plan, trainer

@@ -1,0 +1,378 @@
+"""Elastic fail-in-place training across node loss (DESIGN.md §16).
+
+`ElasticTrainer` wraps a SEDAR-protected trainer in a cluster-health loop:
+train a segment, scan the heartbeat directory, and on a stale host run the
+shrink/regrow protocol instead of dying:
+
+  shrink  — consult `policy.choose_degraded_mode` (the temporal model's
+            restart-vs-fail-in-place cost terms). Fail-in-place drops the
+            lost data shards via `plan_elastic_remesh` (per-shard batch —
+            and with it every compiled program shape — preserved), drops
+            the volatile checkpoint rings (they lived in the failed
+            topology's memory), restores the last validated L3 anchor from
+            the durable tiers (the Tier-3 partner store when configured)
+            onto the survivors, and keeps training in a SIDE workdir.
+  regrow  — when every lost host beats again, the original full-width
+            trainer (kept alive, so its compiled step functions and AOT
+            caches are reused) restores the SAME anchor from the original
+            untouched store and replays at full width.
+
+The authoritative trajectory is the full-width one anchored at the last
+validated checkpoint: the data pipeline is a pure function of (seed, step)
+and the jitted step is deterministic, so the regrown run is bitwise
+identical to an uninterrupted run at the same seed (asserted in
+tests/test_elastic.py). Degraded-phase progress is best-effort — it keeps
+serving/learning during the outage but is discarded on regrow.
+
+Every transition is journaled as a recovery record with
+`kind="elastic_remesh"` so `obs.kpi.compute_kpis` picks up the node-loss
+downtime windows and the redone (discarded) work without new plumbing.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import temporal_model as tm
+from repro.core.policy import (DegradedModeDecision, choose_degraded_mode,
+                               make_trainer)
+from repro.runtime.cluster import (ClusterMonitor, elastic_restart,
+                                   rebuild_mesh, surviving_devices)
+
+
+@dataclass
+class RemeshRecord:
+    """One shrink/regrow/safe-stop transition of the elastic cycle."""
+
+    phase: str                    # shrink | regrow | safe_stop
+    trigger_step: int             # host-side step when the scan fired
+    restore_step: Optional[int]   # anchor checkpoint version (None = scratch)
+    restore_tier: Optional[str]   # tier the anchor came back from
+    hosts: List[int]              # hosts lost (shrink) / returned (regrow)
+    old_data: int
+    new_data: int
+    old_batch: int
+    new_batch: int
+    downtime_s: float             # wall time training was paused
+    mode: str                     # fail_in_place | safe_stop
+    protection_lost: bool = False
+
+    def as_recovery_record(self) -> Dict[str, Any]:
+        """The journal/KPI view: rides the standard recovery-record path.
+        `at - step` is the work discarded by this transition (the engine's
+        rollback convention), so redone/availability fall out of the
+        existing `compute_kpis` reduction."""
+        return {"kind": "elastic_remesh", "phase": self.phase,
+                "step": self.restore_step if self.restore_step is not None
+                else self.trigger_step,
+                "at": self.trigger_step, "rollbacks": 0,
+                "hosts": list(self.hosts),
+                "old_data": self.old_data, "new_data": self.new_data,
+                "tier": self.restore_tier,
+                "downtime_s": self.downtime_s, "mode": self.mode}
+
+
+@dataclass
+class ElasticReport:
+    """Aggregate of every training segment plus the remesh transitions."""
+
+    steps_completed: int = 0
+    remeshes: List[RemeshRecord] = field(default_factory=list)
+    decisions: List[DegradedModeDecision] = field(default_factory=list)
+    segments: List[Any] = field(default_factory=list)   # TrainReports
+    stopped: bool = False
+    completed_degraded: bool = False
+    final_state_fp: Any = None
+    wall_s: float = 0.0
+
+    @property
+    def detections(self):
+        return [d for seg in self.segments for d in seg.detections]
+
+    @property
+    def recoveries(self):
+        return [r for seg in self.segments for r in seg.recoveries]
+
+    def node_loss_downtime_s(self) -> float:
+        return sum(r.downtime_s for r in self.remeshes)
+
+    def summary(self) -> str:
+        phases = [r.phase for r in self.remeshes]
+        return (f"steps={self.steps_completed} remeshes={phases} "
+                f"downtime={self.node_loss_downtime_s():.3f}s "
+                f"stopped={self.stopped} degraded={self.completed_degraded}")
+
+
+class ElasticTrainer:
+    """Drive a SEDAR trainer through node loss without a full restart.
+
+    Requires SEDAR level 3: the shrink anchor must be a VALIDATED
+    checkpoint (restoring an unvalidated one onto survivors would launder a
+    silent corruption into the post-remesh trajectory).
+
+    `clock` and `tick` exist for deterministic tests: `tick(step)` runs
+    before every scan (simulated hosts beat there) and `clock()` supplies
+    the scan's "now". Real deployments leave both defaulted and let each
+    host process call `Heartbeat.beat()` from its own loop.
+    """
+
+    def __init__(self, run_cfg, workdir: str, *,
+                 monitor: Optional[ClusterMonitor] = None,
+                 n_hosts: Optional[int] = None,
+                 hosts_per_data_shard: int = 1,
+                 replica_hosts: Sequence[int] = (),
+                 scan_interval: int = 2,
+                 mesh=None,
+                 params: Optional[tm.SedarParams] = None,
+                 mtbe_hours: float = 1000.0,
+                 outage_hours: float = 0.1,
+                 sdc_risk_budget: float = 1.0,
+                 clock: Callable[[], float] = time.time,
+                 tick: Optional[Callable[[int], None]] = None,
+                 **trainer_kw):
+        if run_cfg.sedar.level < 3:
+            raise ValueError(
+                "ElasticTrainer requires SEDAR level 3: the remesh anchor "
+                "must be a validated checkpoint (L3), or a silent fault "
+                "could ride the restore onto the survivors")
+        self.cfg = run_cfg
+        self.workdir = workdir
+        self.mesh = mesh
+        self.hosts_per_data_shard = max(int(hosts_per_data_shard), 1)
+        self.replica_hosts = set(int(h) for h in replica_hosts)
+        self.scan_interval = max(int(scan_interval), 1)
+        self.params = params or tm.SedarParams(
+            T_prog=1.0, T_comp=0.01, T_rest=0.1, f_d=0.02,
+            t_cs=0.01, t_ca=0.005, T_compA=0.01, t_i=0.25)
+        self.mtbe_hours = mtbe_hours
+        self.outage_hours = outage_hours
+        self.sdc_risk_budget = sdc_risk_budget
+        self.clock = clock
+        self.tick = tick
+        self.trainer_kw = dict(trainer_kw)
+        hb_dir = os.path.join(workdir, "heartbeats")
+        self.monitor = monitor or ClusterMonitor(
+            hb_dir, n_hosts if n_hosts is not None else 1)
+        with self._mesh_ctx(self.mesh):
+            self.trainer = make_trainer(
+                run_cfg, workdir, mesh=mesh,
+                hosts_per_data_shard=self.hosts_per_data_shard,
+                **self.trainer_kw)
+        self._degraded = None       # (trainer, mesh) during an outage
+        self._degraded_count = 0
+        self._lost: set = set()
+
+    @staticmethod
+    def _mesh_ctx(mesh):
+        return mesh if mesh is not None else contextlib.nullcontext()
+
+    # -- anchor restore ----------------------------------------------------
+
+    def _anchor(self):
+        """(version, recovery) of the last validated full-width checkpoint
+        in the ORIGINAL store — the authoritative trajectory's re-entry
+        point for both shrink and regrow."""
+        rec = self.trainer.recovery
+        tiers = getattr(rec, "tiers", None)
+        if tiers is not None:
+            tiers.wait()
+            return tiers.latest_valid(), rec
+        store = getattr(rec, "store", None)
+        if store is not None:
+            store.wait()
+            return store.latest(valid_only=True), rec
+        return None, rec
+
+    def _restore_onto(self, trainer, version, rec):
+        """Restore anchor `version` from the full run's recovery stores and
+        adopt it into `trainer`'s executor. Returns (dual, tier_name)."""
+        if version is None:
+            return None, None
+        template = trainer.init_state()
+        tiers = getattr(rec, "tiers", None)
+        if tiers is not None:
+            state, info = tiers.restore(version, template)
+            tier = info.get("tier")
+        else:
+            state = rec.store.restore(version, template)
+            tier = "disk"
+        state = jax.tree.map(jnp.asarray, state)
+        return trainer.engine.executor.adopt_single(state), tier
+
+    # -- transitions -------------------------------------------------------
+
+    def _decide(self, lost: set) -> DegradedModeDecision:
+        protection_lost = bool(self.replica_hosts & lost)
+        return choose_degraded_mode(
+            self.params, self.mtbe_hours, self.outage_hours,
+            protection_lost=protection_lost,
+            sdc_risk_budget=self.sdc_risk_budget)
+
+    def _shrink(self, lost: set, step: int, report: ElasticReport):
+        """Node loss: decide, then either park (safe_stop) or rebuild a
+        degraded trainer on the survivors from the Tier-3 anchor."""
+        t0 = time.monotonic()
+        decision = self._decide(lost)
+        report.decisions.append(decision)
+        old_data = self.cfg.mesh.shape[self._data_ax()] \
+            if "data" in self.cfg.mesh.axis_names else 1
+        if decision.mode == "safe_stop":
+            rr = RemeshRecord(
+                phase="safe_stop", trigger_step=step, restore_step=None,
+                restore_tier=None, hosts=sorted(lost), old_data=old_data,
+                new_data=old_data, old_batch=self.cfg.train.global_batch,
+                new_batch=self.cfg.train.global_batch,
+                downtime_s=time.monotonic() - t0, mode="safe_stop",
+                protection_lost=decision.protection_lost)
+            self._journal(rr, report)
+            report.stopped = True
+            return None, None
+        anchor, rec = self._anchor()
+        # the failed topology takes the volatile rings with it: restore can
+        # only be served by the durable tiers (disk / Tier-3 partner)
+        tiers = getattr(rec, "tiers", None)
+        if tiers is not None:
+            tiers.drop_volatile()
+        self._degraded_count += 1
+        side = os.path.join(self.workdir,
+                            f"degraded_{self._degraded_count}")
+        protection_lost = bool(self.replica_hosts & lost)
+        if protection_lost:
+            # the replica pod died: survivors run unprotected-but-
+            # checkpointed at full data width (the policy's degraded mode)
+            deg_cfg = dataclasses.replace(
+                self.cfg, sedar=dataclasses.replace(
+                    self.cfg.sedar, replication="none"))
+            deg_mesh = self._degraded_mesh(set(), drop_replica=True)
+            with self._mesh_ctx(deg_mesh):
+                trainer = make_trainer(deg_cfg, side, mesh=deg_mesh,
+                                       **self.trainer_kw)
+            new_data, new_batch = old_data, self.cfg.train.global_batch
+        else:
+            shards = sorted({h // self.hosts_per_data_shard for h in lost})
+            deg_mesh = self._degraded_mesh(shards)
+            with self._mesh_ctx(deg_mesh):
+                plan, trainer = elastic_restart(
+                    self.cfg, side, sorted(lost),
+                    hosts_per_data_shard=self.hosts_per_data_shard,
+                    mesh=deg_mesh, **self.trainer_kw)
+            new_data, new_batch = plan.new_data, plan.new_global_batch
+        with self._mesh_ctx(deg_mesh):
+            dual, tier = self._restore_onto(trainer, anchor, rec)
+        rr = RemeshRecord(
+            phase="shrink", trigger_step=step, restore_step=anchor,
+            restore_tier=tier, hosts=sorted(lost), old_data=old_data,
+            new_data=new_data, old_batch=self.cfg.train.global_batch,
+            new_batch=new_batch, downtime_s=time.monotonic() - t0,
+            mode="fail_in_place", protection_lost=protection_lost)
+        self._journal(rr, report)
+        self._degraded = (trainer, deg_mesh)
+        return trainer, dual
+
+    def _regrow(self, returned: set, step: int, report: ElasticReport):
+        """Every lost host is back: re-anchor the kept-alive full-width
+        trainer (compiled functions reused) and replay from the anchor."""
+        t0 = time.monotonic()
+        anchor, rec = self._anchor()
+        with self._mesh_ctx(self.mesh):
+            dual, tier = self._restore_onto(self.trainer, anchor, rec)
+        full_data = self.cfg.mesh.shape[self._data_ax()] \
+            if "data" in self.cfg.mesh.axis_names else 1
+        shrinks = [r for r in report.remeshes if r.phase == "shrink"]
+        rr = RemeshRecord(
+            phase="regrow", trigger_step=step, restore_step=anchor,
+            restore_tier=tier, hosts=sorted(returned),
+            old_data=shrinks[-1].new_data if shrinks else full_data,
+            new_data=full_data, old_batch=self.cfg.train.global_batch,
+            new_batch=self.cfg.train.global_batch,
+            downtime_s=time.monotonic() - t0, mode="fail_in_place")
+        self._journal(rr, report)
+        self._degraded = None
+        return self.trainer, dual
+
+    def _data_ax(self) -> int:
+        names = list(self.cfg.mesh.axis_names)
+        return names.index("data") if "data" in names else 0
+
+    def _degraded_mesh(self, lost_shards: set, drop_replica: bool = False):
+        if self.mesh is None:
+            return None
+        if drop_replica:
+            import numpy as np
+            devs = np.asarray(self.mesh.devices)
+            ax = list(self.mesh.axis_names).index(
+                self.cfg.sedar.replica_axis)
+            devs2 = np.take(devs, [0], axis=ax)
+            return rebuild_mesh(devs2.shape, self.mesh.axis_names,
+                                devices=devs2.reshape(-1))
+        shape, devices = surviving_devices(self.mesh, sorted(lost_shards))
+        return rebuild_mesh(shape, self.mesh.axis_names, devices=devices)
+
+    def _journal(self, rr: RemeshRecord, report: ElasticReport) -> None:
+        report.remeshes.append(rr)
+        obs.note_recovery(rr.as_recovery_record())
+        if obs.metrics_enabled():
+            obs.metrics.inc("sedar_elastic_remeshes_total", phase=rr.phase)
+            obs.metrics.set_gauge("sedar_node_loss_downtime_s",
+                                  sum(r.downtime_s for r in report.remeshes))
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, num_steps: int) -> ElasticReport:
+        report = ElasticReport()
+        t0 = time.time()
+        active, active_mesh = self.trainer, self.mesh
+        dual = None
+        step = 0
+        max_segments = 8 * (num_steps // self.scan_interval + 2)
+        for _ in range(max_segments):
+            if self.tick is not None:
+                self.tick(step)
+            stale = set(self.monitor.stale_hosts(self.clock()))
+            newly_lost = stale - self._lost
+            if self._degraded is None and newly_lost:
+                self._lost = set(stale)
+                got = self._shrink(self._lost, step, report)
+                if report.stopped:
+                    break
+                active, dual = got
+                active_mesh = self._degraded[1]
+                step = None   # re-read from the restored state
+            elif self._degraded is not None and not (self._lost & stale):
+                returned = set(self._lost)
+                # any OTHER stale host is re-detected by the next scan
+                self._lost = set()
+                active, dual = self._regrow(returned, step, report)
+                active_mesh = self.mesh
+                step = None
+            if step is not None and step >= num_steps:
+                break
+            seg_end = num_steps if step is None else \
+                min(step + self.scan_interval, num_steps)
+            with self._mesh_ctx(active_mesh):
+                if step is None:
+                    # bound the first post-transition segment by the scan
+                    # cadence from the restored (anchor) step
+                    restored = 0 if dual is None else \
+                        active._host_step(dual)
+                    seg_end = min(restored + self.scan_interval, num_steps)
+                dual, seg = active.run(seg_end, dual=dual)
+            report.segments.append(seg)
+            step = seg.steps_completed
+            if seg.stopped:
+                report.stopped = True
+                break
+        report.steps_completed = step if step is not None else 0
+        report.completed_degraded = self._degraded is not None
+        if report.segments:
+            report.final_state_fp = report.segments[-1].final_state_fp
+        report.wall_s = time.time() - t0
+        return report

@@ -78,7 +78,8 @@ class SedarTrainer:
                  mesh=None, rules=None,
                  inj_spec: Optional[InjectionSpec] = None,
                  toe_delay: Optional[Dict[str, Any]] = None,
-                 data=None, notify: Optional[Callable] = None):
+                 data=None, notify: Optional[Callable] = None,
+                 hosts_per_data_shard: int = 1):
         self.cfg = run_cfg
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
@@ -90,6 +91,7 @@ class SedarTrainer:
         self.inj_spec = inj_spec
         self.inj_flag = InjectionFlag(os.path.join(workdir, "injected.json"))
         self.toe_delay = toe_delay or {}
+        self.hosts_per_data_shard = max(int(hosts_per_data_shard), 1)
         self.data = data or make_pipeline(run_cfg.model,
                                           run_cfg.train.global_batch,
                                           run_cfg.train.seq_len,
@@ -110,6 +112,7 @@ class SedarTrainer:
             pod_broadcaster=getattr(self, "_pod_bcast", None),
             n_replicas=(self.mesh.shape[sedar.replica_axis]
                         if self.backend in ("pod", "vote") else 2),
+            lane_hosts=getattr(self, "_lane_hosts", None),
             recovery=self.recovery, watchdog=self.watchdog,
             inj_spec=inj_spec, inj_flag=self.inj_flag,
             init_fn=self.init_dual, notify=self.notify,
@@ -193,6 +196,29 @@ class SedarTrainer:
                                                   self.sedar.replica_axis)
                                 if spec is not None else None)
 
+            # per-shard fingerprint lanes (DESIGN.md §16): one lane per data
+            # shard so a divergence localizes to a device/host. Compare is a
+            # pmax/pmin reduction over the replica axis — never a gather,
+            # never a host readback on the hot path. The vote backend keeps
+            # the legacy whole-state gather (its majority vote consumes
+            # fp_all immediately).
+            lanes = (dict(self.mesh.shape).get("data", 1)
+                     if self.backend == "pod" else 0)
+            self._n_lanes = lanes
+            if lanes:
+                from repro.core.detection import make_lane_comparator
+                from repro.core.fingerprint import \
+                    pytree_fingerprint_lanes as fp_lanes_fn
+                self._lane_cmp = make_lane_comparator(
+                    self.mesh, self.sedar.replica_axis)
+                hpds = self.hosts_per_data_shard
+
+                def _lane_hosts(lane_ids):
+                    from repro.runtime.cluster import lanes_to_hosts
+                    return lanes_to_hosts(lane_ids, hosts_per_data_shard=hpds)
+
+                self._lane_hosts = _lane_hosts
+
             def pod_step(state, batch, armed):
                 def loss_fn(p):
                     return model.loss(p, batch)[0]
@@ -203,8 +229,14 @@ class SedarTrainer:
                         armed,
                         lambda g: self._pod_inject(g, state["step"]),
                         lambda g: g, grads)
-                fp = grad_fp(grads)
-                eq, fp_all = self._pod_cmp(fp)
+                if lanes:
+                    eq = self._lane_cmp(fp_lanes_fn(grads, lanes))   # (L,)
+                    ok = jnp.all(eq)
+                    fp_all = None
+                else:
+                    fp = grad_fp(grads)
+                    eq, fp_all = self._pod_cmp(fp)
+                    ok = eq
                 updates, new_opt = opt.update(grads, state["opt"],
                                               state["params"], state["step"])
                 new_params = apply_updates(state["params"], updates)
@@ -215,11 +247,19 @@ class SedarTrainer:
                         lambda p: p, new_params)
                 cand = {"params": new_params, "opt": new_opt,
                         "step": state["step"] + 1}
-                new_state = jax.tree.map(lambda a, b: jnp.where(eq, a, b),
+                new_state = jax.tree.map(lambda a, b: jnp.where(ok, a, b),
                                          cand, state)
                 return new_state, eq, fp_all, loss
 
             def pod_validate(state):
+                if lanes:
+                    fpl = fp_lanes_fn({"params": state["params"],
+                                       "opt": state["opt"]}, lanes)
+                    # gather kept for the event detail (fault path only —
+                    # pod_validate runs at validate/checkpoint boundaries,
+                    # not per step)
+                    _, fp_all = self._pod_cmp(fpl)
+                    return self._lane_cmp(fpl), fp_all
                 return self._pod_cmp(state_fp_fast(state))
 
             self._pod_step = jax.jit(pod_step)

@@ -1,10 +1,13 @@
 """Cluster monitor: heartbeats, staleness, stragglers, elastic planning."""
+import os
 import time
 
 import pytest
 
 from repro.runtime.cluster import (ClusterMonitor, Heartbeat,
-                                   plan_elastic_remesh)
+                                   data_axis_index, elastic_restart,
+                                   lanes_to_hosts, plan_elastic_remesh,
+                                   surviving_devices)
 
 
 def test_heartbeat_roundtrip(tmp_path):
@@ -89,6 +92,130 @@ def test_stale_hosts_honors_zero_now(tmp_path):
     # the future of the simulated clock, so nothing is stale
     assert mon.stale_hosts() == [0]
     assert mon.stale_hosts(now=0.0) == []
+
+
+def test_heartbeat_retries_transient_io_error(tmp_path, monkeypatch):
+    """A transient replace failure (NFS hiccup, recycled workdir) is retried
+    and succeeds without surfacing — the beat lands, io_errors stays 0."""
+    real_replace = os.replace
+    fails = {"n": 2}
+
+    def flaky(src, dst):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", flaky)
+    hb = Heartbeat(str(tmp_path), 0, retries=3, retry_wait_s=0.0)
+    assert hb.beat(step=7) is True
+    assert hb.io_errors == 0
+    seen = ClusterMonitor(str(tmp_path), 1).scan()
+    assert seen[0].step == 7
+
+
+def test_heartbeat_gives_up_without_raising(tmp_path, monkeypatch):
+    """Exhausted retries must NOT take the train loop down: beat() returns
+    False, counts the failure, and the host simply reads as stale."""
+    monkeypatch.setattr(os, "replace",
+                        lambda s, d: (_ for _ in ()).throw(OSError("disk")))
+    hb = Heartbeat(str(tmp_path), 0, retries=2, retry_wait_s=0.0)
+    assert hb.beat(step=1) is False
+    assert hb.io_errors == 1
+    assert ClusterMonitor(str(tmp_path), 1, timeout_s=60).stale_hosts() \
+        == [0]
+
+
+def test_scan_skips_corrupted_heartbeats(tmp_path):
+    """Garbage, truncated writes, and wrong-shape JSON in the heartbeat
+    directory must not break the scan: the corrupted host reads as missing
+    (hence stale) while healthy peers still report."""
+    d = str(tmp_path)
+    Heartbeat(d, 0).beat(step=9)
+    with open(os.path.join(d, "host_00001.json"), "w") as f:
+        f.write("not json at all \x00\xff")
+    with open(os.path.join(d, "host_00002.json"), "w") as f:
+        f.write('{"host": 2, "step": ')          # truncated mid-write
+    with open(os.path.join(d, "host_00003.json"), "w") as f:
+        f.write('[1, 2, 3]')                     # wrong JSON shape
+    mon = ClusterMonitor(d, n_hosts=4, timeout_s=60)
+    seen = mon.scan()
+    assert sorted(seen) == [0]
+    assert seen[0].step == 9
+    assert mon.stale_hosts() == [1, 2, 3]
+
+
+def test_scan_survives_listdir_failure(tmp_path, monkeypatch):
+    """A persistently failing listdir yields an empty scan, not an
+    exception into the monitor loop."""
+    d = str(tmp_path)
+    Heartbeat(d, 0).beat(step=1)
+    monkeypatch.setattr(
+        os, "listdir",
+        lambda p: (_ for _ in ()).throw(OSError("transient")))
+    monkeypatch.setattr(time, "sleep", lambda s: None)
+    assert ClusterMonitor(d, n_hosts=1).scan() == {}
+
+
+def test_data_axis_index_by_name():
+    from repro.configs import MeshConfig
+    assert data_axis_index(MeshConfig(shape=(2, 4, 1),
+                                      axis_names=("pod", "data",
+                                                  "model"))) == 1
+    assert data_axis_index(MeshConfig(shape=(4, 1),
+                                      axis_names=("data", "model"))) == 0
+    with pytest.raises(ValueError, match="no 'data' axis"):
+        data_axis_index(MeshConfig(shape=(2, 2),
+                                   axis_names=("pod", "model")))
+
+
+def test_lanes_to_hosts():
+    assert lanes_to_hosts([0]) == [0]
+    assert lanes_to_hosts([2]) == [2]
+    assert lanes_to_hosts([1], hosts_per_data_shard=2) == [2, 3]
+    assert lanes_to_hosts([0, 2], hosts_per_data_shard=2) == [0, 1, 4, 5]
+
+
+def test_surviving_devices_drops_lost_shard_plane():
+    """Dropping data shard 1 of a (2, 4, 1) mesh keeps the survivors in
+    their old order, so shard i of the shrunken mesh is survivor i."""
+    import types
+
+    import numpy as np
+    devs = np.arange(8).reshape(2, 4, 1)
+    mesh = types.SimpleNamespace(devices=devs,
+                                 axis_names=("pod", "data", "model"))
+    shape, flat = surviving_devices(mesh, [1])
+    assert shape == (2, 3, 1)
+    assert list(flat) == [0, 2, 3, 4, 6, 7]
+
+
+def test_elastic_restart_shrinks_data_axis_not_pod(tmp_path):
+    """Regression: on a replicated ("pod", "data", "model") mesh the old
+    code shrank `shape[0]` — the REPLICA axis — and left the mesh config
+    untouched, so a 'shrunken' restart silently kept the dead shard in the
+    layout. The rewrite must target the data axis by name and rewrite BOTH
+    the mesh shape and the global batch (per-shard batch preserved)."""
+    from repro.configs import (MeshConfig, RunConfig, SedarConfig,
+                               TrainConfig, get_config, reduce_for_smoke)
+    cfg = RunConfig(
+        model=reduce_for_smoke(get_config("paper-testapp")),
+        train=TrainConfig(global_batch=8, seq_len=16, steps=4,
+                          warmup_steps=1, lr=1e-3),
+        mesh=MeshConfig(shape=(2, 4, 1),
+                        axis_names=("pod", "data", "model")),
+        sedar=SedarConfig(level=3, replication="sequential",
+                          checkpoint_interval=2))
+    plan, trainer = elastic_restart(cfg, str(tmp_path), [1])
+    assert plan.old_data == 4
+    assert plan.new_data == 3
+    assert plan.new_global_batch == 6
+    assert trainer.cfg.mesh.shape == (2, 3, 1)
+    assert trainer.cfg.mesh.axis_names == ("pod", "data", "model")
+    assert trainer.cfg.train.global_batch == 6
+    # per-shard batch unchanged -> compiled program shapes unchanged
+    assert (trainer.cfg.train.global_batch // trainer.cfg.mesh.shape[1]
+            == cfg.train.global_batch // cfg.mesh.shape[1])
 
 
 def test_elastic_plan():

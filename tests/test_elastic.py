@@ -1,0 +1,227 @@
+"""Elastic fail-in-place recovery (DESIGN.md §16).
+
+The authoritative-trajectory contract: a run that loses a host mid-flight,
+shrinks onto the survivors, and regrows when the host returns must finish
+in a state BITWISE IDENTICAL to an uninterrupted run at the same seed —
+the degraded segment is best-effort and the regrown full-width replay from
+the validated anchor re-derives every step deterministically.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import (MeshConfig, RunConfig, SedarConfig, TrainConfig,
+                           get_config, reduce_for_smoke)
+from repro.core import temporal_model as tm
+from repro.core.policy import choose_degraded_mode
+from repro.obs.kpi import compute_kpis, reconcile_with_advice
+from repro.runtime.elastic import ElasticTrainer, RemeshRecord
+from repro.runtime.train import SedarTrainer
+
+CFG = reduce_for_smoke(get_config("paper-testapp"))
+TRAIN = TrainConfig(global_batch=4, seq_len=16, steps=12, warmup_steps=2,
+                    lr=1e-3)
+MESH = MeshConfig(shape=(2, 1), axis_names=("data", "model"))
+
+
+@pytest.fixture(autouse=True)
+def _obs_teardown():
+    yield
+    obs.shutdown()
+
+
+def run_cfg(**sedar_kw):
+    kw = dict(level=3, replication="sequential", validate_interval=1,
+              param_validate_interval=50, checkpoint_interval=2,
+              toe_timeout_s=60.0)
+    kw.update(sedar_kw)
+    return RunConfig(model=CFG, train=TRAIN, mesh=MESH,
+                     sedar=SedarConfig(**kw))
+
+
+class SimCluster:
+    """Deterministic heartbeat simulation: the clock advances 100 s per
+    scan tick and the designated host goes dark over [dark_from, dark_to)
+    of simulated time."""
+
+    def __init__(self, hb_dir, n_hosts=2, dark_host=1,
+                 dark_from=300.0, dark_to=700.0):
+        self.dir = hb_dir
+        self.n_hosts = n_hosts
+        self.dark_host = dark_host
+        self.dark_from = dark_from
+        self.dark_to = dark_to
+        self.now = 0.0
+
+    def clock(self):
+        return self.now
+
+    def tick(self, step):
+        self.now += 100.0
+        os.makedirs(self.dir, exist_ok=True)
+        for h in range(self.n_hosts):
+            if h == self.dark_host and \
+                    self.dark_from <= self.now < self.dark_to:
+                continue
+            with open(os.path.join(self.dir,
+                                   f"host_{h:05d}.json"), "w") as f:
+                json.dump({"host": h, "step": int(step or 0),
+                           "t": self.now}, f)
+
+
+def test_elastic_requires_level3(tmp_workdir):
+    with pytest.raises(ValueError, match="level 3"):
+        ElasticTrainer(run_cfg(level=2), tmp_workdir)
+
+
+def test_shrink_regrow_bitwise_identical(tmp_workdir):
+    """Host loss at ~step 4, return at ~step 8: the run must shrink onto
+    the survivor, regrow on return, and end bitwise identical to an
+    uninterrupted same-seed run — with the shrink anchored on a VALIDATED
+    checkpoint restored from the durable tier."""
+    ref = SedarTrainer(run_cfg(), os.path.join(tmp_workdir, "ref"))
+    _, ref_rep = ref.run(12)
+
+    wd = os.path.join(tmp_workdir, "elastic")
+    sim = SimCluster(os.path.join(wd, "heartbeats"))
+    et = ElasticTrainer(run_cfg(), wd, n_hosts=2, scan_interval=2,
+                        clock=sim.clock, tick=sim.tick)
+    rep = et.run(12)
+
+    assert rep.steps_completed == 12 and not rep.stopped
+    assert [r.phase for r in rep.remeshes] == ["shrink", "regrow"]
+    shrink, regrow = rep.remeshes
+    assert shrink.hosts == [1]
+    assert shrink.old_data == 2 and shrink.new_data == 1
+    assert shrink.old_batch == 4 and shrink.new_batch == 2
+    assert shrink.restore_step is not None        # anchored, not scratch
+    assert regrow.new_data == 2
+    assert regrow.old_data == 1                   # regrown FROM the shrink
+    assert not rep.completed_degraded
+    assert np.array_equal(np.asarray(rep.final_state_fp)[:, :2],
+                          np.asarray(ref_rep.final_state_fp)[:, :2])
+
+
+def test_elastic_journals_remesh_records(tmp_workdir):
+    """Shrink/regrow transitions ride the standard recovery-record path:
+    kind="elastic_remesh" lines land in the fault journal and the metrics
+    registry counts them per phase."""
+    j = obs.FaultJournal()
+    obs.set_journal(j)
+    obs.enable_metrics()
+    wd = os.path.join(tmp_workdir, "elastic")
+    sim = SimCluster(os.path.join(wd, "heartbeats"))
+    et = ElasticTrainer(run_cfg(), wd, n_hosts=2, scan_interval=2,
+                        clock=sim.clock, tick=sim.tick)
+    rep = et.run(12)
+    assert [r.phase for r in rep.remeshes] == ["shrink", "regrow"]
+    recs = [r["record"] for r in j.records("recovery")
+            if r["record"].get("kind") == "elastic_remesh"]
+    assert [r["phase"] for r in recs] == ["shrink", "regrow"]
+    assert recs[0]["hosts"] == [1]
+    assert obs.metrics.get("sedar_elastic_remeshes_total",
+                           phase="shrink") == 1
+    assert obs.metrics.get("sedar_elastic_remeshes_total",
+                           phase="regrow") == 1
+
+
+def test_replica_loss_runs_unprotected_but_checkpointed(tmp_workdir):
+    """When the lost host IS the replica pod, the survivors cannot compare
+    — the degraded trainer runs replication="none" at FULL data width, and
+    the regrown full-width replay re-validates the trajectory (bitwise
+    identical to uninterrupted)."""
+    ref = SedarTrainer(run_cfg(), os.path.join(tmp_workdir, "ref"))
+    _, ref_rep = ref.run(12)
+
+    wd = os.path.join(tmp_workdir, "elastic")
+    sim = SimCluster(os.path.join(wd, "heartbeats"))
+    et = ElasticTrainer(run_cfg(), wd, n_hosts=2, scan_interval=2,
+                        replica_hosts=[1], clock=sim.clock, tick=sim.tick)
+    rep = et.run(12)
+    assert [r.phase for r in rep.remeshes] == ["shrink", "regrow"]
+    shrink = rep.remeshes[0]
+    assert shrink.protection_lost
+    assert shrink.new_data == shrink.old_data      # width kept, shield lost
+    assert np.array_equal(np.asarray(rep.final_state_fp)[:, :2],
+                          np.asarray(ref_rep.final_state_fp)[:, :2])
+
+
+def test_replica_loss_safe_stops_over_sdc_budget(tmp_workdir):
+    """Tiny MTBE + lost replica pod: the expected faults during the outage
+    blow the SDC risk budget, so the only safe answer is to park the job
+    on its last validated checkpoint."""
+    wd = os.path.join(tmp_workdir, "elastic")
+    sim = SimCluster(os.path.join(wd, "heartbeats"))
+    et = ElasticTrainer(run_cfg(), wd, n_hosts=2, scan_interval=2,
+                        replica_hosts=[1], mtbe_hours=0.001,
+                        outage_hours=0.5, sdc_risk_budget=1.0,
+                        clock=sim.clock, tick=sim.tick)
+    rep = et.run(12)
+    assert rep.stopped
+    assert [r.phase for r in rep.remeshes] == ["safe_stop"]
+    assert rep.decisions[0].mode == "safe_stop"
+    assert rep.decisions[0].expected_faults_during_outage > 1.0
+
+
+def test_choose_degraded_mode_directions():
+    p = tm.SedarParams(T_prog=1.0, T_comp=0.01, T_rest=0.1, f_d=0.02,
+                       t_cs=0.01, t_ca=0.005, T_compA=0.01, t_i=0.25)
+    # cheap remesh, protection kept: ride it out
+    d = choose_degraded_mode(p, mtbe_hours=1000.0, outage_hours=0.1)
+    assert d.mode == "fail_in_place"
+    assert d.fail_in_place_hours <= d.restart_hours
+    # protection lost but faults stay under budget: still fail-in-place
+    d = choose_degraded_mode(p, mtbe_hours=1000.0, outage_hours=0.1,
+                             protection_lost=True)
+    assert d.mode == "fail_in_place" and d.protection_lost
+    # protection lost and the outage expects > budget faults: stop
+    d = choose_degraded_mode(p, mtbe_hours=0.01, outage_hours=0.5,
+                             protection_lost=True, sdc_risk_budget=1.0)
+    assert d.mode == "safe_stop"
+    # expensive checkpoints + cheap relaunch: 2×remesh loses to T_rest
+    pricey = tm.SedarParams(T_prog=1.0, T_comp=0.01, T_rest=0.001,
+                            f_d=0.02, t_cs=0.5, t_ca=0.25, T_compA=0.01,
+                            t_i=0.25)
+    d = choose_degraded_mode(pricey, mtbe_hours=1000.0, outage_hours=0.1)
+    assert d.mode == "safe_stop"
+
+
+def test_remesh_record_feeds_kpis():
+    """The journal view of two transitions: downtime windows fold into
+    availability as an uptime factor, the anchor replay feeds redone."""
+    shrink = RemeshRecord(
+        phase="shrink", trigger_step=6, restore_step=4, restore_tier="disk",
+        hosts=[1], old_data=2, new_data=1, old_batch=4, new_batch=2,
+        downtime_s=2.0, mode="fail_in_place")
+    regrow = RemeshRecord(
+        phase="regrow", trigger_step=10, restore_step=4,
+        restore_tier="disk", hosts=[1], old_data=1, new_data=2,
+        old_batch=4, new_batch=4, downtime_s=1.0, mode="fail_in_place")
+    recs = [{"kind": "recovery", "seq": i, "t_mono": float(i),
+             "record": r.as_recovery_record()}
+            for i, r in enumerate((shrink, regrow))]
+    k = compute_kpis(recs, steps=20, wall_s=100.0)
+    assert k["elastic_remeshes"] == 2
+    assert k["node_loss_downtime_s"] == pytest.approx(3.0)
+    # redone = (6-4) + (10-4) = 8 -> 0.6; uptime = 1 - 3/100 = 0.97
+    assert k["redone_steps"] == 8
+    assert k["availability"] == pytest.approx(0.6 * 0.97)
+
+    rows = reconcile_with_advice(k, predicted_downtime_s=1.0)
+    row = next(r for r in rows if r["metric"] == "node_loss_downtime_s")
+    assert row["observed"] == pytest.approx(3.0)
+    assert row["ok"]       # 3.0 <= 4*1.0 + 5.0
+    rows = reconcile_with_advice(k, predicted_downtime_s=0.0001)
+    row = next(r for r in rows if r["metric"] == "node_loss_downtime_s")
+    assert row["ok"]       # the flat slack absorbs test-scale transitions
+
+
+def test_kpis_without_remeshes_unchanged():
+    """No elastic records -> no downtime keys, availability untouched."""
+    k = compute_kpis([], steps=10, wall_s=50.0)
+    assert "elastic_remeshes" not in k
+    assert "node_loss_downtime_s" not in k
+    assert k["availability"] == 1.0

@@ -74,9 +74,117 @@ with mesh:
 assert len(rep.detections) == 1 and rep.detections[0].step == 5, rep.detections
 assert rep.recoveries[0]["kind"] == "restore"
 assert rep.steps_completed == 8
+# per-shard lane localization (DESIGN.md 16): the event names the lane the
+# corrupted element hashes into, and the host owning that data shard
+from repro.core.fingerprint import lane_of_leaf_index
+grads_tree = jax.tree.map(np.asarray, tr.init_state()["params"])
+lane = lane_of_leaf_index(grads_tree, 3, 5, 2)
+assert rep.detections[0].detail.get("lanes") == [lane], rep.detections[0].detail
+assert rep.detections[0].detail.get("hosts") == [lane], rep.detections[0].detail
 print("pod backend OK", rep.summary())
 """, devices=8, timeout=600)
     assert "pod backend OK" in out
+
+
+def test_pod_backend_zero_sync_fault_free():
+    """DESIGN.md 11 extended to spatial replication: the cross-replica
+    compare happens via collectives INSIDE the jitted step, so a fault-free
+    deferred-window run never reads the commit predicate back per step."""
+    out = _run("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import (RunConfig, SedarConfig, TrainConfig, get_config,
+                           reduce_for_smoke)
+from repro.core import hostsync
+from repro.launch.mesh import make_test_mesh
+from repro.runtime.train import SedarTrainer
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = reduce_for_smoke(get_config("paper-testapp"))
+rc = RunConfig(model=cfg,
+               train=TrainConfig(global_batch=4, seq_len=16, steps=16,
+                                 warmup_steps=2, lr=1e-3),
+               sedar=SedarConfig(level=3, replication="pod",
+                                 validate_interval=1, validate_lag=4,
+                                 param_validate_interval=100,
+                                 checkpoint_interval=8,
+                                 ckpt_tiers="device,partner"))
+import shutil; shutil.rmtree("/tmp/sedar_pod_zs", ignore_errors=True)
+with mesh:
+    tr = SedarTrainer(rc, "/tmp/sedar_pod_zs", mesh=mesh)
+    with hostsync.count_transfers() as st:
+        dual, rep = tr.run(16)
+assert not rep.detections
+assert rep.steps_completed == 16
+assert "commit_compare" not in st.by_label, st.by_label
+assert st.by_label.get("deferred_flush", 0) <= 16 // 4 + 2, st.by_label
+print("zero-sync pod OK", rep.summary())
+""", devices=8, timeout=600)
+    assert "zero-sync pod OK" in out
+
+
+def test_pod_elastic_fail_in_place_acceptance():
+    """The issue's acceptance scenario: 8-device replicated mesh, host loss
+    mid-run -> automatic shrink with the anchor restored from the Tier-3
+    partner store onto the survivors, regrow when the host returns, final
+    state bitwise identical to an uninterrupted run — and zero fault-free
+    commit-predicate readbacks throughout."""
+    out = _run("""
+import json, os, shutil
+import jax, numpy as np
+from repro.configs import (MeshConfig, RunConfig, SedarConfig, TrainConfig,
+                           get_config, reduce_for_smoke)
+from repro.core import hostsync
+from repro.launch.mesh import make_test_mesh
+from repro.runtime.elastic import ElasticTrainer
+from repro.runtime.train import SedarTrainer
+
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = reduce_for_smoke(get_config("paper-testapp"))
+rc = RunConfig(model=cfg,
+               train=TrainConfig(global_batch=4, seq_len=16, steps=12,
+                                 warmup_steps=2, lr=1e-3),
+               mesh=MeshConfig(shape=(2, 2, 2),
+                               axis_names=("pod", "data", "model")),
+               sedar=SedarConfig(level=3, replication="pod",
+                                 validate_interval=1, validate_lag=4,
+                                 param_validate_interval=100,
+                                 checkpoint_interval=4,
+                                 ckpt_tiers="device,partner"))
+base = "/tmp/sedar_pod_elastic"
+shutil.rmtree(base, ignore_errors=True)
+
+with mesh:
+    ref = SedarTrainer(rc, base + "/ref", mesh=mesh)
+    _, ref_rep = ref.run(12)
+assert not ref_rep.detections
+
+wd = base + "/run"
+hb = os.path.join(wd, "heartbeats")
+sim = {"now": 0.0}
+
+def tick(step):
+    sim["now"] += 100.0
+    os.makedirs(hb, exist_ok=True)
+    for h in range(2):
+        if h == 1 and 250.0 <= sim["now"] < 550.0:   # host 1 dark mid-run
+            continue
+        with open(os.path.join(hb, f"host_{h:05d}.json"), "w") as f:
+            json.dump({"host": h, "step": int(step or 0), "t": sim["now"]}, f)
+
+et = ElasticTrainer(rc, wd, mesh=mesh, n_hosts=2, scan_interval=2,
+                    clock=lambda: sim["now"], tick=tick)
+with hostsync.count_transfers() as st:
+    rep = et.run(12)
+phases = [r.phase for r in rep.remeshes]
+assert phases == ["shrink", "regrow"], phases
+assert rep.remeshes[0].restore_tier == "partner", rep.remeshes[0]
+assert rep.remeshes[0].new_data == 1 and rep.remeshes[0].new_batch == 2
+assert rep.steps_completed == 12 and not rep.stopped
+assert np.array_equal(np.asarray(rep.final_state_fp)[:, :2],
+                      np.asarray(ref_rep.final_state_fp)[:, :2])
+assert "commit_compare" not in st.by_label, st.by_label
+print("pod elastic OK", rep.summary())
+""", devices=8, timeout=600)
+    assert "pod elastic OK" in out
 
 
 def test_dryrun_cell_small_arch():

@@ -260,3 +260,59 @@ def test_advisor_reports_serving_guidance():
     assert 0.0 < a.serve_goodput_whole_batch < a.serve_goodput <= 1.0
     assert 0.0 < a.serve_availability <= 1.0
     assert "serving (8 slots)" in a.notes
+
+
+# ---------------------------------------------------------------------------
+# DESIGN.md §16: fail-in-place vs node-restart cost terms
+# ---------------------------------------------------------------------------
+
+def _fip_params(**kw):
+    d = dict(T_prog=1.0, T_comp=0.01, T_rest=0.1, f_d=0.02,
+             t_cs=0.01, t_ca=0.005, T_compA=0.01, t_i=0.25)
+    d.update(kw)
+    return tm.SedarParams(**d)
+
+
+def test_remesh_overhead_is_data_movement_not_relaunch():
+    """A remesh keeps the process, pipeline, and executables alive: its
+    overhead is the partner copy's data movement plus a fraction of a
+    relaunch — strictly under a full T_rest for any sane tier costs."""
+    p = _fip_params()
+    over = tm.remesh_overhead(p)
+    assert 0.0 < over < p.T_rest
+    # and it scales with the checkpoint-write cost, not the relaunch cost
+    assert tm.remesh_overhead(_fip_params(t_cs=0.05)) > over
+
+
+def test_fail_in_place_wins_iff_two_remeshes_undercut_relaunch():
+    """Both sides pay the outage + t_i/2 (the degraded span is replayed),
+    so the decision reduces to 2x remesh vs T_rest — and is therefore
+    outage-invariant."""
+    p = _fip_params()
+    assert 2.0 * tm.remesh_overhead(p) < p.T_rest
+    for outage in (0.01, 0.5, 2.0):
+        assert tm.fail_in_place_beats_restart(p, outage)
+    # expensive checkpoint writes + cheap relaunch flip the direction
+    pricey = _fip_params(t_cs=0.5, t_ca=0.25, T_rest=0.001)
+    assert 2.0 * tm.remesh_overhead(pricey) > pricey.T_rest
+    for outage in (0.01, 0.5, 2.0):
+        assert not tm.fail_in_place_beats_restart(pricey, outage)
+
+
+def test_keep_degraded_drops_the_replay_term():
+    """A workload that accepts the reduced-width trajectory as-is pays
+    only the two transitions — fail-in-place then wins regardless of the
+    outage length."""
+    p = _fip_params()
+    outage = 3.0
+    full = tm.fail_in_place_cost(p, outage)
+    kept = tm.fail_in_place_cost(p, outage, keep_degraded=True)
+    assert kept == pytest.approx(2.0 * tm.remesh_overhead(p))
+    assert full == pytest.approx(kept + 0.5 * p.t_i + outage)
+    assert tm.fail_in_place_beats_restart(p, outage, keep_degraded=True)
+
+
+def test_node_restart_cost_terms():
+    p = _fip_params()
+    assert tm.node_restart_cost(p, 0.5) == \
+        pytest.approx(0.5 + p.T_rest + 0.5 * p.t_i)

@@ -1,0 +1,123 @@
+"""CI bench-regression gate over BENCH_summary.json artifacts.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline prev/BENCH_summary.json --current BENCH_summary.json
+
+Compares every numeric metric the two summaries share, direction-aware:
+cost-like metrics (``*_us``, ``*_wall*``, ``*_s``, errors, redone work)
+regress when they RISE more than the threshold; rate-like metrics
+(throughput, goodput, coverage, availability) regress when they FALL.
+Acceptance booleans that flip ``true -> false`` always fail. Metrics whose
+direction cannot be inferred are reported but never gate.
+
+Exit codes: 0 = clean (or no baseline — first run of a new artifact chain
+skips instead of failing), 1 = at least one regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+DEFAULT_THRESHOLD = 0.20
+
+# suffix/substring heuristics, checked in order; first match wins
+_HIGHER_BETTER = ("per_s", "per_step", "tok_s", "goodput", "coverage",
+                  "availability", "speedup", "hit_rate", "steps_per")
+_LOWER_BETTER = ("_us", "_ms", "wall", "_s", "_h", "cost", "err",
+                 "redone", "transition", "overhead", "downtime", "mttr",
+                 "mttd", "bytes", "compiles", "syncs")
+
+
+def direction(metric: str) -> Optional[int]:
+    """+1 = higher is better, -1 = lower is better, None = don't gate."""
+    low = metric.lower()
+    for pat in _HIGHER_BETTER:
+        if pat in low:
+            return +1
+    for pat in _LOWER_BETTER:
+        if pat in low:
+            return -1
+    return None
+
+
+def compare(baseline: dict, current: dict,
+            threshold: float = DEFAULT_THRESHOLD) -> List[Dict]:
+    """Regression rows between two summary payloads."""
+    regressions: List[Dict] = []
+    base_suites = baseline.get("suites", {})
+    cur_suites = current.get("suites", {})
+    for suite, base in base_suites.items():
+        cur = cur_suites.get(suite)
+        if cur is None:
+            regressions.append({"suite": suite, "metric": "<suite>",
+                                "kind": "missing",
+                                "detail": "suite absent from current run"})
+            continue
+        for name, flag in (base.get("acceptance") or {}).items():
+            now = (cur.get("acceptance") or {}).get(name)
+            if flag is True and now is False:
+                regressions.append({"suite": suite, "metric": name,
+                                    "kind": "acceptance",
+                                    "detail": "flipped true -> false"})
+        for name, bval in (base.get("metrics") or {}).items():
+            cval = (cur.get("metrics") or {}).get(name)
+            if cval is None or not isinstance(bval, (int, float)):
+                continue
+            sign = direction(name)
+            if sign is None or abs(bval) < 1e-12:
+                continue
+            delta = (cval - bval) / abs(bval)
+            worse = -sign * delta        # positive = moved the wrong way
+            if worse > threshold:
+                regressions.append({
+                    "suite": suite, "metric": name, "kind": "metric",
+                    "baseline": bval, "current": cval,
+                    "detail": f"{'rose' if delta > 0 else 'fell'} "
+                              f"{abs(delta):.1%} (threshold "
+                              f"{threshold:.0%})"})
+    return regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_summary.baseline.json",
+                    help="previous run's BENCH_summary.json (CI downloads "
+                         "it from the last green artifact)")
+    ap.add_argument("--current", default="BENCH_summary.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative worsening that fails the gate")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench-compare: no baseline at {args.baseline} — "
+              f"skipping (first run of the artifact chain)")
+        sys.exit(0)
+    if not os.path.exists(args.current):
+        print(f"bench-compare: current summary {args.current} missing")
+        sys.exit(1)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    regressions = compare(baseline, current, args.threshold)
+    n_metrics = sum(len(s.get("metrics") or {})
+                    for s in baseline.get("suites", {}).values())
+    if not regressions:
+        print(f"bench-compare: OK — {n_metrics} metrics within "
+              f"{args.threshold:.0%} of baseline")
+        sys.exit(0)
+    print(f"bench-compare: {len(regressions)} regression(s):")
+    for r in regressions:
+        extra = (f" ({r['baseline']} -> {r['current']})"
+                 if "baseline" in r else "")
+        print(f"  [{r['kind']}] {r['suite']}.{r['metric']}: "
+              f"{r['detail']}{extra}")
+    sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,9 +28,18 @@ Prints ``name,us_per_call,derived`` CSV rows:
     elastic_*  — fail-in-place vs checkpoint-restart wall, collective vs
                  host-readback detection cost, model outage sweep
                  (DESIGN.md §16); --json writes BENCH_elastic.json
+    autotune_* — closed-loop lag adaptation under a shifting fault
+                 environment vs every fixed-lag baseline (DESIGN.md §17);
+                 --json writes BENCH_autotune.json
     roofline_* — dry-run roofline aggregation (deliverable g)
+
+--json additionally consolidates every per-suite artifact into
+BENCH_summary.json (suite -> numeric metrics + acceptance booleans), the
+file `benchmarks.compare` gates CI regressions against.
 """
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -47,6 +56,7 @@ MODULES = [
     "benchmarks.bench_prefill",
     "benchmarks.bench_observability",
     "benchmarks.bench_elastic",
+    "benchmarks.bench_autotune",
     "benchmarks.bench_overhead",
     "benchmarks.roofline",
 ]
@@ -65,7 +75,44 @@ SMOKE_MODULES = [
     "benchmarks.bench_prefill",
     "benchmarks.bench_observability",
     "benchmarks.bench_elastic",
+    "benchmarks.bench_autotune",
 ]
+
+# --json artifacts, one per suite; consolidated into BENCH_summary.json
+JSON_ARTIFACTS = {
+    "protected_step": "BENCH_protected_step.json",
+    "checkpoint": "BENCH_checkpoint.json",
+    "serve": "BENCH_serve.json",
+    "prefill": "BENCH_prefill.json",
+    "observability": "BENCH_observability.json",
+    "elastic": "BENCH_elastic.json",
+    "autotune": "BENCH_autotune.json",
+}
+
+
+def write_summary(path: str = "BENCH_summary.json") -> dict:
+    """Consolidate the per-suite artifacts: top-level numeric scalars
+    become the suite's comparable metrics, top-level booleans its
+    acceptance flags (`benchmarks.compare` keys on both)."""
+    suites = {}
+    for name, artifact in JSON_ARTIFACTS.items():
+        if not os.path.exists(artifact):
+            continue
+        with open(artifact) as f:
+            payload = json.load(f)
+        suites[name] = {
+            "artifact": artifact,
+            "metrics": {k: v for k, v in payload.items()
+                        if isinstance(v, (int, float))
+                        and not isinstance(v, bool)},
+            "acceptance": {k: v for k, v in payload.items()
+                           if isinstance(v, bool)},
+        }
+    summary = {"suites": suites}
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {path} ({len(suites)} suites)", flush=True)
+    return summary
 
 
 def main() -> None:
@@ -78,18 +125,20 @@ def main() -> None:
                          "output (consumed by the CI perf-artifact upload)")
     args = ap.parse_args()
     if args.json:
+        import benchmarks.bench_autotune as bat
         import benchmarks.bench_checkpoint as bck
         import benchmarks.bench_elastic as bel
         import benchmarks.bench_observability as bob
         import benchmarks.bench_prefill as bpf
         import benchmarks.bench_protected_step as bps
         import benchmarks.bench_serve as bsv
-        bps.JSON_PATH = "BENCH_protected_step.json"
-        bck.JSON_PATH = "BENCH_checkpoint.json"
-        bsv.JSON_PATH = "BENCH_serve.json"
-        bpf.JSON_PATH = "BENCH_prefill.json"
-        bob.JSON_PATH = "BENCH_observability.json"
-        bel.JSON_PATH = "BENCH_elastic.json"
+        bps.JSON_PATH = JSON_ARTIFACTS["protected_step"]
+        bck.JSON_PATH = JSON_ARTIFACTS["checkpoint"]
+        bsv.JSON_PATH = JSON_ARTIFACTS["serve"]
+        bpf.JSON_PATH = JSON_ARTIFACTS["prefill"]
+        bob.JSON_PATH = JSON_ARTIFACTS["observability"]
+        bel.JSON_PATH = JSON_ARTIFACTS["elastic"]
+        bat.JSON_PATH = JSON_ARTIFACTS["autotune"]
     failures = 0
     modules = SMOKE_MODULES if args.smoke else MODULES
     for modname in modules:
@@ -102,6 +151,8 @@ def main() -> None:
             failures += 1
             print(f"{modname},0.0,FAILED", flush=True)
             traceback.print_exc()
+    if args.json:
+        write_summary()
     sys.exit(1 if failures else 0)
 
 

@@ -47,6 +47,7 @@ a clean flush, so every stored version predates the oldest unvalidated step.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -880,6 +881,13 @@ class SedarEngine:
         self.validate_lag = lag
         self._ring: List[Tuple[int, Any]] = []   # device-resident predicates
         self.validated_frontier = 0              # first step NOT yet validated
+        # -- live reconfiguration (DESIGN.md §17) ---------------------------
+        # autotuner transitions are per-run: reset() restores the configured
+        # baseline so a cached engine (serve's _batch_engines) never leaks a
+        # tuned knob into the next run
+        self.reconfigs: List[Dict[str, Any]] = []
+        self._base_schedule = self.schedule
+        self._base_lag = self.validate_lag
 
     @property
     def pending_validation(self) -> bool:
@@ -894,6 +902,66 @@ class SedarEngine:
         self.checkpoints.clear()
         self._ring.clear()
         self.validated_frontier = 0
+        self.reconfigs.clear()
+        self.schedule = self._base_schedule
+        self.validate_lag = self._base_lag
+
+    def apply_reconfig(self, *, validate_lag: Optional[int] = None,
+                       checkpoint_interval: Optional[int] = None,
+                       tier_schedule=None,
+                       reason: str = "") -> Optional[Dict[str, Any]]:
+        """Apply an autotuner knob change at a clean boundary.
+
+        Safety argument (DESIGN.md §17): a lag change only takes effect
+        when the deferred ring is EMPTY — every optimistic commit so far
+        has been validated, so shrinking or growing the window cannot
+        strand an unvalidated predicate or change which steps a pending
+        fault rolls back. Mid-window calls return None (caller retries at
+        the next flush); the same `__init__` clamps apply, so an executor
+        without deferred support or an L0-retry recovery keeps lag 1 no
+        matter what the tuner asks for. No-op changes return None without
+        journaling; an applied transition is appended to `reconfigs` and
+        journaled as a `reconfig` line (byte-for-byte via reconcile()).
+        """
+        if self._ring:
+            return None
+        changes: Dict[str, Any] = {}
+        if validate_lag is not None:
+            lag = max(int(validate_lag), 1)
+            if lag > 1 and not getattr(self.executor, "supports_deferred",
+                                       False):
+                lag = 1
+            if lag > 1 and isinstance(self.recovery, RetryRecovery):
+                lag = 1
+            if lag != self.validate_lag:
+                changes["validate_lag"] = {"from": self.validate_lag,
+                                           "to": lag}
+                self.validate_lag = lag
+                self.schedule = dataclasses.replace(self.schedule,
+                                                    validate_lag=lag)
+        if checkpoint_interval is not None:
+            ci = max(int(checkpoint_interval), 0)
+            if ci != self.schedule.checkpoint_interval:
+                changes["checkpoint_interval"] = {
+                    "from": self.schedule.checkpoint_interval, "to": ci}
+                self.schedule = dataclasses.replace(
+                    self.schedule, checkpoint_interval=ci)
+                if hasattr(self.recovery, "interval"):
+                    self.recovery.interval = ci
+        if tier_schedule is not None:
+            tiers = getattr(self.recovery, "tiers", None)
+            if tiers is not None and tiers.schedule != tier_schedule:
+                changes["tier_schedule"] = {
+                    "from": dataclasses.asdict(tiers.schedule),
+                    "to": dataclasses.asdict(tier_schedule)}
+                tiers.schedule = tier_schedule
+        if not changes:
+            return None
+        rec = {"kind": "reconfig", "step": int(self.validated_frontier),
+               "reason": str(reason), "changes": changes}
+        self.reconfigs.append(rec)
+        obs.note_reconfig(rec)
+        return rec
 
     def init_dual(self):
         if self.init_fn is None:

@@ -1,6 +1,6 @@
-"""Protection policy: strategy advisor + the engine factory.
+"""Protection policy: strategy advisor, engine factory, and the autotuner.
 
-Two halves:
+Three parts:
   * `advise()` (paper Secs. 3.4 + 4.4): given measured execution parameters
     (f_d, t_cs, t_ca, ...) and the system MTBE, pick the SEDAR level +
     checkpoint interval that minimizes the Average Execution Time (Eq. 11).
@@ -9,6 +9,12 @@ Two halves:
     into a `SedarEngine` (executor × schedule × recovery × watchdog ×
     injection). Every launcher and runtime constructs engines here, so the
     detection/recovery protocol is configured in exactly one place.
+  * `Autotuner` / `autotune()` (DESIGN.md §17): the closed loop — the
+    obs estimator calibrates the temporal model online, drift detectors
+    and SLO burn windows raise alerts, and safe knob changes (validate_lag,
+    tier cadences) are applied via `SedarEngine.apply_reconfig()` at clean
+    deferred-flush boundaries with hysteresis; backend changes are
+    advisory alerts only (they would require a re-trace mid-run).
 """
 from __future__ import annotations
 
@@ -364,3 +370,216 @@ def make_server(run_cfg, *, dual: bool = False, inj_spec: Any = None, **kw):
     `make_engine`)."""
     from repro.runtime.serve import SedarServer
     return SedarServer(run_cfg, dual=dual, inj_spec=inj_spec, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop autotuning (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AutotuneConfig:
+    """Knobs of the control loop itself (the meta-knobs)."""
+
+    interval_steps: int = 16        # evaluate every N protected steps
+    persistence: int = 2            # consecutive evals agreeing on a target
+                                    # before it is applied (anti-flap)
+    mode: str = "train"             # "train" | "serve" (which optimum)
+    serve_slots: int = 8
+    X_expected: float = 0.5
+    min_confidence: float = 0.25    # below this the estimator stays advisory
+    prior_mtbe_hours: float = 24.0
+    backend: str = "sequential"     # current detection backend (for advice)
+    slo_availability: Optional[float] = None   # e.g. 0.999
+    slo_goodput: Optional[float] = None
+
+
+def autotune(engine, snapshot, *, mode: str = "train", serve_slots: int = 8,
+             X: float = 0.5, lag: Optional[int] = None,
+             reason: Optional[str] = None) -> Optional[Dict[str, Any]]:
+    """One-shot re-plan: recompute the optimal knobs from a calibrated
+    snapshot (`obs.OnlineEstimator.calibrated_params()`) and apply them via
+    `engine.apply_reconfig()`. Returns the reconfig record, or None when
+    nothing changed / the engine is mid-window (caller retries at the next
+    flush boundary)."""
+    p, mtbe = snapshot.params, snapshot.mtbe_hours
+    if lag is None:
+        lag = (tm.optimal_serve_lag(p, mtbe, serve_slots)
+               if mode == "serve"
+               else tm.optimal_validate_lag(p, mtbe, X=X))
+    tier_schedule = None
+    tiers = getattr(engine.recovery, "tiers", None)
+    if tiers is not None:
+        sched = tm.optimal_tier_schedule(p, snapshot.tier_costs, mtbe,
+                                         lag_steps=max(lag, 1))
+        if sched:
+            from repro.checkpoint.tiers import TierSchedule
+            cur = tiers.schedule
+            # only retune cadences of tiers the run enabled — the tuner
+            # must not conjure a partner store the launcher never set up
+            tier_schedule = TierSchedule(**{
+                t: (int(sched.get(t, 0)) if cur.interval(t) > 0 else 0)
+                for t in ("device", "host", "disk", "partner")})
+    if reason is None:
+        reason = (f"autotune[{mode}]: mtbe={mtbe:.4g}h "
+                  f"t_step={p.t_step:.4g}h t_sync={p.t_sync:.4g}h "
+                  f"confidence={snapshot.confidence:.2f}")
+    return engine.apply_reconfig(validate_lag=lag,
+                                 tier_schedule=tier_schedule, reason=reason)
+
+
+class Autotuner:
+    """Periodic estimate → detect → re-advise → reconfigure loop.
+
+    Call `maybe_tune(engine, step)` after every protected step; it is a
+    no-op except every `interval_steps`, and even then it only reads
+    host-side aggregates (registry histograms, journal records) — never a
+    device buffer — so the §11/§15 zero-extra-hostsync contract is
+    untouched (asserted in tests via `count_transfers`).
+
+    Safety: knob changes go through `engine.apply_reconfig()` (clean
+    deferred-flush boundaries only, engine clamps re-applied) and are
+    double-gated here by an estimator-confidence floor and a persistence
+    count — the tuner must see the SAME target on `persistence`
+    consecutive evaluations before acting, so estimation noise cannot
+    flap the window. One exception: when the fault-rate change-point
+    detector fires, the environment shift is CONFIRMED (not noise — the
+    exact case persistence exists to filter), so the next retarget skips
+    the persistence wait and lands at the first clean boundary. Backend
+    advice (duplication vs ABFT) is surfaced as an advisory alert only:
+    swapping executors mid-run would re-trace.
+    """
+
+    def __init__(self, base_params: tm.SedarParams,
+                 cfg: Optional[AutotuneConfig] = None):
+        from repro.obs.alerts import AlertManager, SloTracker
+        from repro.obs.anomaly import AnomalyMonitor
+        from repro.obs.estimator import OnlineEstimator
+        self.cfg = cfg or AutotuneConfig()
+        self.estimator = OnlineEstimator(
+            base_params, prior_mtbe_hours=self.cfg.prior_mtbe_hours)
+        self.monitor = AnomalyMonitor()
+        self.alerts = AlertManager()
+        self.slos = []
+        if self.cfg.slo_availability:
+            self.slos.append(SloTracker("availability",
+                                        self.cfg.slo_availability))
+        if self.cfg.slo_goodput:
+            self.slos.append(SloTracker("goodput", self.cfg.slo_goodput))
+        self.evaluations = 0
+        self._pending_target: Optional[int] = None
+        self._pending_count = 0
+        self._last_det_count = 0
+        self._burst = False     # fault-rate change-point fired: the next
+                                # retarget skips the persistence wait
+
+    # -- the periodic tick ---------------------------------------------------
+
+    def maybe_tune(self, engine, step: int) -> Optional[Dict[str, Any]]:
+        cfg = self.cfg
+        if step <= 0 or step % cfg.interval_steps != 0:
+            return None
+        from repro import obs
+        self.evaluations += 1
+        self.estimator.ingest(
+            obs.metrics if obs.metrics_enabled() else None,
+            obs.get_journal())
+        snap = self.estimator.calibrated_params()
+        self._watch(engine, step, snap)
+        if snap.confidence < cfg.min_confidence:
+            return None
+        return self._retune(engine, step, snap)
+
+    # -- drift / SLO surveillance -------------------------------------------
+
+    def _watch(self, engine, step: int, snap) -> None:
+        from repro.obs.alerts import Alert
+        cfg, p = self.cfg, snap.params
+        fired = []
+        if p.t_step > 0:
+            fired += self.monitor.update("step_time", p.t_step)
+        if p.t_sync > 0:
+            fired += self.monitor.update("sync_time", p.t_sync)
+        disk = snap.tier_costs.get("disk")
+        if disk is not None and snap.sample_counts.get("tier_save_disk"):
+            fired += self.monitor.update("checkpoint_cost", disk.t_save)
+        # fault-rate bursts: detections per evaluation window
+        ndet = snap.sample_counts.get("detections", 0)
+        new_det = ndet - self._last_det_count
+        self._last_det_count = ndet
+        fired += self.monitor.update("fault_rate", float(new_det))
+        if any(a["stream"] == "fault_rate" for a in fired):
+            self._burst = True
+        # SLO burn: the replay proxy — a fault discards up to lag/2 of the
+        # window's steps, so delivered fraction over this interval is
+        # 1 - faults*(lag/2)/interval (floored at 0)
+        lag = max(engine.validate_lag, 1)
+        good = max(0.0, 1.0 - new_det * (lag / 2.0) / cfg.interval_steps)
+        for slo in self.slos:
+            alert = slo.update(step, good)
+            if alert is not None:
+                self.alerts.emit(alert)
+        # journal-vs-prediction divergence: observed delivered fraction
+        # against what the calibrated model predicts at this lag
+        if p.t_step > 0 and p.t_sync > 0:
+            pred = tm.serve_availability(p, snap.mtbe_hours,
+                                         max(cfg.serve_slots, 1), lag)
+            fired += self.monitor.update("kpi_divergence", good - pred)
+        for a in fired:
+            self.alerts.emit(Alert(
+                name=f"{a['stream']}_drift", severity="warning", step=step,
+                message=(f"{a['stream']} drift flagged by {a['detector']} "
+                         f"at value {a['value']:.6g}"),
+                detail=dict(a)))
+
+    # -- re-advise + apply ---------------------------------------------------
+
+    def _retune(self, engine, step: int, snap) -> Optional[Dict[str, Any]]:
+        cfg = self.cfg
+        self._advise_backend(step, snap)
+        p, mtbe = snap.params, snap.mtbe_hours
+        target = (tm.optimal_serve_lag(p, mtbe, cfg.serve_slots)
+                  if cfg.mode == "serve"
+                  else tm.optimal_validate_lag(p, mtbe, X=cfg.X_expected))
+        if target == engine.validate_lag:
+            self._pending_target, self._pending_count = None, 0
+            self._burst = False
+            return None
+        if target == self._pending_target:
+            self._pending_count += 1
+        else:
+            self._pending_target, self._pending_count = target, 1
+        if self._pending_count < cfg.persistence and not self._burst:
+            return None
+        if engine.pending_validation:
+            # mid-window: keep the pending vote, retry at the next eval
+            # (the engine would refuse anyway; this keeps hysteresis state)
+            return None
+        rec = autotune(engine, snap, mode=cfg.mode,
+                       serve_slots=cfg.serve_slots, X=cfg.X_expected,
+                       lag=target)
+        if rec is not None:
+            self._pending_target, self._pending_count = None, 0
+            self._burst = False
+        return rec
+
+    def _advise_backend(self, step: int, snap) -> None:
+        from repro.obs.alerts import Alert
+        cfg, p = self.cfg, snap.params
+        dup = tm.aet_strategy(p, "detection", snap.mtbe_hours,
+                              X=cfg.X_expected)
+        abft = tm.aet_strategy(p, "abft", snap.mtbe_hours, X=cfg.X_expected)
+        abft_wins = abft < dup
+        using_abft = cfg.backend in ("abft", "hybrid")
+        if abft_wins != using_abft:
+            better, worse = ("abft", dup) if abft_wins else ("duplication",
+                                                             abft)
+            self.alerts.emit(Alert(
+                name="backend_advice", severity="info", step=step,
+                message=(f"calibrated model prefers {better} detection "
+                         f"(AET {min(dup, abft):.4g}h vs {worse:.4g}h) — "
+                         f"advisory only; restart with the recommended "
+                         f"backend to apply"),
+                detail={"current": cfg.backend,
+                        "recommended": better,
+                        "aet_duplication_h": round(dup, 6),
+                        "aet_abft_h": round(abft, 6)}))

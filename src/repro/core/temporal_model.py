@@ -200,12 +200,24 @@ def deferred_fp(p: SedarParams, D: int, X: float) -> float:
 
 
 def aet_deferred(p: SedarParams, D: int, mtbe: float, X: float = 0.5) -> float:
-    """Eq. (11) with the deferred-window fa/fp pair."""
-    return aet(deferred_fp(p, D, X), deferred_fa(p, D), p.T_prog, mtbe)
+    """Eq. (11) with the deferred-window fa/fp pair.
+
+    Short-MTBE correction: Eq. (11)'s alpha saturates at ONE fault per
+    execution, but a faulty run at mtbe << T_prog contains ~T_prog/mtbe
+    faults and pays the D/2-step discard for EACH of them. Without the
+    extra term the model would always prefer the longest window under
+    fault storms — exactly when long windows are most expensive (pinned
+    against a measured-cost simulation in bench_autotune)."""
+    extra = max(p.T_prog / mtbe - 1.0, 0.0) * deferred_waste(p, D)
+    return aet(deferred_fp(p, D, X) + extra, deferred_fa(p, D),
+               p.T_prog, mtbe)
+
+
+LAG_CANDIDATES = (1, 2, 4, 8, 16, 32, 64, 128)
 
 
 def optimal_validate_lag(p: SedarParams, mtbe: float, X: float = 0.5,
-                         candidates=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
+                         candidates=LAG_CANDIDATES) -> int:
     """argmin_D of the deferred AET. The tension: sync savings saturate as
     (1 - 1/D) while the per-fault discard grows as D/2, so the optimum
     rises with t_sync/t_step and falls as MTBE shrinks. Returns 1 when the
@@ -390,8 +402,11 @@ def serve_token_cost(p: SedarParams, mtbe: float, n_slots: int,
     return p.t_step + sync + rework
 
 
+SERVE_LAG_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
+
+
 def optimal_serve_lag(p: SedarParams, mtbe: float, n_slots: int,
-                      candidates=(1, 2, 4, 8, 16, 32, 64)) -> int:
+                      candidates=SERVE_LAG_CANDIDATES) -> int:
     """argmin_D of the per-token cost. Same tension as
     `optimal_validate_lag`, but the per-fault discard is divided by
     n_slots (only one sequence replays), so serving tolerates LONGER

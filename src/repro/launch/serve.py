@@ -98,9 +98,20 @@ def _continuous(args, cfg, ob=None) -> None:
         n = srv.warmup_prefill(params, max_len)
         print(f"[SEDAR] prefill warmup: {n} (bucket, pack) programs "
               f"compiled ahead of traffic")
+    tuner = None
+    if args.autotune:
+        from repro.core import temporal_model as tm
+        from repro.core.policy import Autotuner, AutotuneConfig
+        tuner = Autotuner(
+            tm.PAPER_TABLE3["JACOBI"],
+            AutotuneConfig(interval_steps=args.autotune_interval,
+                           mode="serve", serve_slots=args.slots,
+                           backend=args.backend,
+                           slo_availability=args.slo_availability,
+                           slo_goodput=args.slo_goodput))
     out, rep = srv.serve(
         params, reqs, slots=args.slots, validate_lag=args.validate_lag,
-        queue_depth=args.queue_depth,
+        queue_depth=args.queue_depth, autotune=tuner,
         notify_reject=lambda r, e: print(
             f"[SEDAR] request {r.rid} REJECTED after {e.boundary} fault "
             f"(per-request safe stop)", flush=True))
@@ -128,6 +139,14 @@ def _continuous(args, cfg, ob=None) -> None:
             print(f"[obs] predicted-vs-observed {row['metric']}: "
                   f"predicted {row['predicted']}, observed "
                   f"{row['observed']} -> {'OK' if row['ok'] else 'MISS'}")
+    if tuner is not None:
+        snap = tuner.estimator.calibrated_params()
+        print(f"[autotune] calibrated: t_step={snap.params.t_step:.3e} h, "
+              f"t_sync={snap.params.t_sync:.3e} h, "
+              f"mtbe={snap.mtbe_hours:.3g} h, "
+              f"confidence={snap.confidence:.2f}")
+        print(f"[autotune] {len(tuner.alerts.records)} alert(s), "
+              f"{tuner.evaluations} evaluation(s)")
 
 
 def _sync(args, cfg) -> None:
@@ -215,7 +234,21 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record per-stage trace spans to a Chrome-trace "
                          "JSON (open at ui.perfetto.dev)")
+    # -- closed-loop autotuning (DESIGN.md §17) ------------------------------
+    ap.add_argument("--autotune", action="store_true",
+                    help="closed-loop calibration: estimate decode-tick/"
+                         "flush costs and MTBE online, retune the serve "
+                         "lag at clean flush boundaries (needs "
+                         "--metrics-dir + --continuous)")
+    ap.add_argument("--autotune-interval", type=int, default=16,
+                    help="decode ticks between autotuner evaluations")
+    ap.add_argument("--slo-availability", type=float, default=None,
+                    help="availability SLO target (e.g. 0.999)")
+    ap.add_argument("--slo-goodput", type=float, default=None,
+                    help="goodput SLO target as a 0-1 fraction")
     args = ap.parse_args()
+    if args.autotune and not (args.continuous and args.metrics_dir):
+        ap.error("--autotune needs --continuous and --metrics-dir")
 
     cfg = get_config(args.arch)
     if args.smoke:

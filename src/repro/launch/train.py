@@ -162,6 +162,21 @@ def main() -> None:
                          "(DESIGN.md §15): writes metrics.prom and "
                          "journal.jsonl here and prints the Prometheus "
                          "snapshot after the run")
+    # -- closed-loop autotuning (DESIGN.md §17) ------------------------------
+    ap.add_argument("--autotune", action="store_true",
+                    help="closed-loop calibration: estimate t_step/t_sync/"
+                         "MTBE online and retune the deferred-validation "
+                         "lag + tier cadences at clean flush boundaries "
+                         "(requires --metrics-dir for the estimator's "
+                         "inputs)")
+    ap.add_argument("--autotune-interval", type=int, default=16,
+                    help="steps between autotuner evaluations")
+    ap.add_argument("--slo-availability", type=float, default=None,
+                    help="availability SLO target (e.g. 0.999); burn-rate "
+                         "alerts fire when the error budget burns fast")
+    ap.add_argument("--slo-goodput", type=float, default=None,
+                    help="goodput SLO target as a 0-1 fraction of the "
+                         "fault-free rate")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record per-stage trace spans to a Chrome-trace "
                          "JSON (open at ui.perfetto.dev)")
@@ -214,8 +229,21 @@ def main() -> None:
                   f"({args.metrics_dir}/metrics.prom):")
             print(snap, end="")
         return
+    tuner = None
+    if args.autotune:
+        from repro.core import temporal_model as tm
+        from repro.core.policy import Autotuner, AutotuneConfig
+        if not args.metrics_dir:
+            ap.error("--autotune needs --metrics-dir (the estimator reads "
+                     "the stage-duration histograms and the fault journal)")
+        tuner = Autotuner(
+            tm.PAPER_TABLE3["JACOBI"],
+            AutotuneConfig(interval_steps=args.autotune_interval,
+                           mode="train", backend=args.replication,
+                           slo_availability=args.slo_availability,
+                           slo_goodput=args.slo_goodput))
     hb = Heartbeat(os.path.join(args.workdir, "heartbeats"), args.host_id)
-    trainer = make_trainer(rc, args.workdir, inj_spec=inj)
+    trainer = make_trainer(rc, args.workdir, inj_spec=inj, autotune=tuner)
     dual, rep = trainer.run(args.steps)
     hb.beat(rep.steps_completed)
     print(rep.summary())
@@ -226,6 +254,15 @@ def main() -> None:
     if args.metrics_dir:
         kpis = ob.kpis(steps=rep.steps_completed)
         print(f"[obs] kpis: {kpis}")
+    if tuner is not None:
+        snap = tuner.estimator.calibrated_params()
+        print(f"[autotune] calibrated: t_step={snap.params.t_step:.3e} h, "
+              f"t_sync={snap.params.t_sync:.3e} h, "
+              f"mtbe={snap.mtbe_hours:.3g} h, "
+              f"confidence={snap.confidence:.2f} "
+              f"({snap.sample_counts})")
+        print(f"[autotune] {len(tuner.alerts.records)} alert(s), "
+              f"{tuner.evaluations} evaluation(s)")
     snap = ob.finalize()
     if snap:
         print(f"[obs] metrics snapshot ({args.metrics_dir}/metrics.prom):")

@@ -31,22 +31,31 @@ import time
 from contextlib import nullcontext
 from typing import Any, Dict, Optional
 
+from .alerts import Alert, AlertManager, SloTracker
+from .anomaly import AnomalyMonitor, Cusum, EwmaBand, PageHinkley
+from .estimator import CalibratedSnapshot, OnlineEstimator
 from .journal import FaultJournal, canonical, event_to_record, payloads, \
     reconcile, replay
 from .kpi import compute_kpis, reconcile_with_advice
-from .registry import MetricsRegistry, percentile
+from .registry import DEFAULT_BUCKETS, MetricsRegistry, parse_prometheus, \
+    percentile
 from .trace import TraceRecorder
 
 __all__ = [
-    "metrics", "percentile", "MetricsRegistry",
+    "metrics", "percentile", "MetricsRegistry", "parse_prometheus",
+    "DEFAULT_BUCKETS",
     "FaultJournal", "canonical", "event_to_record", "payloads", "replay",
     "reconcile", "compute_kpis", "reconcile_with_advice", "TraceRecorder",
+    "OnlineEstimator", "CalibratedSnapshot",
+    "AnomalyMonitor", "EwmaBand", "PageHinkley", "Cusum",
+    "Alert", "AlertManager", "SloTracker",
     "enable_metrics", "disable_metrics", "metrics_enabled",
     "set_journal", "get_journal", "enable_trace", "disable_trace",
     "get_trace", "span", "configure", "shutdown",
     "note_detection", "note_recovery", "note_checkpoint",
     "note_tier_save", "note_tier_restore", "note_tier_event",
     "note_rejection", "note_heartbeat_anomaly", "note_tokens",
+    "note_alert", "note_reconfig",
     "Observability",
 ]
 
@@ -129,12 +138,43 @@ def get_trace() -> Optional[TraceRecorder]:
     return _trace
 
 
+class _MetricSpan:
+    """Times the span body into the stage-duration histogram (host clock
+    only — never a device sync), optionally wrapping a trace span."""
+
+    __slots__ = ("name", "inner", "_t0")
+
+    def __init__(self, name: str, inner=None):
+        self.name = name
+        self.inner = inner
+        self._t0 = 0.0
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        if self.inner is not None:
+            self.inner.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        if self.inner is not None:
+            self.inner.__exit__(*exc)
+        metrics.observe("sedar_stage_duration_seconds",
+                        time.monotonic() - self._t0, stage=self.name)
+        return False
+
+
 def span(name: str, **args):
-    """Trace span context manager; the shared no-op when tracing is off."""
+    """Stage span context manager: a Chrome-trace event when tracing is
+    on, a stage-duration histogram sample when metrics are on (these are
+    what the PR-9 estimator calibrates t_step/t_sync/tier costs from),
+    and the shared no-op when both are off."""
     tr = _trace
-    if tr is None:
+    if tr is None and not _metrics_on:
         return _NULL_SPAN
-    return tr.span(name, **args)
+    inner = tr.span(name, **args) if tr is not None else None
+    if not _metrics_on:
+        return inner
+    return _MetricSpan(name, inner)
 
 
 def shutdown() -> None:
@@ -225,6 +265,29 @@ def note_heartbeat_anomaly(host_id: int, gap_s: float,
 def note_tokens(n: int) -> None:
     if _metrics_on and n:
         metrics.inc("serve_tokens_emitted_total", n)
+
+
+def note_alert(record: Dict[str, Any]) -> None:
+    """Structured anomaly/SLO alert from the AlertManager (DESIGN.md §17)."""
+    if _metrics_on:
+        # label key is "alert", not "name" — the registry's positional
+        # metric name would collide with a label literally called name
+        metrics.inc("sedar_alerts_total",
+                    alert=str(record.get("name", "?")),
+                    severity=str(record.get("severity", "warning")))
+    if _journal is not None:
+        _journal.append("alert", step=record.get("step"),
+                        record=dict(record))
+
+
+def note_reconfig(record: Dict[str, Any]) -> None:
+    """Autotuner knob transition applied by SedarEngine.apply_reconfig."""
+    if _metrics_on:
+        for knob in record.get("changes", {}):
+            metrics.inc("sedar_reconfigs_total", knob=str(knob))
+    if _journal is not None:
+        _journal.append("reconfig", step=record.get("step"),
+                        record=dict(record))
 
 
 # --------------------------------------------------------------------------

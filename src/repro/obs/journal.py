@@ -19,7 +19,9 @@ DESIGN.md §15.
 """
 from __future__ import annotations
 
+import atexit
 import json
+import os
 import time
 from typing import Any, Dict, Iterable, List, Optional
 
@@ -67,13 +69,35 @@ class FaultJournal:
     the journal was opened) and a sequence number `seq`; everything else is
     caller fields. When `path` is given every append is streamed as one
     JSONL line (flushed, so a crashed run keeps its tail).
+
+    Durability + bounded growth (DESIGN.md §17):
+
+      * ``fsync_every=N`` forces the line to disk every N appends (0 =
+        never fsync — the OS page cache decides). A kill -9 loses at most
+        the last unsynced batch; ``synced_seq`` names the last sequence
+        number guaranteed on disk.
+      * an atexit hook flushes+fsyncs whatever is buffered on clean
+        interpreter exit, so only a hard crash can drop the tail.
+      * ``max_bytes=B`` rotates ``journal.jsonl`` → ``journal.jsonl.1``
+        when the active file exceeds B (one generation — campaigns are
+        bounded); ``load()`` reads across the rotation so ``reconcile()``
+        still sees the whole stream.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None, *,
+                 fsync_every: int = 0, max_bytes: int = 0):
         self.path = path
         self.entries: List[Dict[str, Any]] = []
+        self.fsync_every = int(fsync_every)
+        self.max_bytes = int(max_bytes)
+        self.synced_seq = -1
+        self._since_sync = 0
         self._t0 = time.monotonic()
         self._fh = open(path, "w") if path else None
+        self._atexit = None
+        if self._fh is not None:
+            self._atexit = self.sync
+            atexit.register(self._atexit)
 
     def append(self, kind: str, **fields) -> Dict[str, Any]:
         rec = {"kind": kind, "seq": len(self.entries),
@@ -84,7 +108,27 @@ class FaultJournal:
         if self._fh is not None:
             self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
             self._fh.flush()
+            self._since_sync += 1
+            if self.fsync_every > 0 and self._since_sync >= self.fsync_every:
+                self.sync()
+            if self.max_bytes > 0 and self._fh.tell() >= self.max_bytes:
+                self._rotate()
         return rec
+
+    def sync(self) -> None:
+        """Flush + fsync: everything appended so far is now on disk."""
+        if self._fh is None:
+            return
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        self.synced_seq = len(self.entries) - 1
+        self._since_sync = 0
+
+    def _rotate(self) -> None:
+        self.sync()
+        self._fh.close()
+        os.replace(self.path, self.path + ".1")
+        self._fh = open(self.path, "w")
 
     def records(self, kind: Optional[str] = None) -> List[Dict[str, Any]]:
         if kind is None:
@@ -93,17 +137,30 @@ class FaultJournal:
 
     def close(self) -> None:
         if self._fh is not None:
+            self.sync()
             self._fh.close()
             self._fh = None
+        if self._atexit is not None:
+            atexit.unregister(self._atexit)
+            self._atexit = None
 
     @staticmethod
     def load(path: str) -> List[Dict[str, Any]]:
+        """Read a journal back, rotated generation first; a torn final
+        line (crash mid-write) is skipped rather than raised."""
         out: List[Dict[str, Any]] = []
-        with open(path) as fh:
-            for line in fh:
-                line = line.strip()
-                if line:
-                    out.append(json.loads(line))
+        for p in (path + ".1", path):
+            if not os.path.exists(p):
+                continue
+            with open(p) as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        out.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        continue
         return out
 
 
@@ -124,17 +181,29 @@ def replay(records: Iterable[Dict[str, Any]]) -> Dict[str, List[Dict]]:
 
 
 def reconcile(records: Iterable[Dict[str, Any]], detections: Iterable[Any],
-              recoveries: Iterable[Dict[str, Any]]) -> Dict[str, bool]:
+              recoveries: Iterable[Dict[str, Any]],
+              alerts: Optional[Iterable[Dict[str, Any]]] = None,
+              reconfigs: Optional[Iterable[Dict[str, Any]]] = None,
+              ) -> Dict[str, bool]:
     """Byte-for-byte check: does the journal reproduce the engine's
     detection/recovery sequences exactly? `detections` are DetectionEvents
     (projected via event_to_record); `recoveries` are the engine's record
-    dicts."""
+    dicts. Passing `alerts` (AlertManager.records) and/or `reconfigs`
+    (SedarEngine.reconfigs) extends the same contract to the PR-9 control
+    loop — the corresponding `*_match` keys only appear when provided."""
     recs = list(records)
     j_det = [canonical(p) for p in payloads(recs, "detection", "event")]
     j_rec = [canonical(p) for p in payloads(recs, "recovery", "record")]
     e_det = [canonical(event_to_record(e)) for e in detections]
     e_rec = [canonical(r) for r in recoveries]
-    return {
+    out = {
         "detections_match": j_det == e_det,
         "recoveries_match": j_rec == e_rec,
     }
+    if alerts is not None:
+        j_al = [canonical(p) for p in payloads(recs, "alert", "record")]
+        out["alerts_match"] = j_al == [canonical(a) for a in alerts]
+    if reconfigs is not None:
+        j_rc = [canonical(p) for p in payloads(recs, "reconfig", "record")]
+        out["reconfigs_match"] = j_rc == [canonical(r) for r in reconfigs]
+    return out

@@ -23,8 +23,10 @@ def compute_kpis(records: Iterable[Dict[str, Any]], *,
     - ``mttd_steps``: mean detection latency in steps — for a deferred
       detection `detail["detected_at"] − step` (fault commit → flush that
       surfaced it), else 0 (caught at its own boundary).
-    - ``mttr_s``: mean wall time from a detection line to the recovery
-      line that resolved it (journal `t_mono` deltas).
+    - ``mttr_s``: mean wall time from a detection line to the SDC recovery
+      line that resolved it (journal `t_mono` deltas). Elastic remesh
+      recoveries are excluded — they pair with heartbeat anomalies and
+      report separately as ``elastic_mttr_s``.
     - ``redone_steps``: total steps re-executed by rollbacks
       (`record["at"] − record["step"]` summed over rollback recoveries).
     - ``availability``: 1 − redone/steps (useful-work fraction).
@@ -42,15 +44,37 @@ def compute_kpis(records: Iterable[Dict[str, Any]], *,
         lags.append(float(detail.get("detected_at", d["step"])) -
                     float(d["step"]))
 
-    # Pair each recovery with the nearest preceding unclaimed detection.
+    # Elastic remesh transitions (DESIGN.md §16) are node-loss recoveries,
+    # not SDC recoveries: pairing one with an SDC detection line would both
+    # corrupt MTTR (the remesh did not resolve that detection) and leave
+    # the real recovery line unpaired. Split them out and pair them with
+    # the heartbeat anomaly that triggered the transition instead.
+    def _is_remesh(rl: Dict[str, Any]) -> bool:
+        return (rl.get("record") or {}).get("kind") == "elastic_remesh"
+
+    sdc_rec_lines = [r for r in rec_lines if not _is_remesh(r)]
+    remesh_lines = [r for r in rec_lines if _is_remesh(r)]
+    hb_lines = [r for r in recs if r.get("kind") == "heartbeat_anomaly"]
+
+    # Pair each SDC recovery with the nearest preceding unclaimed detection.
     mttrs: List[float] = []
     free = list(det_lines)
-    for rl in rec_lines:
+    for rl in sdc_rec_lines:
         prior = [dl for dl in free if dl["seq"] < rl["seq"]]
         if prior:
             dl = prior[-1]
             free.remove(dl)
             mttrs.append(rl["t_mono"] - dl["t_mono"])
+
+    # Elastic MTTR: stale-host heartbeat anomaly -> remesh completion.
+    elastic_mttrs: List[float] = []
+    free_hb = list(hb_lines)
+    for rl in remesh_lines:
+        prior = [h for h in free_hb if h["seq"] < rl["seq"]]
+        if prior:
+            h = prior[-1]
+            free_hb.remove(h)
+            elastic_mttrs.append(rl["t_mono"] - h["t_mono"])
 
     redone = 0
     rollbacks = 0
@@ -86,6 +110,8 @@ def compute_kpis(records: Iterable[Dict[str, Any]], *,
     if remeshes:
         out["elastic_remeshes"] = remeshes
         out["node_loss_downtime_s"] = downtime_s
+        if elastic_mttrs:
+            out["elastic_mttr_s"] = sum(elastic_mttrs) / len(elastic_mttrs)
     if steps:
         out["steps"] = int(steps)
         out["availability"] = max(0.0, 1.0 - redone / float(steps))

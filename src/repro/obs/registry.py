@@ -41,6 +41,14 @@ LabelKey = Tuple[Tuple[str, str], ...]
 # FIFO; count/sum/min/max stay exact).
 HIST_MAX_SAMPLES = 4096
 
+# Default cumulative-bucket ladder: 1-2.5-5 decades from 1ms-scale to
+# 1000-scale, covering both seconds-valued spans and ms-valued latency
+# histograms with one generic ladder. Override per-metric with
+# `MetricsRegistry.set_buckets` before the first observe.
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0,
+                   500.0, 1000.0)
+
 
 def percentile(values: Iterable[float], q: float) -> float:
     """Nearest-rank percentile (the one percentile implementation).
@@ -74,26 +82,45 @@ class _Gauge:
 
 
 class _Histogram:
-    __slots__ = ("count", "total", "vmin", "vmax", "samples")
+    __slots__ = ("count", "total", "vmin", "vmax", "samples",
+                 "buckets", "bucket_counts")
 
-    def __init__(self):
+    def __init__(self, buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
         self.count = 0
         self.total = 0.0
         self.vmin = math.inf
         self.vmax = -math.inf
         self.samples: List[float] = []
+        # bucket_counts[i] counts observations <= buckets[i] (per-bucket,
+        # not cumulative; exposition cumulates). Exact even after the
+        # sample buffer drops old values FIFO.
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        self.bucket_counts = [0] * len(self.buckets)
 
     def observe(self, value: float) -> None:
         self.count += 1
         self.total += value
         self.vmin = min(self.vmin, value)
         self.vmax = max(self.vmax, value)
+        for i, ub in enumerate(self.buckets):
+            if value <= ub:
+                self.bucket_counts[i] += 1
+                break
         self.samples.append(value)
         if len(self.samples) > HIST_MAX_SAMPLES:
             del self.samples[: len(self.samples) - HIST_MAX_SAMPLES]
 
     def quantile(self, q: float) -> float:
         return percentile(self.samples, q)
+
+    def cumulative_buckets(self) -> List[Tuple[float, int]]:
+        """[(upper_bound, cumulative_count)] — Prometheus `le` semantics;
+        the implicit +Inf bucket (== count) is appended by the renderer."""
+        out, acc = [], 0
+        for ub, c in zip(self.buckets, self.bucket_counts):
+            acc += c
+            out.append((ub, acc))
+        return out
 
 
 def _label_key(labels: Dict[str, object]) -> LabelKey:
@@ -113,6 +140,7 @@ class MetricsRegistry:
         self._lock = threading.Lock()
         self._kinds: Dict[str, str] = {}
         self._series: Dict[Tuple[str, LabelKey], object] = {}
+        self._buckets: Dict[str, Tuple[float, ...]] = {}
 
     # -- internals -----------------------------------------------------------
 
@@ -124,10 +152,18 @@ class MetricsRegistry:
         key = (name, _label_key(labels))
         m = self._series.get(key)
         if m is None:
-            m = {"counter": _Counter, "gauge": _Gauge,
-                 "histogram": _Histogram}[kind]()
+            if kind == "histogram":
+                m = _Histogram(self._buckets.get(name, DEFAULT_BUCKETS))
+            else:
+                m = {"counter": _Counter, "gauge": _Gauge}[kind]()
             self._series[key] = m
         return m
+
+    def set_buckets(self, name: str, buckets: Iterable[float]) -> None:
+        """Pin a histogram's bucket ladder; must precede the first observe
+        (existing series keep the ladder they were created with)."""
+        with self._lock:
+            self._buckets[name] = tuple(sorted(float(b) for b in buckets))
 
     # -- producers -----------------------------------------------------------
 
@@ -174,36 +210,73 @@ class MetricsRegistry:
         with self._lock:
             self._kinds.clear()
             self._series.clear()
+            self._buckets.clear()
 
     # -- Prometheus text exposition ------------------------------------------
 
     def render_prometheus(self) -> str:
         """Prometheus-style text snapshot (`--metrics-dir` writes this as
         metrics.prom; the launchers print it after a run). Histograms render
-        as _count/_sum plus nearest-rank quantile samples."""
+        as cumulative le-labeled `_bucket` lines (with the implicit `+Inf`
+        bucket) plus `_sum`/`_count` — the real Prometheus histogram
+        exposition, scrapeable and `parse_prometheus`-round-trippable."""
         lines: List[str] = []
         with self._lock:
             for name in sorted(self._kinds):
                 kind = self._kinds[name]
                 lines.append(f"# TYPE {name} "
-                             f"{'summary' if kind == 'histogram' else kind}")
+                             f"{'histogram' if kind == 'histogram' else kind}")
                 series = sorted((lk, m) for (n, lk), m in
                                 self._series.items() if n == name)
                 for lk, m in series:
                     lab = ",".join(f'{k}="{v}"' for k, v in lk)
                     if kind == "histogram":
-                        qlab = (lab + "," if lab else "")
-                        for q in (50, 99):
+                        blab = (lab + "," if lab else "")
+                        for ub, cum in m.cumulative_buckets():
                             lines.append(
-                                f"{name}{{{qlab}quantile=\"0.{q}\"}} "
-                                f"{m.quantile(q):g}")
-                        lines.append(f"{name}_count"
-                                     f"{'{' + lab + '}' if lab else ''} "
-                                     f"{m.count}")
+                                f"{name}_bucket{{{blab}le=\"{ub:g}\"}} "
+                                f"{cum}")
+                        lines.append(
+                            f"{name}_bucket{{{blab}le=\"+Inf\"}} {m.count}")
                         lines.append(f"{name}_sum"
                                      f"{'{' + lab + '}' if lab else ''} "
                                      f"{m.total:g}")
+                        lines.append(f"{name}_count"
+                                     f"{'{' + lab + '}' if lab else ''} "
+                                     f"{m.count}")
                     else:
                         body = f"{{{lab}}}" if lab else ""
                         lines.append(f"{name}{body} {m.value:g}")
         return "\n".join(lines) + ("\n" if lines else "")
+
+
+def parse_prometheus(text: str):
+    """Parse the text exposition back into structured samples.
+
+    Returns ``(types, samples)`` where ``types`` maps metric family name to
+    its declared kind and ``samples`` maps sample name (including
+    ``_bucket``/``_sum``/``_count`` suffixes) to ``{label_key: value}``.
+    Used by the round-trip pin test and the live `launch/status.py` view;
+    tolerant of comments and blank lines, strict about sample syntax.
+    """
+    types: Dict[str, str] = {}
+    samples: Dict[str, Dict[LabelKey, float]] = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 4 and parts[1] == "TYPE":
+                types[parts[2]] = parts[3]
+            continue
+        name_labels, _, value = line.rpartition(" ")
+        name, brace, rest = name_labels.partition("{")
+        labels: Dict[str, str] = {}
+        if brace:
+            body = rest.rsplit("}", 1)[0]
+            for pair in filter(None, body.split(",")):
+                k, _, v = pair.partition("=")
+                labels[k.strip()] = v.strip().strip('"')
+        samples.setdefault(name, {})[_label_key(labels)] = float(value)
+    return types, samples

@@ -109,10 +109,15 @@ class RequestQueue:
             return False
         req.status = QUEUED
         self._q.append(req)
+        if obs.metrics_enabled():
+            obs.metrics.set_gauge("sedar_serve_queue_depth", len(self._q))
         return True
 
     def pop(self) -> Optional[Request]:
-        return self._q.popleft() if self._q else None
+        req = self._q.popleft() if self._q else None
+        if req is not None and obs.metrics_enabled():
+            obs.metrics.set_gauge("sedar_serve_queue_depth", len(self._q))
+        return req
 
 
 class SlotScheduler:
@@ -181,6 +186,11 @@ class SlotScheduler:
         req.status = DONE
         req.slot = None
         self.slots[slot] = None
+        if obs.metrics_enabled() and \
+                req.arrival_time is not None and req.token_times:
+            obs.metrics.observe(
+                "sedar_serve_ttft_seconds",
+                req.token_times[0] - req.arrival_time)
         return req
 
     def reject(self, slot: int, reason: str) -> Request:

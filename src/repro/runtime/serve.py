@@ -625,7 +625,8 @@ class SedarServer:
     def serve(self, params, requests, *, slots: int = 4,
               max_len: Optional[int] = None, validate_lag: Optional[int] = None,
               queue_depth: int = 0, max_steps: Optional[int] = None,
-              notify_reject=None, packed_prefill: bool = True):
+              notify_reject=None, packed_prefill: bool = True,
+              autotune=None):
         """Continuous-batching protected decode over an open-loop request
         stream. Mutates and returns the `Request` objects (lifecycle fields
         are reset first, so a template list can be replayed for fault-free
@@ -635,7 +636,10 @@ class SedarServer:
         step performs NO host sync beyond token emission, detection lags by
         <= D steps, and a detected fault rolls back only the affected slots
         from the Tier-0 ring. `queue_depth` bounds the admission queue
-        (backpressure -> immediate rejection)."""
+        (backpressure -> immediate rejection). `autotune` (a
+        policy.Autotuner with mode="serve") live-retunes the lag at clean
+        flush boundaries; the engine's reset() restores the configured lag
+        for the next serve() call."""
         from repro.runtime.prefill import group_packs
         from repro.runtime.scheduler import (DRAINING, RUNNING, RequestQueue,
                                              SlotScheduler)
@@ -685,6 +689,8 @@ class SedarServer:
         cap = max_steps or (sum(r.max_new_tokens for r in requests)
                             + len(requests)) * 4 + 64
         while t < cap and (pending or len(sched.queue) or sched.busy):
+            # the autotuner may have moved the lag at the last boundary
+            ring_on = eng.validate_lag > 1
             while pending and pending[0].arrival <= t:
                 req = pending.pop(0)
                 req.arrival_time = time.time()     # TTFT reference stamp
@@ -757,6 +763,8 @@ class SedarServer:
             elif ring_on and not eng.pending_validation:
                 # clean flush boundary: cut the Tier-0 per-slot snapshots
                 self._snapshot_slots(eng, dual, sched, ring, version=t + 1)
+            if autotune is not None:
+                autotune.maybe_tune(eng, t + 1)
             # token emission — the ONE per-step readback of the hot path:
             # tok + pos fetched in a single transfer batch; per-slot
             # position deltas drive emission, so partial commits (faulty

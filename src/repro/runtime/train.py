@@ -79,9 +79,13 @@ class SedarTrainer:
                  inj_spec: Optional[InjectionSpec] = None,
                  toe_delay: Optional[Dict[str, Any]] = None,
                  data=None, notify: Optional[Callable] = None,
-                 hosts_per_data_shard: int = 1):
+                 hosts_per_data_shard: int = 1,
+                 autotune=None):
         self.cfg = run_cfg
         self.workdir = workdir
+        # closed-loop knob tuning (DESIGN.md §17): a policy.Autotuner whose
+        # maybe_tune() ticks after every committed step
+        self.autotune = autotune
         os.makedirs(workdir, exist_ok=True)
         self.model = build_model(run_cfg.model)
         self.opt = make_optimizer(run_cfg.train)
@@ -358,6 +362,10 @@ class SedarTrainer:
                 # fetch on a step whose window is already flushed (no
                 # extra sync inside a deferred window)
                 drain()
+            if self.autotune is not None:
+                # host-side only (registry/journal reads); lag changes land
+                # via apply_reconfig and only at clean flush boundaries
+                self.autotune.maybe_tune(eng, step)
 
         # final validation (paper: final results comparison)
         if not rep.stopped:

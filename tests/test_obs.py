@@ -7,6 +7,7 @@ the opening thread's readbacks, while the process-wide registry aggregates
 across threads under its lock — the explicit cross-thread mode the shim
 deliberately lacks."""
 import json
+import os
 import threading
 
 import jax.numpy as jnp
@@ -71,7 +72,37 @@ def test_registry_prometheus_render():
     assert 'req_total{route="b"} 1' in text
     assert "depth 3" in text
     assert "lat_ms_count 1" in text and "lat_ms_sum 10" in text
-    assert 'lat_ms{quantile="0.50"} 10' in text
+    # real Prometheus histogram exposition: cumulative le-labeled buckets
+    assert "# TYPE lat_ms histogram" in text
+    assert 'lat_ms_bucket{le="5"} 0' in text
+    assert 'lat_ms_bucket{le="10"} 1' in text
+    assert 'lat_ms_bucket{le="1000"} 1' in text
+    assert 'lat_ms_bucket{le="+Inf"} 1' in text
+
+
+def test_prometheus_histogram_roundtrip():
+    """render_prometheus -> parse_prometheus is lossless for counters,
+    gauges, and histogram bucket/sum/count samples (labels included)."""
+    from repro.obs.registry import parse_prometheus
+    m = MetricsRegistry()
+    m.set_buckets("lat_s", (0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        m.observe("lat_s", v, stage="x")
+    m.inc("req_total", 2, route="a")
+    m.set_gauge("depth", 4)
+    types, samples = parse_prometheus(m.render_prometheus())
+    assert types == {"lat_s": "histogram", "req_total": "counter",
+                     "depth": "gauge"}
+    bucket = samples["lat_s_bucket"]
+    assert bucket[(("le", "0.1"), ("stage", "x"))] == 1
+    assert bucket[(("le", "1"), ("stage", "x"))] == 2
+    assert bucket[(("le", "10"), ("stage", "x"))] == 3
+    assert bucket[(("le", "+Inf"), ("stage", "x"))] == 4
+    assert samples["lat_s_sum"][(("stage", "x"),)] == \
+        pytest.approx(55.55)
+    assert samples["lat_s_count"][(("stage", "x"),)] == 4
+    assert samples["req_total"][(("route", "a"),)] == 2
+    assert samples["depth"][()] == 4
 
 
 def test_registry_cross_thread_aggregation():
@@ -239,6 +270,119 @@ def test_event_to_record_and_reconcile():
     assert not verdict["recoveries_match"]
 
 
+def test_journal_fsync_cadence_and_explicit_sync(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = FaultJournal(path, fsync_every=2)
+    j.append("checkpoint", step=1)
+    assert j.synced_seq == -1              # first append only flushed
+    j.append("checkpoint", step=2)
+    assert j.synced_seq == 1               # cadence hit: both on disk
+    j.append("checkpoint", step=3)
+    assert j.synced_seq == 1
+    j.sync()
+    assert j.synced_seq == 2
+    j.close()
+    assert [r["step"] for r in FaultJournal.load(path)] == [1, 2, 3]
+
+
+def test_journal_survives_torn_final_line(tmp_path):
+    """Crash regression: a kill -9 mid-write leaves a torn last line; the
+    loader must return every complete record and skip the fragment."""
+    path = str(tmp_path / "j.jsonl")
+    j = FaultJournal(path, fsync_every=1)
+    for s in range(3):
+        j.append("detection", step=s, event={"step": s})
+    # simulate the crash: the file handle is abandoned (no close()) and the
+    # next process finds a half-written line at the tail
+    j._fh.write('{"kind": "detection", "seq": 3, "tr')
+    j._fh.flush()
+    j._fh = None                           # drop without close/atexit flush
+    loaded = FaultJournal.load(path)
+    assert [r["step"] for r in loaded] == [0, 1, 2]
+    assert all(r["kind"] == "detection" for r in loaded)
+
+
+def test_journal_rotation_preserves_full_stream(tmp_path):
+    """Size rotation keeps ONE prior generation; across a single rotation
+    `load()` still reconstructs the full stream in order (the documented
+    bounded-campaign contract)."""
+    path = str(tmp_path / "j.jsonl")
+    j = FaultJournal(path, max_bytes=2048)
+    s = 0
+    while not os.path.exists(path + ".1"):     # fill to the first rotation
+        j.append("checkpoint", step=s)
+        s += 1
+        assert s < 200, "rotation never triggered"
+    for _ in range(3):                         # a short tail generation
+        j.append("checkpoint", step=s)
+        s += 1
+    j.close()
+    loaded = FaultJournal.load(path)
+    assert [r["seq"] for r in loaded] == list(range(s))
+    assert [r["step"] for r in loaded] == list(range(s))
+    for mem, disk in zip(j.entries, loaded):
+        assert canonical(mem) == canonical(disk)
+
+
+# ---------------------------------------------------------------------------
+# KPIs under elastic events (fail-in-place, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def test_kpi_elastic_remesh_not_counted_as_sdc_recovery():
+    """An elastic_remesh recovery pairs with the heartbeat anomaly that
+    triggered it — never with an SDC detection line — so `mttr_s` and
+    `elastic_mttr_s` stay independent."""
+    j = FaultJournal()
+    j.append("detection", step=5,
+             event={"step": 5, "boundary": "deferred", "effect": "TDC",
+                    "detail": {"detected_at": 7, "lag": 4}})
+    j.append("heartbeat_anomaly", host=2, gap_s=30.0, anomaly="stale")
+    j.append("recovery", step=6,
+             record={"kind": "elastic_remesh", "step": 6, "at": 8,
+                     "downtime_s": 2.0})
+    j.append("recovery", step=5,
+             record={"kind": "restore", "step": 5, "rollbacks": 1, "at": 7})
+    recs = j.records()
+    k = compute_kpis(recs, steps=20, wall_s=100.0)
+    assert k["detections"] == 1 and k["recoveries"] == 2
+    assert k["elastic_remeshes"] == 1
+    assert k["node_loss_downtime_s"] == pytest.approx(2.0)
+    # the SDC restore pairs with the detection (seq 3 - seq 0)...
+    assert k["mttr_s"] == pytest.approx(recs[3]["t_mono"] -
+                                        recs[0]["t_mono"])
+    # ...and the remesh pairs with the heartbeat anomaly (seq 2 - seq 1)
+    assert k["elastic_mttr_s"] == pytest.approx(recs[2]["t_mono"] -
+                                                recs[1]["t_mono"])
+    # redone work folds in from BOTH; downtime additionally scales uptime
+    assert k["redone_steps"] == (8 - 6) + (7 - 5)
+    assert k["availability"] == pytest.approx((1 - 4 / 20) * (1 - 2 / 100))
+
+
+def test_kpi_shrink_then_regrow_replay():
+    """A shrink + regrow campaign replayed from the journal: each remesh
+    claims its own heartbeat anomaly, none double-pair, and with no SDC
+    detections the SDC MTTR stays zero."""
+    j = FaultJournal()
+    j.append("heartbeat_anomaly", host=3, gap_s=45.0, anomaly="stale")
+    j.append("recovery", step=10,
+             record={"kind": "elastic_remesh", "step": 10, "at": 12,
+                     "direction": "shrink", "downtime_s": 1.0})
+    j.append("heartbeat_anomaly", host=3, gap_s=0.0, anomaly="rejoin")
+    j.append("recovery", step=20,
+             record={"kind": "elastic_remesh", "step": 20, "at": 20,
+                     "direction": "regrow", "downtime_s": 0.5})
+    recs = j.records()
+    k = compute_kpis(recs, steps=40, wall_s=200.0)
+    assert k["detections"] == 0
+    assert k["mttr_s"] == 0.0              # nothing SDC-shaped to pair
+    assert k["elastic_remeshes"] == 2
+    assert k["node_loss_downtime_s"] == pytest.approx(1.5)
+    # each remesh claimed the anomaly immediately preceding it
+    want = ((recs[1]["t_mono"] - recs[0]["t_mono"]) +
+            (recs[3]["t_mono"] - recs[2]["t_mono"])) / 2
+    assert k["elastic_mttr_s"] == pytest.approx(want)
+
+
 def test_journal_replay_groups():
     j = FaultJournal()
     j.append("detection", step=1)
@@ -402,3 +546,121 @@ def test_configure_finalize_writes_artifacts(tmp_path):
         assert [e["name"] for e in json.load(fh)["traceEvents"]] == \
             ["train_step"]
     assert obs.get_journal() is None   # finalize detaches the journal
+
+
+# ---------------------------------------------------------------------------
+# live status view (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def test_status_render_consolidates_run_artifacts(tmp_path):
+    from repro.launch.status import render
+    mdir = str(tmp_path / "metrics")
+    ob = obs.configure(metrics_dir=mdir)
+    for _ in range(4):
+        with obs.span("train_step", step=0):
+            pass
+    obs.note_checkpoint(6)
+    obs.note_alert({"name": "step_time_drift", "severity": "warning",
+                    "step": 8, "message": "band fired", "detail": {}})
+    obs.note_reconfig({"kind": "reconfig", "step": 12, "reason": "autotune",
+                       "changes": {"validate_lag": {"from": 4, "to": 16}}})
+    ob.finalize()
+    page = render(mdir)
+    assert "journal: 3 records" in page
+    assert "train_step" in page and "n=4" in page
+    assert "step_time_drift" in page and "band fired" in page
+    assert "validate_lag: 4->16" in page and "autotune" in page
+    assert "optimal validate lag" in page      # the calibrated-model line
+
+
+def test_status_render_empty_dir_is_graceful(tmp_path):
+    from repro.launch.status import render
+    page = render(str(tmp_path))
+    assert "journal: empty" in page
+
+
+# ---------------------------------------------------------------------------
+# CI bench-regression gate (benchmarks/compare.py)
+# ---------------------------------------------------------------------------
+
+def _summary(metrics=None, acceptance=None):
+    return {"suites": {"s": {"artifact": "BENCH_s.json",
+                             "metrics": metrics or {},
+                             "acceptance": acceptance or {}}}}
+
+
+def test_compare_direction_heuristics():
+    from benchmarks.compare import direction
+    assert direction("protected_steps_per_s") == +1
+    assert direction("serve_goodput_tok_s") == +1
+    assert direction("adaptive_wall_s") == -1
+    assert direction("mttr_s") == -1
+    assert direction("mystery_quantity") is None
+
+
+def test_compare_flags_directional_regressions():
+    from benchmarks.compare import compare
+    base = _summary(metrics={"steps_per_s": 100.0, "wall_s": 10.0},
+                    acceptance={"converged": True})
+    same = compare(base, base)
+    assert same == []
+    # throughput falls 50% -> regression; cost falls -> improvement
+    cur = _summary(metrics={"steps_per_s": 50.0, "wall_s": 5.0},
+                   acceptance={"converged": True})
+    regs = compare(base, cur)
+    assert [r["metric"] for r in regs] == ["steps_per_s"]
+    # cost rises 50% -> regression, within threshold -> clean
+    cur = _summary(metrics={"steps_per_s": 100.0, "wall_s": 15.0})
+    assert [r["metric"] for r in compare(base, cur)][:1] == ["wall_s"]
+    cur = _summary(metrics={"steps_per_s": 95.0, "wall_s": 11.0},
+                   acceptance={"converged": True})
+    assert compare(base, cur) == []
+
+
+def test_compare_acceptance_flip_and_missing_suite():
+    from benchmarks.compare import compare
+    base = _summary(metrics={"wall_s": 10.0}, acceptance={"converged": True})
+    cur = _summary(metrics={"wall_s": 10.0}, acceptance={"converged": False})
+    regs = compare(base, cur)
+    assert [(r["kind"], r["metric"]) for r in regs] == \
+        [("acceptance", "converged")]
+    regs = compare(base, {"suites": {}})
+    assert regs[0]["kind"] == "missing"
+    # undirectable metrics are never gated
+    base = _summary(metrics={"mystery_quantity": 1.0})
+    cur = _summary(metrics={"mystery_quantity": 100.0})
+    assert compare(base, cur) == []
+
+
+def test_compare_cli_skips_without_baseline(tmp_path, capsys, monkeypatch):
+    from benchmarks import compare as cmp
+    cur = tmp_path / "BENCH_summary.json"
+    cur.write_text(json.dumps(_summary(metrics={"wall_s": 10.0})))
+    monkeypatch.setattr("sys.argv", [
+        "compare", "--baseline", str(tmp_path / "missing.json"),
+        "--current", str(cur)])
+    with pytest.raises(SystemExit) as e:
+        cmp.main()
+    assert e.value.code == 0
+    assert "skipping" in capsys.readouterr().out
+
+
+def test_compare_cli_fails_on_regression(tmp_path, capsys, monkeypatch):
+    from benchmarks import compare as cmp
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_summary(metrics={"wall_s": 10.0})))
+    cur.write_text(json.dumps(_summary(metrics={"wall_s": 20.0})))
+    monkeypatch.setattr("sys.argv", [
+        "compare", "--baseline", str(base), "--current", str(cur)])
+    with pytest.raises(SystemExit) as e:
+        cmp.main()
+    assert e.value.code == 1
+    assert "wall_s" in capsys.readouterr().out
+    # loosening the threshold clears it
+    monkeypatch.setattr("sys.argv", [
+        "compare", "--baseline", str(base), "--current", str(cur),
+        "--threshold", "1.5"])
+    with pytest.raises(SystemExit) as e:
+        cmp.main()
+    assert e.value.code == 0

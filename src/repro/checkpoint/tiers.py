@@ -170,12 +170,24 @@ class SlotRing:
         self.saves += 1
 
     def save_many(self, step: int, slices: "Dict[int, Any]") -> None:
-        """Batched admission snapshots (DESIGN.md §14): one call records a
-        whole prefill pack's slot slices at the same version. The copies
+        """Batched snapshots at one shared version: a whole prefill pack's
+        slot slices at admission (DESIGN.md §14), or every live slot at a
+        clean flush edge under lag-aligned drain (DESIGN.md §18 — flush
+        edges are the only points where the optimistic window is fully
+        validated, so drain-mode versions always land there). The copies
         are issued together before any is awaited — still pure `jnp.copy`,
         zero disk, zero host syncs."""
         for key, sl in slices.items():
             self.save(key, step, sl)
+
+    def newest_version(self, key: int) -> Optional[int]:
+        """Newest recorded version for `key` (None when the slot has no
+        history) — the version restore() would pick with no `max_step`
+        bound, without paying its copy. Under lag-aligned drain every
+        version is a clean flush edge, so this is also the slot's newest
+        fully-validated point."""
+        versions = self.versions(key)
+        return max(versions) if versions else None
 
     def restore(self, key: int, max_step: Optional[int] = None
                 ) -> Tuple[int, Any]:

@@ -881,6 +881,11 @@ class SedarEngine:
         self.validate_lag = lag
         self._ring: List[Tuple[int, Any]] = []   # device-resident predicates
         self.validated_frontier = 0              # first step NOT yet validated
+        # device-resident token emission ring (DESIGN.md §18): when a
+        # serving driver attaches one, every deferred step parks its
+        # emission refs and flush_deferred fuses the drained window into
+        # the SAME readback as the combined commit predicate
+        self.emission_ring = None
         # -- live reconfiguration (DESIGN.md §17) ---------------------------
         # autotuner transitions are per-run: reset() restores the configured
         # baseline so a cached engine (serve's _batch_engines) never leaks a
@@ -902,6 +907,7 @@ class SedarEngine:
         self.checkpoints.clear()
         self._ring.clear()
         self.validated_frontier = 0
+        self.emission_ring = None     # drivers re-attach per run
         self.reconfigs.clear()
         self.schedule = self._base_schedule
         self.validate_lag = self._base_lag
@@ -1023,6 +1029,11 @@ class SedarEngine:
         self._mark_injected(step)
         if compare:
             self._ring.append((step, pred))
+        if self.emission_ring is not None:
+            # park BEFORE the flush check below, so the window's last tick
+            # is in the ring when its own predicate flushes — the emission
+            # refs are the step's existing outputs (no launch, no readback)
+            self.emission_ring.park(step, aux)
 
         new_step = step + 1
         # a DURABLE checkpoint tier due at new_step also forces the flush
@@ -1050,21 +1061,49 @@ class SedarEngine:
         event = self._maybe_checkpoint(dual2, new_step)
         return StepOutcome(dual=dual2, aux=aux, event=event)
 
-    def flush_deferred(self) -> Optional[DetectionEvent]:
+    def flush_deferred(self, final: bool = False) -> Optional[DetectionEvent]:
         """Force the deferred-window readback: ONE host read of the combined
         ring predicate; only a failed flush pays a second read to localize
         the first mismatched step. Clean flush advances the validated
         frontier. Drivers call this at end of run; the engine calls it every
-        `validate_lag` commits and before validate/checkpoint boundaries."""
+        `validate_lag` commits and before validate/checkpoint boundaries.
+
+        With an `emission_ring` attached (DESIGN.md §18) the drained token
+        window rides in the SAME `batched_get` as the combined predicate
+        (label `token_emit`: one 3-item batch per D commits replaces 2·D
+        per-tick emission reads); a failed flush truncates the ring at
+        `slot_first_bad` BEFORE delivery, so rolled-back slots retract
+        their un-drained tokens by construction. `final=True` forces the
+        drain even below the ring's cadence (end of run)."""
+        emis = self.emission_ring
+        drain = emis.provide(final=final) if emis is not None else None
         if not self._ring:
+            if drain is not None:
+                # nothing pending validation: every parked row was already
+                # proven clean by an earlier flush — pure delivery
+                with obs.span("token_drain", rows=len(emis)):
+                    vals = hostsync.batched_get(drain, label="token_emit")
+                emis.deliver(vals)
             return None
         steps_, preds = zip(*self._ring)
-        with obs.span("deferred_flush", steps=len(self._ring)):
-            ok = hostsync.read_bool(jnp.all(jnp.stack(list(preds))),
-                                    label="deferred_flush")
+        drain_vals = None
+        if drain is not None:
+            with obs.span("deferred_flush", steps=len(self._ring),
+                          drain_rows=len(emis)):
+                vals = hostsync.batched_get(
+                    [jnp.all(jnp.stack(list(preds)))] + drain,
+                    label="token_emit")
+            ok = bool(np.all(vals[0]))
+            drain_vals = vals[1:]
+        else:
+            with obs.span("deferred_flush", steps=len(self._ring)):
+                ok = hostsync.read_bool(jnp.all(jnp.stack(list(preds))),
+                                        label="deferred_flush")
         if ok:
             self.validated_frontier = steps_[-1] + 1
             self._ring.clear()
+            if drain_vals is not None:
+                emis.deliver(drain_vals)
             return None
         vals = hostsync.batched_get(list(preds), label="deferred_ring")
         bad = [s for s, v in zip(steps_, vals) if not bool(np.all(v))]
@@ -1076,8 +1115,9 @@ class SedarEngine:
         # carry one bool per sequence slot, so a failed flush also reports
         # WHICH slots diverged and at which step each first went bad — the
         # per-request recovery rolls back only those slots
+        slot_first: Optional[Dict[int, int]] = None
         if any(np.ndim(v) for v in vals):
-            slot_first: Dict[int, int] = {}
+            slot_first = {}
             for s, v in zip(steps_, vals):
                 v = np.asarray(v)
                 if v.ndim and not v.all():
@@ -1085,6 +1125,10 @@ class SedarEngine:
                         slot_first.setdefault(int(i), s)
             detail["slots"] = sorted(slot_first)
             detail["slot_first_bad"] = slot_first
+        if emis is not None:
+            emis.truncate(slot_first, global_bad=bad[0])
+            if drain_vals is not None:
+                emis.deliver(drain_vals)
         return DetectionEvent(step=bad[0], boundary="deferred", effect="TDC",
                               detail=detail)
 

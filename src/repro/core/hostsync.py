@@ -21,14 +21,17 @@ runtime supports it) so a later `batched_get` only *waits* instead of
 serializing issue->wait per leaf; it performs no readback itself and is not
 counted.
 
-`count_transfers` counting is thread-local BY DESIGN CHOICE: background
+`count_transfers()` counting is thread-local BY DEFAULT: background
 checkpoint writers receive host arrays, so all counted calls happen on the
 driver thread — a scoped region counts only readbacks issued by the thread
-that opened it (tests/test_obs.py documents this). Readbacks issued from a
-*different* thread (e.g. a future detokenize-drain consumer) are invisible
-to the shim but NOT lost: when `repro.obs.enable_metrics()` is on, every
-`_note` also fans into the process-wide, lock-protected metrics registry
-via the `_metrics_note` hook, which aggregates across threads.
+that opened it (tests/test_obs.py documents this). For regions whose
+readbacks may come from another thread (the detokenize-drain consumer, a
+background restore), `count_transfers(cross_thread=True)` registers the
+stats object on a process-wide, lock-protected list that EVERY thread's
+`_note` walks — the scoped view then matches what the metrics registry
+sees. Independent of either mode, when `repro.obs.enable_metrics()` is on
+every `_note` also fans into the registry via the `_metrics_note` hook,
+which aggregates across threads.
 """
 from __future__ import annotations
 
@@ -62,26 +65,50 @@ class _ActiveStats(threading.local):
 
 _active = _ActiveStats()
 
+# Cross-thread counting regions (`count_transfers(cross_thread=True)`).
+# The unguarded truthiness test in `_note` is a benign race: registration
+# happens-before the region's readbacks on the registering thread, and the
+# lock serializes every mutation of both the list and the stats.
+_shared_lock = threading.Lock()
+_shared: List[TransferStats] = []
+
 # Process-wide metrics fan-in, installed by `repro.obs.enable_metrics()`.
 # None when metrics are off, so the disabled cost is one `is None` test.
 _metrics_note: Optional[Callable[[str, int], None]] = None
 
 
 @contextlib.contextmanager
-def count_transfers() -> Iterator[TransferStats]:
-    """Count every device->host readback issued inside the block (by the
-    calling thread — see the thread-local note in the module docstring)."""
+def count_transfers(cross_thread: bool = False) -> Iterator[TransferStats]:
+    """Count every device->host readback issued inside the block.
+
+    Default scope is the calling thread (see the module docstring);
+    `cross_thread=True` additionally counts readbacks issued by OTHER
+    threads while the region is open — e.g. the detokenize-drain consumer
+    — at the cost of a lock per counted call."""
     st = TransferStats()
-    _active.stack.append(st)
-    try:
-        yield st
-    finally:
-        _active.stack.remove(st)
+    if cross_thread:
+        with _shared_lock:
+            _shared.append(st)
+        try:
+            yield st
+        finally:
+            with _shared_lock:
+                _shared.remove(st)
+    else:
+        _active.stack.append(st)
+        try:
+            yield st
+        finally:
+            _active.stack.remove(st)
 
 
 def _note(label: str, items: int = 1) -> None:
     for st in _active.stack:
         st.note(label, items)
+    if _shared:
+        with _shared_lock:
+            for st in _shared:
+                st.note(label, items)
     if _metrics_note is not None:
         _metrics_note(label, items)
 

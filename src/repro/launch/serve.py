@@ -50,9 +50,7 @@ def _parse_prompt_mix(spec: str):
 
 def _continuous(args, cfg, ob=None) -> None:
     from repro.core.injection import InjectionSpec
-    from repro.runtime.scheduler import (latency_percentiles_ms,
-                                         synthetic_requests,
-                                         ttft_percentiles_ms)
+    from repro.runtime.scheduler import stream_stats_ms, synthetic_requests
 
     spec = None
     if args.fault_slot is not None:
@@ -112,16 +110,18 @@ def _continuous(args, cfg, ob=None) -> None:
     out, rep = srv.serve(
         params, reqs, slots=args.slots, validate_lag=args.validate_lag,
         queue_depth=args.queue_depth, autotune=tuner,
+        drain_cadence=args.drain_cadence,
         notify_reject=lambda r, e: print(
             f"[SEDAR] request {r.rid} REJECTED after {e.boundary} fault "
             f"(per-request safe stop)", flush=True))
-    p50, p99 = latency_percentiles_ms(out)
-    tt50, tt99 = ttft_percentiles_ms(out)
+    ms = stream_stats_ms(out)
     print(f"{args.arch}: {rep.tokens_emitted} tokens delivered over "
           f"{rep.steps} protected steps ({rep.tokens_per_s:.1f} tok/s, "
           f"goodput {rep.goodput_tokens_per_step:.2f} tok/step), "
-          f"p50/p99 inter-token {p50:.2f}/{p99:.2f} ms, "
-          f"p50/p99 TTFT {tt50:.2f}/{tt99:.2f} ms")
+          f"p50/p99 inter-token {ms['itl_p50_ms']:.2f}/"
+          f"{ms['itl_p99_ms']:.2f} ms, "
+          f"p50/p99 TTFT {ms['ttft_p50_ms']:.2f}/{ms['ttft_p99_ms']:.2f} ms, "
+          f"p50/p99 TTLT {ms['ttlt_p50_ms']:.2f}/{ms['ttlt_p99_ms']:.2f} ms")
     print(f"  completed={len(rep.completed)} rejected={rep.rejected} "
           f"detections={len(rep.detections)} retries={rep.retries} "
           f"rollbacks={rep.rollbacks} "
@@ -192,6 +192,11 @@ def main() -> None:
                          "queue sheds load (backpressure rejection)")
     ap.add_argument("--validate-lag", type=int, default=None,
                     help="deferred-validation window D (DESIGN.md §11/§13)")
+    ap.add_argument("--drain-cadence", type=int, default=None,
+                    help="parked decode ticks per token drain (DESIGN.md "
+                         "§18): default = the validate lag (one fused "
+                         "readback per flush); 1 = legacy per-tick "
+                         "emission; >lag accumulates across flushes")
     ap.add_argument("--backend", default="sequential",
                     choices=["none", "sequential", "fused", "abft",
                              "hybrid"])

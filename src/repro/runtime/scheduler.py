@@ -40,7 +40,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -276,3 +276,39 @@ def latency_percentiles_ms(requests: Iterable[Request]
     if not lat:
         return 0.0, 0.0
     return 1e3 * percentile(lat, 50), 1e3 * percentile(lat, 99)
+
+
+def ttlt_latencies(requests: Iterable[Request]) -> List[float]:
+    """Time-to-LAST-token per request (total turnaround a client waits for
+    the full stream): last emitted token's wall stamp minus arrival. Under
+    lag-aligned drain (DESIGN.md §18) whole windows land at once, so TTLT
+    — not the now-bursty inter-token gap — is the end-to-end latency that
+    drain cadence actually trades against throughput."""
+    out: List[float] = []
+    for r in requests:
+        if r.arrival_time is not None and r.token_times:
+            out.append(r.token_times[-1] - r.arrival_time)
+    return out
+
+
+def ttlt_percentiles_ms(requests: Iterable[Request]
+                        ) -> Tuple[float, float]:
+    """(p50, p99) time-to-last-token in milliseconds (0.0, 0.0 when no
+    request completed a token); nearest-rank via `obs.percentile`."""
+    lat = ttlt_latencies(requests)
+    if not lat:
+        return 0.0, 0.0
+    return 1e3 * percentile(lat, 50), 1e3 * percentile(lat, 99)
+
+
+def stream_stats_ms(requests: Iterable[Request]) -> Dict[str, float]:
+    """One bundle of client-visible streaming percentiles in ms: TTFT
+    (first token), ITL (inter-token gap) and TTLT (full turnaround) —
+    what bench_serve rows and the `--continuous` CLI summary print."""
+    reqs = list(requests)
+    ttft50, ttft99 = ttft_percentiles_ms(reqs)
+    itl50, itl99 = latency_percentiles_ms(reqs)
+    ttlt50, ttlt99 = ttlt_percentiles_ms(reqs)
+    return {"ttft_p50_ms": ttft50, "ttft_p99_ms": ttft99,
+            "itl_p50_ms": itl50, "itl_p99_ms": itl99,
+            "ttlt_p50_ms": ttlt50, "ttlt_p99_ms": ttlt99}

@@ -25,10 +25,14 @@ levels re-scope from "the run" to "the request":
   * exhausted slot budget    -> per-REQUEST rejection with notification
     (L1 safe-stop scoped to one sequence; the server keeps serving).
 
-The fault-free hot path keeps the §11 zero-sync property: with
-`validate_lag >= D` the only per-step device->host transfer is the token
-emission itself (asserted via `hostsync.count_transfers`), and Tier-0
-snapshots/rollbacks never touch disk (`checkpoint.count_disk_reads`).
+The fault-free hot path keeps the §11 zero-sync property — and extends it
+through emission (DESIGN.md §18): with `validate_lag >= D` a decode tick
+performs NO device->host transfer at all. Tokens park in the engine's
+device-resident TokenRing and leave in ONE `batched_get` per flush window,
+fused with the combined commit predicate (`token_emit` syncs are O(1/D),
+asserted via `hostsync.count_transfers`); a detokenize consumer thread
+streams them while the next window launches. Tier-0 snapshots/rollbacks
+never touch disk (`checkpoint.count_disk_reads`).
 
 Replica-free serving: the abft/hybrid backends guard every decode step's
 logits block with a full-checksum ABFT pass (`_logits_checksum_guard`):
@@ -369,9 +373,12 @@ class SedarServer:
             cand = {"cache": cache, "tok": tok,
                     "pos": jnp.where(act, state["pos"] + 1, state["pos"]),
                     "active": act, "t": t + 1}
+            # aux = the emission pair: the engine's TokenRing parks these
+            # refs per tick (DESIGN.md §18) — outputs the step computes
+            # anyway, so parking adds no launch and no readback
             if report is not None:
-                return cand, fp, tok, report
-            return cand, fp, tok
+                return cand, fp, (tok, cand["pos"]), report
+            return cand, fp, (tok, cand["pos"])
 
         return step
 
@@ -442,9 +449,14 @@ class SedarServer:
         every RUNNING slot's {cache, tok, pos} image enters its keyed
         device ring right after a clean flush — pure `jnp.copy`, zero disk
         reads, zero host syncs (the zero-sync property extends through
-        per-request checkpointing, asserted by tests)."""
-        for slot, _req in sched.running_items():
-            ring.save(slot, version, self._slot_slice(eng, dual, slot))
+        per-request checkpointing, asserted by tests). One `save_many`
+        batch per flush: the snapshot versions land exactly on the drain
+        edges the emission ring delivers at, so a rollback target never
+        predates a delivered token (DESIGN.md §18)."""
+        slices = {slot: self._slot_slice(eng, dual, slot)
+                  for slot, _req in sched.running_items()}
+        if slices:
+            ring.save_many(version, slices)
 
     def _admit_slot(self, eng, dual, params, slot: int, req, t: int,
                     ring, ring_on: bool, max_len: int):
@@ -565,6 +577,13 @@ class SedarServer:
         return dual
 
     def _finish(self, sched, slot: int, rep: BatchServeReport) -> None:
+        """Release a drained slot exactly once: release/reactivate cleared
+        the slot (or flipped its status) before any second path — the final
+        partial flush, `_release_drained` and the quiescence sweep — can
+        reach it, so a no-longer-draining occupant is simply skipped."""
+        req = sched.request(slot)
+        if req is None or req.status != "draining":
+            return
         req = sched.release(slot)
         rep.completed.append(req.rid)
 
@@ -574,12 +593,22 @@ class SedarServer:
                 self._finish(sched, slot, rep)
 
     def _handle_event(self, eng, recovery, sched, ring, event, dual,
-                      rep: BatchServeReport, notify=None):
+                      rep: BatchServeReport, notify=None, expected=None,
+                      consumer=None):
         """Per-request recovery: route the event through the engine (slot
         retry / ring restore), then apply the request-level consequences —
         token-stream truncation for rolled-back slots, eviction +
         notification for rejected requests, early release for draining
-        slots a failed flush proved clean."""
+        slots a failed flush proved clean.
+
+        Drain mode (`expected` is the host-side token-count map): the
+        failed flush already retracted the faulty slots' un-drained rows
+        from the emission ring, so there is no stream to truncate here —
+        the restore just resets the slot's optimistic count to the restored
+        position. The consumer is quiesced FIRST so rejection callbacks
+        (and any reader of request streams) see the delivered prefix."""
+        if consumer is not None:
+            consumer.quiesce()
         try:
             dual = eng.on_detection(event, dual)
         except SedarSafeStop:
@@ -596,6 +625,8 @@ class SedarServer:
                 if notify is not None:
                     notify(req, event)
             ring.evict(slot)
+            if expected is not None:
+                expected.pop(slot, None)
             dual = self._set_active(eng, dual, slot, False)
         for slot, info in recovery.take_restores().items():
             req = sched.request(slot)
@@ -603,7 +634,9 @@ class SedarServer:
                 continue
             rep.rollbacks += 1
             keep = max(info["pos"] - req.pos0 + 1, 1)
-            if len(req.tokens) > keep:
+            if expected is not None:
+                expected[slot] = keep
+            elif len(req.tokens) > keep:
                 cut = len(req.tokens) - keep
                 req.truncated_tokens += cut
                 rep.truncated_tokens += cut
@@ -626,20 +659,30 @@ class SedarServer:
               max_len: Optional[int] = None, validate_lag: Optional[int] = None,
               queue_depth: int = 0, max_steps: Optional[int] = None,
               notify_reject=None, packed_prefill: bool = True,
-              autotune=None):
+              autotune=None, drain_cadence: Optional[int] = None,
+              on_token=None, consumer_depth: int = 8):
         """Continuous-batching protected decode over an open-loop request
         stream. Mutates and returns the `Request` objects (lifecycle fields
         are reset first, so a template list can be replayed for fault-free
         twins) plus a `BatchServeReport`.
 
         `validate_lag` > 1 arms the deferred window: the fault-free decode
-        step performs NO host sync beyond token emission, detection lags by
-        <= D steps, and a detected fault rolls back only the affected slots
-        from the Tier-0 ring. `queue_depth` bounds the admission queue
-        (backpressure -> immediate rejection). `autotune` (a
-        policy.Autotuner with mode="serve") live-retunes the lag at clean
-        flush boundaries; the engine's reset() restores the configured lag
-        for the next serve() call."""
+        step performs NO host sync (detection lags by <= D steps, and a
+        detected fault rolls back only the affected slots from the Tier-0
+        ring) — token emission itself is deferred to the flush cadence
+        through the engine's TokenRing and streamed from a detokenize
+        consumer thread (DESIGN.md §18). `drain_cadence` sets how many
+        parked ticks a drain waits for (None -> the validate lag, i.e.
+        every flush; 1 -> the legacy per-tick emission readback, kept as
+        the bench baseline); `on_token(req, tok, index)` streams each
+        delivered token (called from the consumer thread in drain mode);
+        `consumer_depth` bounds the detokenize queue (backpressure).
+        `queue_depth` bounds the admission queue (backpressure ->
+        immediate rejection). `autotune` (a policy.Autotuner with
+        mode="serve") live-retunes the lag at clean flush boundaries; the
+        engine's reset() restores the configured lag for the next serve()
+        call."""
+        from repro.runtime.emission import DetokenizeConsumer, TokenRing
         from repro.runtime.prefill import group_packs
         from repro.runtime.scheduler import (DRAINING, RUNNING, RequestQueue,
                                              SlotScheduler)
@@ -668,6 +711,23 @@ class SedarServer:
         recovery.merge = lambda dual, slot, sl: self._write_slot(
             eng, dual, slot, sl, active=True)
         ring_on = eng.validate_lag > 1   # clamped lag => pre-commit gating
+        # lag-aligned batched drain (DESIGN.md §18): tokens leave the
+        # device through flush_deferred's fused readback and reach the
+        # request streams via the consumer thread. Per-tick emission
+        # survives as `drain_cadence=1` (and as the only mode at lag 1,
+        # where every commit is already a sync point).
+        drain_on = ring_on and (drain_cadence is None
+                                or int(drain_cadence) > 1)
+        tokring = consumer = None
+        expected: Dict[int, int] = {}   # slot -> optimistic token count
+        if drain_on:
+            consumer = DetokenizeConsumer(on_token=on_token,
+                                          max_queue=consumer_depth).start()
+            tokring = TokenRing(
+                cadence=(int(drain_cadence) if drain_cadence
+                         else eng.validate_lag),
+                sink=consumer.submit)
+            eng.emission_ring = tokring
 
         sched = SlotScheduler(slots, RequestQueue(queue_depth))
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
@@ -715,6 +775,10 @@ class SedarServer:
                     dual = self._admit_slot(eng, dual, params, slot, req, t,
                                             ring, ring_on, max_len)
             for slot, req in pairs:
+                if req.status == RUNNING and drain_on:
+                    # the prefill token was validated and delivered at
+                    # admission; the optimistic count starts there
+                    expected[slot] = 1
                 if (req.status == RUNNING
                         and len(req.tokens) >= req.max_new_tokens):
                     # budget of 1: the prefill token already fills it —
@@ -727,9 +791,11 @@ class SedarServer:
                 if sched.draining_items():
                     ev = eng.flush_deferred()
                     if ev is not None:
-                        dual = self._handle_event(eng, recovery, sched, ring,
-                                                  ev, dual, rep,
-                                                  notify_reject)
+                        dual = self._handle_event(
+                            eng, recovery, sched, ring, ev, dual, rep,
+                            notify_reject,
+                            expected=expected if drain_on else None,
+                            consumer=consumer)
                     self._release_drained(eng, sched, rep)
                     # quiescence: no runners, no parked predicates — the
                     # remaining drainers were never proven bad (their
@@ -752,59 +818,110 @@ class SedarServer:
                     t += 1
                     continue
                 break
+            if drain_on:
+                # owner snapshot for the rows this tick will park: the
+                # ring copies it, so a later admission reusing the slot
+                # cannot reroute this window's tokens
+                tokring.owners = dict(sched.running_items())
             with obs.span("decode_tick", step=t):
                 outcome = eng.run_protected_step(dual, params, t)
             dual = outcome.dual
             rep.steps += 1
+            if drain_on:
+                # host-side optimistic accounting — no readback: every
+                # running slot's device position advanced by one (a frozen
+                # fused slot over-counts until its flush event resets the
+                # count from the restored position)
+                for slot, _req in sched.running_items():
+                    expected[slot] = expected.get(slot, 1) + 1
             if outcome.event is not None:
-                dual = self._handle_event(eng, recovery, sched, ring,
-                                          outcome.event, dual, rep,
-                                          notify_reject)
+                dual = self._handle_event(
+                    eng, recovery, sched, ring, outcome.event, dual, rep,
+                    notify_reject, expected=expected if drain_on else None,
+                    consumer=consumer)
             elif ring_on and not eng.pending_validation:
                 # clean flush boundary: cut the Tier-0 per-slot snapshots
                 self._snapshot_slots(eng, dual, sched, ring, version=t + 1)
             if autotune is not None:
                 autotune.maybe_tune(eng, t + 1)
-            # token emission — the ONE per-step readback of the hot path:
-            # tok + pos fetched in a single transfer batch; per-slot
-            # position deltas drive emission, so partial commits (faulty
-            # slot frozen) and rollbacks (position regressed) need no
-            # special-casing here
-            toks, poss = hostsync.batched_get(
-                [eng.executor.peek(dual, "tok"),
-                 eng.executor.peek(dual, "pos")], label="token_emit")
-            now_wall = time.time()
-            for slot, req in sched.running_items():
-                target = int(poss[slot]) - req.pos0 + 1
-                if target == len(req.tokens) + 1:
-                    req.tokens.append(int(toks[slot, 0]))
-                    req.token_times.append(now_wall)
-                    obs.note_tokens(1)
-                if len(req.tokens) >= req.max_new_tokens:
-                    sched.drain(slot, finish_step=t + 1)
-                    dual = self._set_active(eng, dual, slot, False)
-                    if eng.validate_lag == 1:
-                        # immediate mode: every emitted token passed the
-                        # commit gate (emission follows committed position
-                        # deltas), so the stream is already validated even
-                        # if ANOTHER slot's event kept the global frontier
-                        # behind — release the slot now
-                        self._finish(sched, slot, rep)
-            self._release_drained(eng, sched, rep)
+                if drain_on and eng.validate_lag == 1:
+                    # the tuner left deferred mode (reconfig applies only
+                    # at a clean boundary, so the predicate ring is empty):
+                    # deliver everything parked and drop back to per-tick
+                    # emission — the lag-1 path never parks
+                    eng.flush_deferred(final=True)
+                    consumer.quiesce()
+                    eng.emission_ring = None
+                    drain_on = False
+            if drain_on:
+                # flush-edge semantics: budget decisions ride the host
+                # count, tokens surface through the consumer at the drain
+                # cadence, and drained slots release when a flush moved
+                # the validated frontier past their finish step
+                for slot, req in sched.running_items():
+                    if expected.get(slot, 1) >= req.max_new_tokens:
+                        sched.drain(slot, finish_step=t + 1)
+                        dual = self._set_active(eng, dual, slot, False)
+                if not eng.pending_validation:
+                    self._release_drained(eng, sched, rep)
+            else:
+                # per-tick emission (lag 1, or drain_cadence=1 baseline):
+                # tok + pos fetched in a single transfer batch; per-slot
+                # position deltas drive emission, so partial commits
+                # (faulty slot frozen) and rollbacks (position regressed)
+                # need no special-casing here
+                toks, poss = hostsync.batched_get(
+                    [eng.executor.peek(dual, "tok"),
+                     eng.executor.peek(dual, "pos")], label="token_emit")
+                now_wall = time.time()
+                for slot, req in sched.running_items():
+                    target = int(poss[slot]) - req.pos0 + 1
+                    if target == len(req.tokens) + 1:
+                        req.tokens.append(int(toks[slot, 0]))
+                        req.token_times.append(now_wall)
+                        obs.note_tokens(1)
+                        if on_token is not None:
+                            on_token(req, req.tokens[-1],
+                                     len(req.tokens) - 1)
+                    if len(req.tokens) >= req.max_new_tokens:
+                        sched.drain(slot, finish_step=t + 1)
+                        dual = self._set_active(eng, dual, slot, False)
+                        if eng.validate_lag == 1:
+                            # immediate mode: every emitted token passed
+                            # the commit gate (emission follows committed
+                            # position deltas), so the stream is already
+                            # validated even if ANOTHER slot's event kept
+                            # the global frontier behind — release now
+                            self._finish(sched, slot, rep)
+                self._release_drained(eng, sched, rep)
             t += 1
 
-        ev = eng.flush_deferred()
+        # final flush: validates (and in drain mode DRAINS) the partial
+        # window left when the loop exits — `final=True` forces the drain
+        # below the cadence so no token stays parked past the run
+        ev = eng.flush_deferred(final=True)
         if ev is not None:
-            dual = self._handle_event(eng, recovery, sched, ring, ev, dual,
-                                      rep, notify_reject)
+            dual = self._handle_event(
+                eng, recovery, sched, ring, ev, dual, rep, notify_reject,
+                expected=expected if drain_on else None, consumer=consumer)
         self._release_drained(eng, sched, rep)
         # quiescence: drainers whose evidence was consumed by an event they
         # were not implicated in (ring cleared, frontier regressed) have no
-        # pending predicates left and were never proven bad — release
+        # pending predicates left and were never proven bad — release.
+        # `_finish` skips slots already released by the final flush's
+        # delivery path, so a drainer finishing inside the final partial
+        # window releases exactly once (no duplicate, none stranded).
         if not eng.pending_validation:
             for slot, req in list(sched.draining_items()):
                 if req.status == DRAINING:
                     self._finish(sched, slot, rep)
+        if consumer is not None:
+            consumer.quiesce()
+            consumer.close()
+            eng.emission_ring = None
+            # ring retraction replaced driver-side truncation: aggregate
+            # the per-request counts the consumer accumulated
+            rep.truncated_tokens = sum(r.truncated_tokens for r in requests)
 
         rep.detections = prefill_events + list(eng.detections)
         rep.retries = sum(1 for r in eng.recoveries if r["kind"] == "retry")

@@ -20,6 +20,13 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Initialize repro.core before any test module can import repro.checkpoint
+# first: checkpoint.tiers -> obs.estimator -> repro.core -> recovery ->
+# checkpoint.tiers is a cycle that only resolves when repro.core is already
+# in sys.modules (running a single checkpoint-first test file used to die
+# on a partially-initialized-module ImportError).
+import repro.core  # noqa: E402,F401
+
 
 def _install_hypothesis_shim() -> None:
     try:

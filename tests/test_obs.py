@@ -165,6 +165,34 @@ def test_scheduler_percentiles_use_shared_helper():
     assert ttft_percentiles_ms([]) == (0.0, 0.0)
 
 
+def test_scheduler_ttlt_and_stream_stats():
+    from repro.runtime.scheduler import Request, stream_stats_ms, \
+        ttlt_latencies, ttlt_percentiles_ms
+    reqs = []
+    for rid in range(4):
+        r = Request(rid=rid, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+        r.arrival_time = 0.0
+        r.token_times = [0.010 * (rid + 1), 0.010 * (rid + 1) + 0.005]
+        reqs.append(r)
+    # TTLT = last token stamp - arrival, one sample per emitting request
+    assert ttlt_latencies(reqs) == pytest.approx(
+        [0.015, 0.025, 0.035, 0.045])
+    tl50, tl99 = ttlt_percentiles_ms(reqs)
+    lats = [r.token_times[-1] for r in reqs]
+    assert tl50 == pytest.approx(1e3 * percentile(lats, 50))
+    assert tl99 == pytest.approx(1e3 * percentile(lats, 99))
+    assert ttlt_percentiles_ms([]) == (0.0, 0.0)
+    # never-emitted requests are excluded, not zero samples
+    ghost = Request(rid=9, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+    ghost.arrival_time = 0.0
+    assert len(ttlt_latencies(reqs + [ghost])) == 4
+    stats = stream_stats_ms(reqs)
+    assert set(stats) == {"ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms",
+                          "itl_p99_ms", "ttlt_p50_ms", "ttlt_p99_ms"}
+    assert stats["ttlt_p50_ms"] == tl50
+    assert stats["itl_p50_ms"] == pytest.approx(5.0)
+
+
 # ---------------------------------------------------------------------------
 # legacy shim absorption
 # ---------------------------------------------------------------------------
@@ -221,6 +249,52 @@ def test_transfer_stats_thread_local_vs_registry():
     assert st.by_label == {}
     assert obs.metrics.get("hostsync_transfers_total",
                            label="worker_read") == 1
+
+
+def test_transfer_stats_cross_thread_region():
+    """`count_transfers(cross_thread=True)` closes the thread-local blind
+    spot: the scoped region counts readbacks issued by OTHER threads (the
+    detokenize-drain consumer) while it is open — matching the registry —
+    without changing the default thread-local contract."""
+    done = threading.Event()
+
+    def worker():
+        hostsync.read_scalar(jnp.asarray(2.0), label="drain_read")
+        hostsync.batched_get([jnp.zeros(2), jnp.zeros(3)],
+                             label="drain_read")
+        done.set()
+
+    with hostsync.count_transfers(cross_thread=True) as xt, \
+            hostsync.count_transfers() as local:
+        hostsync.read_scalar(jnp.asarray(1.0), label="main_read")
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert done.is_set()
+    # cross-thread region sees BOTH threads' readbacks
+    assert xt.by_label == {"main_read": 1, "drain_read": 3}
+    assert xt.batches == 3 and xt.transfers == 4
+    # the plain region on the same thread stays thread-local
+    assert local.by_label == {"main_read": 1}
+    # deregistration: readbacks after the region close are not counted
+    hostsync.read_scalar(jnp.asarray(3.0), label="late_read")
+    assert "late_read" not in xt.by_label
+
+
+def test_transfer_stats_cross_thread_nests_with_registry():
+    """All three views are independent: thread-local region, cross-thread
+    region, and the metrics registry each see their own scope."""
+    obs.enable_metrics()
+
+    def worker():
+        hostsync.read_scalar(jnp.asarray(1.0), label="w")
+
+    with hostsync.count_transfers(cross_thread=True) as xt:
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert xt.by_label == {"w": 1}
+    assert obs.metrics.get("hostsync_transfers_total", label="w") == 1
 
 
 # ---------------------------------------------------------------------------
@@ -596,6 +670,9 @@ def test_compare_direction_heuristics():
     assert direction("adaptive_wall_s") == -1
     assert direction("mttr_s") == -1
     assert direction("mystery_quantity") is None
+    # PR-10 drain metrics: gated in the directions they must move
+    assert direction("continuous_drain_tokens_per_s") == +1
+    assert direction("emission_syncs_per_token") == -1
 
 
 def test_compare_flags_directional_regressions():

@@ -257,9 +257,11 @@ def test_single_token_budget_delivers_exactly_one(setup):
 
 def test_fault_free_deferred_path_is_sync_and_disk_free(setup):
     """With validate_lag >= 8 the fault-free decode path performs NO host
-    syncs beyond per-step token emission (+ the amortized once-per-window
-    flush and per-admission prefill read) and NO disk reads — asserted via
-    the hostsync and checkpoint counting hooks, Tier-0 snapshots included."""
+    syncs AT ALL between flushes: tokens park in the emission ring
+    (DESIGN.md §18) and leave fused with the combined predicate in ONE
+    3-item `token_emit` batch per window (+ the per-PACK prefill read),
+    with NO disk reads — asserted via the hostsync and checkpoint counting
+    hooks, Tier-0 snapshots included."""
     rc, params, _ = setup
     srv = SedarServer(rc, dual=True)
     _serve(srv, params, validate_lag=8)            # warm the jit caches
@@ -268,14 +270,19 @@ def test_fault_free_deferred_path_is_sync_and_disk_free(setup):
     assert not rep.detections
     allowed = {"token_emit", "prefill_emit", "deferred_flush"}
     assert set(st.by_label) <= allowed, st.by_label
-    # token emission is ONE transfer batch (tok+pos) per protected step
-    assert st.by_label["token_emit"] == 2 * rep.steps
+    # emission is O(1/D): at most pred+toks+poss per flush window — NOT
+    # the 2*steps items of the retired per-tick readback
+    windows = rep.steps // 8 + 2
+    assert st.by_label["token_emit"] <= 3 * windows, st.by_label
+    assert st.by_label["token_emit"] < 2 * rep.steps
+    # every token still reaches its stream through the drain path
+    assert rep.tokens_emitted == sum(len(r.tokens) for r in out.values())
     # admission readback is ONE batch (tok+verdict) per PACK launch, not
     # per request — packing amortizes the host sync too (DESIGN.md §14)
     assert rep.prefill_packs > 0
     assert st.by_label["prefill_emit"] == 2 * rep.prefill_packs
     assert st.by_label["prefill_emit"] <= 2 * len(out)
-    assert st.by_label["deferred_flush"] <= rep.steps // 8 + 2
+    assert st.by_label.get("deferred_flush", 0) <= windows
     assert dr.reads == 0
 
 

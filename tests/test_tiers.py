@@ -599,3 +599,25 @@ def test_bounded_chain_gc_only_runs_on_durable_saves(tmp_workdir,
     # disk saves at 3 and 6 -> exactly two GC passes, not one per step
     assert len(calls) == 2
     assert tiers.disk.steps() == [3, 6]
+
+
+def test_slot_ring_save_many_and_newest_version():
+    """SlotRing drain-edge contract (DESIGN.md §18): save_many records a
+    shared version for every slice, newest_version reads the newest
+    fully-validated point without paying restore()'s copy, and eviction
+    drops a slot's history completely."""
+    from repro.checkpoint.tiers import SlotRing
+    ring = SlotRing(slots_per_key=2)
+    assert ring.newest_version(0) is None
+    ring.save_many(4, {0: {"pos": jnp.asarray(4)},
+                       1: {"pos": jnp.asarray(4)}})
+    ring.save_many(8, {0: {"pos": jnp.asarray(8)}})
+    assert ring.newest_version(0) == 8 and ring.newest_version(1) == 4
+    assert ring.saves == 3
+    v, sl = ring.restore(0)
+    assert v == 8 and int(sl["pos"]) == 8
+    # bounded ring: a third version for slot 0 evicts its oldest
+    ring.save_many(12, {0: {"pos": jnp.asarray(12)}})
+    assert ring.versions(0) == [8, 12]
+    ring.evict(0)
+    assert ring.newest_version(0) is None and ring.newest_version(1) == 4
